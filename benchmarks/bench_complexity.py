@@ -1,0 +1,42 @@
+"""Paper Table 1: empirical validation of the complexity claims.
+
+Standard binary CV is O(KNP² + KP³): doubling P at fixed (N, K) should
+scale time ~P²..P³. The analytical approach is O(KN³) after the hat
+matrix: time should be ~flat in P (the O(N²P) Gram is the only P term).
+We fit the log-log slope of time vs P for both and report it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastcv, folds as foldlib, lda
+from repro.data import synthetic
+from benchmarks.common import row, timeit
+
+N, K = 128, 8
+PS = (64, 128, 256, 512, 1024)
+
+
+def run(fast: bool = False):
+    ps = PS[:3] if fast else PS
+    f = foldlib.kfold(N, K, seed=0)
+    t_std, t_ana = [], []
+    for p in ps:
+        x, yc = synthetic.make_classification(jax.random.PRNGKey(p), N, p)
+        y = jnp.where(yc == 0, -1.0, 1.0)
+        t_std.append(timeit(lambda: lda.standard_cv_binary(x, y, f, lam=1.0),
+                            repeats=2))
+        t_ana.append(timeit(lambda: fastcv.binary_cv(x, y, f, lam=1.0),
+                            repeats=2))
+    lp = np.log(np.asarray(ps, float))
+    slope_std = float(np.polyfit(lp, np.log(t_std), 1)[0])
+    slope_ana = float(np.polyfit(lp, np.log(t_ana), 1)[0])
+    return [
+        row("complexity/standard_scaling_vs_P", t_std[-1],
+            f"loglog_slope={slope_std:.2f} (theory 2..3, O(KNP^2+KP^3))"),
+        row("complexity/analytical_scaling_vs_P", t_ana[-1],
+            f"loglog_slope={slope_ana:.2f} (theory <=1, O(N^2 P) setup only)"),
+    ]

@@ -1,0 +1,50 @@
+"""Paper Fig. 3a (left): binary LDA cross-validation relative efficiency.
+
+Sweeps features P (log steps), samples N, and folds K (incl. LOO), timing
+the standard approach (retrain per fold) against the analytical approach.
+Reported value: relative efficiency = log10(t_standard / t_analytical).
+Sizes are scaled to the 1-core CPU container (DESIGN.md §8); the paper's
+qualitative claims to verify: efficiency grows with P and K, shrinks
+with N, and the approaches are at parity when P ≈ N/K.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastcv, folds as foldlib, lda
+from repro.data import synthetic
+from benchmarks.common import relative_efficiency, row, timeit
+
+FEATURES = (16, 64, 256, 1024)
+CONFIGS = (
+    # (N, folds or "loo")
+    (64, 5),
+    (64, "loo"),
+    (256, 5),
+    (256, 10),
+)
+
+
+def run(fast: bool = False):
+    rows = []
+    feats = FEATURES[:3] if fast else FEATURES
+    for n, k in CONFIGS[:2] if fast else CONFIGS:
+        f = foldlib.loo(n) if k == "loo" else foldlib.kfold(n, k, seed=0)
+        kname = "loo" if k == "loo" else f"k{k}"
+        for p in feats:
+            x, yc = synthetic.make_classification(jax.random.PRNGKey(p), n, p)
+            y = jnp.where(yc == 0, -1.0, 1.0)
+            lam = 1.0
+
+            t_std = timeit(lambda: lda.standard_cv_binary(x, y, f, lam=lam),
+                           repeats=2)
+            t_ana = timeit(lambda: fastcv.binary_cv(x, y, f, lam=lam),
+                           repeats=2)
+            rel = relative_efficiency(t_std, t_ana)
+            rows.append(row(
+                f"cv_binary/n{n}_{kname}_p{p}", t_ana,
+                f"rel_eff={rel:.2f} t_std={t_std*1e3:.1f}ms "
+                f"t_ana={t_ana*1e3:.1f}ms"))
+    return rows

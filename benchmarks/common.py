@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, relative efficiency."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, repeats: int = 3, **kw) -> float:
+    """Median wall seconds with block_until_ready (paper used tic/toc)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def relative_efficiency(t_standard: float, t_analytical: float) -> float:
+    """log10(time_standard / time_analytical) — paper §2.12."""
+    return float(np.log10(t_standard / t_analytical))
+
+
+def row(name: str, seconds: float, derived: str = "") -> dict:
+    return {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+
+
+def print_rows(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a header comment per
+section). ``--fast`` runs a reduced sweep (CI-sized).
+
+  bench_complexity  — paper Table 1 (empirical scaling exponents)
+  bench_cv          — paper Fig. 3a left  (binary CV rel. efficiency)
+  bench_perm        — paper Fig. 3a right (binary permutations)
+  bench_multiclass  — paper Fig. 3b       (multi-class CV + permutations)
+  bench_eeg         — paper Fig. 4        (EEG/MEG-style permutation run)
+  bench_kernels     — CV hot-spot kernels (XLA path GFLOP/s)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from benchmarks import (bench_complexity, bench_cv, bench_eeg,
+                        bench_kernels, bench_multiclass, bench_perm)
+from benchmarks.common import print_rows
+
+MODULES = [
+    ("complexity(Table1)", bench_complexity),
+    ("cv(Fig3a-left)", bench_cv),
+    ("perm(Fig3a-right)", bench_perm),
+    ("multiclass(Fig3b)", bench_multiclass),
+    ("eeg(Fig4)", bench_eeg),
+    ("kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced CI sweep")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter on section names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        rows = mod.run(fast=args.fast)
+        print_rows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""EEG/MEG-style permutation testing (paper §2.13 / Fig. 4 workflow).
+
+Simulates a multi-subject 380-channel dataset, then runs per-subject
+permutation tests with 10-fold CV — binary (faces vs scrambled) on
+windowed features (P = 3800) and 3-class LDA (P = 1900) — using the
+analytical engine (Algorithm 1 & 2).
+
+Run:  PYTHONPATH=src python examples/eeg_permutation.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import folds, permutation
+from repro.data import eeg
+
+N_SUBJECTS = 3
+N_TRIALS = 192
+N_PERM = 100
+
+for subj in range(N_SUBJECTS):
+    key = jax.random.PRNGKey(subj)
+    f = folds.kfold(N_TRIALS, 10, seed=subj)
+
+    ds2 = eeg.simulate_subject(key, n_trials=N_TRIALS, num_classes=2)
+    x2 = eeg.windowed_features(ds2, 100.0).astype(jnp.float64)   # P = 3800
+    y2 = jnp.where(ds2.y == 0, -1.0, 1.0)
+    t0 = time.time()
+    res2 = permutation.analytical_permutation_binary(
+        x2, y2, f, lam=1.0, n_perm=N_PERM, key=key, chunk=50)
+    t2 = time.time() - t0
+
+    ds3 = eeg.simulate_subject(jax.random.fold_in(key, 1),
+                               n_trials=N_TRIALS, num_classes=3)
+    x3 = eeg.windowed_features(ds3, 200.0).astype(jnp.float64)   # P = 1900
+    t0 = time.time()
+    res3 = permutation.analytical_permutation_multiclass(
+        x3, ds3.y, f, num_classes=3, lam=1.0, n_perm=N_PERM, key=key,
+        chunk=10)
+    t3 = time.time() - t0
+
+    print(f"subject {subj}:")
+    print(f"  binary  P=3800: acc={float(res2.observed):.3f} "
+          f"p={float(res2.p):.3f}  ({N_PERM} perms in {t2:.1f}s)")
+    print(f"  3-class P=1900: acc={float(res3.observed):.3f} "
+          f"p={float(res3.p):.3f}  ({N_PERM} perms in {t3:.1f}s)")

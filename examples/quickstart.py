@@ -1,0 +1,30 @@
+"""Quickstart: exact analytical cross-validation in five lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import fastcv, folds, lda, metrics
+from repro.data import synthetic
+
+# a P >> N problem — the paper's home turf
+x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n=100, p=2000,
+                                      class_sep=2.5)
+y = jnp.where(yc == 0, -1.0, 1.0)
+f = folds.kfold(100, k=10, seed=0)
+
+# analytical approach: ONE fit, exact CV decision values for every fold
+dvals, y_te = fastcv.binary_cv(x, y, f, lam=1.0, adjust_bias=False)
+print(f"analytical  acc={float(metrics.binary_accuracy(dvals, y_te)):.3f} "
+      f"auc={float(metrics.auc(dvals.ravel(), y_te.ravel())):.3f}")
+
+# standard approach (retrain 10x) — identical predictions, far more work
+dv_std, _ = lda.standard_cv_binary(x, y, f, lam=1.0, form="regression")
+import numpy as np
+np.testing.assert_allclose(np.asarray(dvals), np.asarray(dv_std), rtol=1e-7,
+                           atol=1e-8)
+print("standard (retrained) decision values match to machine precision ✓")

@@ -1,0 +1,14 @@
+# The paper's primary contribution: analytical cross-validation and
+# permutation testing for least-squares models and multi-class LDA.
+from repro.core import (  # noqa: F401
+    fastcv,
+    folds,
+    lda,
+    metrics,
+    multiclass,
+    multidim,
+    permutation,
+    regression,
+    shrinkage,
+    tuning,
+)

@@ -1,0 +1,149 @@
+"""Distributed analytical CV: shard_map building blocks (DESIGN.md §5).
+
+The paper's workload decomposes onto the mesh as:
+
+  * feature axis ("model"): the O(N²P) Gram reduction — each shard computes
+    a partial X_c X_cᵀ over its feature slice, one ``psum`` combines them.
+    This is the only cross-"model" collective in the whole CV pipeline.
+  * permutation axis ("data"): Algorithm 1/2's T permutations are
+    embarrassingly parallel given H — each shard evaluates its slice
+    against the replicated (N×N) hat matrix and fold factors.
+  * problem axis ("pod"): searchlights / time points / RSA pairs — fully
+    independent CV problems, zero cross-pod traffic after data layout.
+
+N is bounded by the paper's own premise (P ≫ N, N ≤ ~10⁴), so H and the
+fold factors replicate comfortably; everything that scales (features,
+permutations, problems) is sharded.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fastcv
+from repro.core.folds import Folds
+
+__all__ = [
+    "distributed_gram",
+    "distributed_hat_matrix",
+    "distributed_permutation_binary",
+    "searchlight_cv",
+]
+
+
+def distributed_gram(x: jax.Array, mesh: Mesh, *, center: bool = True,
+                     feature_axis: str = "model") -> jax.Array:
+    """G_c = X_c X_cᵀ with X sharded (replicated_N, features/"model").
+
+    Local partial Gram per feature shard + one psum over the feature axis.
+    """
+    if center:
+        x = x - jnp.mean(x, axis=0, keepdims=True)
+
+    def local_gram(x_shard):
+        g = x_shard @ x_shard.T
+        return jax.lax.psum(g, feature_axis)
+
+    other = tuple(a for a in mesh.axis_names if a != feature_axis)
+    fn = jax.shard_map(
+        local_gram, mesh=mesh,
+        in_specs=P(None, feature_axis),
+        out_specs=P(None, None))
+    return fn(x)
+
+
+def distributed_hat_matrix(x: jax.Array, lam: float, mesh: Mesh,
+                           feature_axis: str = "model") -> jax.Array:
+    """Dual hat matrix from the feature-sharded Gram (λ > 0)."""
+    g = distributed_gram(x, mesh, center=True, feature_axis=feature_axis)
+    return fastcv.hat_matrix_dual(x, lam, gram=g)
+
+
+def distributed_permutation_binary(
+    x: jax.Array, y: jax.Array, folds: Folds, lam: float, n_perm: int,
+    key: jax.Array, mesh: Mesh, *, metric: str = "accuracy",
+    perm_axes: tuple = ("data",), feature_axis: str = "model",
+    adjust_bias: bool = True,
+):
+    """Algorithm 1 at scale: Gram sharded over features, permutations over
+    the DP axes. Returns PermutationResult-compatible (observed, null, p).
+
+    n_perm must divide by the product of perm-axis sizes (pad up if not).
+    """
+    from repro.core import permutation as perm_lib
+
+    h = distributed_hat_matrix(x, lam, mesh, feature_axis)
+    plan = _plan_from_h(h, folds, adjust_bias)
+    y = y.astype(h.dtype)
+
+    dv_obs = fastcv.binary_dvals(plan, y, adjust_bias=adjust_bias)
+    observed = perm_lib._fold_metric_binary(dv_obs, y[plan.te_idx], metric)
+
+    n_shards = 1
+    for a in perm_axes:
+        n_shards *= mesh.shape[a]
+    t_pad = -(-n_perm // n_shards) * n_shards
+    perms = perm_lib.permutation_indices(key, y.shape[0], t_pad)  # (T, N)
+
+    def shard_fn(perm_shard):
+        yp = y[perm_shard].T                                   # (N, T_local)
+        dv = fastcv.binary_dvals(plan, yp, adjust_bias=adjust_bias)
+        y_te = yp[plan.te_idx]
+        return perm_lib._fold_metric_binary(dv, y_te, metric)  # (T_local,)
+
+    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(perm_axes),
+                       out_specs=P(perm_axes))
+    null = fn(perms)[:n_perm]
+    return perm_lib.PermutationResult(observed, null,
+                                      perm_lib.p_value(observed, null))
+
+
+def _plan_from_h(h, folds: Folds, with_train_block: bool) -> fastcv.CVPlan:
+    h_te = h[folds.te_idx[:, :, None], folds.te_idx[:, None, :]]
+    eye = jnp.eye(h_te.shape[-1], dtype=h.dtype)
+    from jax.scipy.linalg import cho_factor
+    chol = jax.vmap(lambda a: cho_factor(a, lower=True)[0])(eye[None] - h_te)
+    h_tr_te = (h[folds.tr_idx[:, :, None], folds.te_idx[:, None, :]]
+               if with_train_block else None)
+    return fastcv.CVPlan(h, folds.te_idx, folds.tr_idx, chol, h_tr_te)
+
+
+def searchlight_cv(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
+                   mesh: Mesh, *, problem_axes: tuple = ("pod", "data"),
+                   adjust_bias: bool = True):
+    """Many independent CV problems (paper §4.2: searchlight / time points /
+    RSA pairs): xs (Q, N, P_local_features) sharded over the problem axes.
+
+    Each problem runs the full analytical CV locally — zero cross-problem
+    communication. Returns per-problem accuracy (Q,).
+    """
+    axes = tuple(a for a in problem_axes if a in mesh.axis_names)
+    te_idx, tr_idx = folds.te_idx, folds.tr_idx
+
+    def one_problem(x, y_):
+        dv, y_te = fastcv.binary_cv(x, y_, _FoldsView(te_idx, tr_idx),
+                                    lam=lam, adjust_bias=adjust_bias)
+        pred = jnp.where(dv >= 0, 1.0, -1.0)
+        return jnp.mean(pred == jnp.sign(y_te))
+
+    def shard_fn(xs_shard):
+        return jax.vmap(lambda x: one_problem(x, y))(xs_shard)
+
+    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(axes),
+                       out_specs=P(axes))
+    return fn(xs)
+
+
+class _FoldsView:
+    """Duck-typed Folds carrying traced index arrays into jitted regions."""
+
+    def __init__(self, te_idx, tr_idx):
+        self.te_idx = te_idx
+        self.tr_idx = tr_idx
+        self.n = None
+        self.k = te_idx.shape[0]

@@ -1,0 +1,257 @@
+"""Analytical k-fold cross-validation for least-squares models.
+
+This module is the paper's primary contribution (Treder 2018, §2.4-2.6):
+exact cross-validated decision values for any ridge-regularised
+least-squares model (linear regression, ridge regression, binary LDA in
+regression form) from a *single* full-data fit.
+
+    H  = X̃ (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ          (hat matrix, Eq. 8 + §2.6.1)
+    ŷ  = H y,   ê = y − ŷ
+    ė_Te = (I − H_Te)⁻¹ ê_Te            (Eq. 14 — the analytical approach)
+    ẏ_Te = y_Te − ė_Te
+    ė_Tr = ê_Tr + H_{Tr,Te} (I − H_Te)⁻¹ ê_Te        (Eq. 15, bias adjust)
+
+TPU-adapted design decisions (DESIGN.md §2):
+
+* Two hat-matrix paths, selected by shape:
+    - *primal* (N > P): the paper's explicit augmented form with the
+      unpenalised-intercept matrix I₀.
+    - *dual* (P ≫ N, the paper's own target regime): column-center X, then
+      ``H = 1/N·11ᵀ + G_c (G_c + λI)⁻¹`` with ``G_c = X_c X_cᵀ``. This is
+      algebraically identical to the primal form (push-through identity +
+      unpenalised intercept ≡ centering) but only ever materialises N×N
+      objects; the O(N²P) Gram product is the MXU-friendly hot-spot served
+      by the Pallas ``gram`` kernel.
+* Folds are static-shape index arrays; all K fold-solves are one batched
+  Cholesky (``vmap(cho_factor)``), and the factorisation is *reused across
+  permutations* — a beyond-paper optimisation (the paper re-solves per
+  permutation; we factor once per fold: O(m³) → O(m²) per permutation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
+
+from repro.core.folds import Folds
+
+__all__ = [
+    "hat_matrix",
+    "hat_matrix_primal",
+    "hat_matrix_dual",
+    "CVPlan",
+    "prepare",
+    "cv_errors",
+    "binary_dvals",
+    "binary_cv",
+]
+
+
+def _augment(x: jax.Array) -> jax.Array:
+    """X̃ = [X, 1] — append the intercept column (paper §2.3)."""
+    n = x.shape[0]
+    return jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+
+
+def hat_matrix_primal(x: jax.Array, lam: float = 0.0) -> jax.Array:
+    """H = X̃ (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ — the paper's explicit form.
+
+    O(NP² + P³). Requires X̃ᵀX̃ + λI₀ to be positive definite (N > P or
+    λ > 0 with a full-rank intercept-augmented design).
+    """
+    xa = _augment(x)
+    p1 = xa.shape[1]
+    # I₀: identity with the intercept entry zeroed (bias never penalised).
+    i0 = jnp.eye(p1, dtype=x.dtype).at[p1 - 1, p1 - 1].set(0.0)
+    a = xa.T @ xa + jnp.asarray(lam, x.dtype) * i0
+    c = cho_factor(a)
+    return xa @ cho_solve(c, xa.T)
+
+
+def hat_matrix_dual(x: jax.Array, lam: float, gram: Optional[jax.Array] = None) -> jax.Array:
+    """H = 1/N·11ᵀ + G_c (G_c + λI)⁻¹, G_c = X_c X_cᵀ — dual / kernel form.
+
+    O(N²P + N³); never materialises a P×P matrix. Exact for λ > 0 (the
+    paper's recommended operating point in high dimensions). ``gram`` may
+    be supplied precomputed (e.g. by the Pallas kernel or the distributed
+    feature-sharded reduction).
+    """
+    n = x.shape[0]
+    if gram is None:
+        xc = x - jnp.mean(x, axis=0, keepdims=True)
+        gram = xc @ xc.T
+    lam = jnp.asarray(lam, x.dtype)
+    c = cho_factor(gram + lam * jnp.eye(n, dtype=x.dtype))
+    # G (G+λI)⁻¹ is symmetric (G and (G+λI)⁻¹ share an eigenbasis).
+    h_c = cho_solve(c, gram)
+    h_c = 0.5 * (h_c + h_c.T)
+    return h_c + jnp.full((n, n), 1.0 / n, x.dtype)
+
+
+def hat_matrix(x: jax.Array, lam: float = 0.0, mode: str = "auto",
+               gram: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch between primal and dual hat-matrix construction.
+
+    mode="auto" picks dual when P >= N (the paper's P ≫ N regime), primal
+    otherwise. λ = 0 in the P >= N regime is rejected: the unregularised
+    interpolator has H_Te → I and Eq. (14) becomes singular (the paper
+    implicitly assumes ridge regularisation there).
+    """
+    n, p = x.shape
+    if mode == "auto":
+        mode = "dual" if p >= n else "primal"
+    if mode == "dual":
+        # Only checkable when lam is a concrete Python number (outside jit).
+        if isinstance(lam, (int, float)) and lam <= 0.0:
+            raise ValueError("dual hat matrix requires lam > 0 (P >= N regime)")
+        return hat_matrix_dual(x, lam, gram=gram)
+    if mode == "primal":
+        return hat_matrix_primal(x, lam)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# CV plan: everything that depends on (X, folds, λ) but not on labels.
+# Reused across permutations (§2.7: H is label-invariant).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CVPlan:
+    """Precomputed label-independent quantities for analytical CV.
+
+    Attributes:
+      h: (N, N) hat matrix.
+      te_idx: (K, m) test indices.  tr_idx: (K, N-m) train indices.
+      chol_ih: (K, m, m) Cholesky factors (lower) of I − H_Te per fold.
+      h_tr_te: (K, N-m, m) cross blocks H_{Tr,Te} (None unless bias adjust).
+    """
+
+    h: jax.Array
+    te_idx: jax.Array
+    tr_idx: jax.Array
+    chol_ih: jax.Array
+    h_tr_te: Optional[jax.Array]
+
+    def tree_flatten(self):
+        return (self.h, self.te_idx, self.tr_idx, self.chol_ih, self.h_tr_te), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def k(self) -> int:
+        return self.te_idx.shape[0]
+
+
+@partial(jax.jit, static_argnames=("mode", "with_train_block", "lam"))
+def _prepare_jit(x, te_idx, tr_idx, lam, mode, with_train_block):
+    h = hat_matrix(x, lam, mode=mode)
+    h_te = h[te_idx[:, :, None], te_idx[:, None, :]]           # (K, m, m)
+    eye = jnp.eye(h_te.shape[-1], dtype=h.dtype)
+    ih = eye[None] - h_te
+    chol = jax.vmap(lambda a: cho_factor(a, lower=True)[0])(ih)
+    h_tr_te = (
+        h[tr_idx[:, :, None], te_idx[:, None, :]] if with_train_block else None
+    )
+    return h, chol, h_tr_te
+
+
+def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
+            with_train_block: bool = True) -> CVPlan:
+    """Build a :class:`CVPlan`: hat matrix + per-fold factorisations.
+
+    This is the one-time O(N²P + N³ + K·m³) setup; every subsequent label
+    vector (CV run or permutation) costs only O(K·m²) per evaluation.
+    """
+    n, p = x.shape
+    if mode == "auto":
+        mode = "dual" if p >= n else "primal"
+    if mode == "dual" and lam <= 0.0:
+        raise ValueError("analytical CV with P >= N requires lam > 0 "
+                         "(unregularised interpolation makes I - H_Te singular)")
+    h, chol, h_tr_te = _prepare_jit(
+        x, folds.te_idx, folds.tr_idx, float(lam), mode, with_train_block
+    )
+    return CVPlan(h, folds.te_idx, folds.tr_idx, chol, h_tr_te)
+
+
+def _chol_solve_lower(chol_l: jax.Array, b: jax.Array) -> jax.Array:
+    return cho_solve((chol_l, True), b)
+
+
+def cv_errors(plan: CVPlan, y: jax.Array):
+    """Eq. (14) + Eq. (15) for a label/response matrix ``y`` of shape (N, ...).
+
+    Returns (y_dot_te, y_dot_tr):
+      y_dot_te: (K, m, ...)    exact CV predictions on each test fold.
+      y_dot_tr: (K, N-m, ...)  exact *training-set* predictions of each
+                               fold model (None if plan lacks train blocks).
+
+    ``y`` may carry trailing batch dims (e.g. permutations, classes); the
+    fold solves broadcast over them using the cached Cholesky factors.
+    """
+    squeeze = y.ndim == 1
+    if squeeze:
+        y = y[:, None]
+    y_hat = plan.h @ y                          # (N, B)
+    e_hat = y - y_hat
+    e_te = e_hat[plan.te_idx]                   # (K, m, B)
+    t = jax.vmap(_chol_solve_lower)(plan.chol_ih, e_te)   # (I−H_Te)⁻¹ ê_Te
+    y_dot_te = y[plan.te_idx] - t               # ẏ_Te = y_Te − ė_Te
+    y_dot_tr = None
+    if plan.h_tr_te is not None:
+        e_tr = e_hat[plan.tr_idx]               # (K, N-m, B)
+        e_dot_tr = e_tr + jnp.einsum("knm,kmb->knb", plan.h_tr_te, t)
+        y_dot_tr = y[plan.tr_idx] - e_dot_tr
+    if squeeze:
+        y_dot_te = y_dot_te[..., 0]
+        y_dot_tr = None if y_dot_tr is None else y_dot_tr[..., 0]
+    return y_dot_te, y_dot_tr
+
+
+def binary_dvals(plan: CVPlan, y: jax.Array, adjust_bias: bool = True):
+    """Cross-validated decision values for binary LDA (labels ±1).
+
+    ``y`` is (N,) or (N, B) — a trailing batch dim carries permutations
+    (§2.7); all B label vectors share the plan's factorisations.
+
+    With ``adjust_bias`` (paper §2.5) the regression bias b_LR is replaced
+    by the LDA bias b_LDA using the cross-validated *training* decision
+    values: dval ← ẏ_Te − (μ̂₁ + μ̂₂)/2 where μ̂_l is the mean training
+    decision value of class l under the fold's model. This never forms w.
+    """
+    y = y.astype(plan.h.dtype)
+    squeeze = y.ndim == 1
+    yb = y[:, None] if squeeze else y                          # (N, B)
+    y_dot_te, y_dot_tr = cv_errors(plan, yb)                   # (K, m, B)
+    if adjust_bias:
+        if y_dot_tr is None:
+            raise ValueError("plan must be prepared with with_train_block=True")
+        y_tr = yb[plan.tr_idx]                                 # (K, N-m, B)
+        pos = (y_tr > 0).astype(yb.dtype)
+        neg = 1.0 - pos
+        mu1 = jnp.sum(y_dot_tr * pos, axis=1) / jnp.maximum(jnp.sum(pos, axis=1), 1.0)
+        mu2 = jnp.sum(y_dot_tr * neg, axis=1) / jnp.maximum(jnp.sum(neg, axis=1), 1.0)
+        # ẏ − b_LR + b_LDA = ẏ − (μ₁ + μ₂)/2  (projected-class-mean midpoint)
+        y_dot_te = y_dot_te - 0.5 * (mu1 + mu2)[:, None, :]
+    return y_dot_te[..., 0] if squeeze else y_dot_te
+
+
+def binary_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0,
+              mode: str = "auto", adjust_bias: bool = True):
+    """One-shot analytical binary-LDA cross-validation.
+
+    Returns (dvals_te, y_te): per-fold decision values and matching labels,
+    both (K, m), ready for ``metrics.binary_accuracy`` / ``metrics.auc``.
+    """
+    plan = prepare(x, folds, lam, mode=mode, with_train_block=adjust_bias)
+    dvals = binary_dvals(plan, y, adjust_bias=adjust_bias)
+    return dvals, y[folds.te_idx]

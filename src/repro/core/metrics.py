@@ -1,0 +1,75 @@
+"""Classification / regression performance metrics (jit-friendly).
+
+All metrics consume *decision values* (the paper's ``dvals``) or discriminant
+scores and return scalars; everything is expressible inside jit/vmap so the
+permutation engine can evaluate thousands of null-distribution entries in a
+single XLA program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "binary_accuracy",
+    "auc",
+    "multiclass_accuracy",
+    "confusion_matrix",
+    "mse",
+    "r2",
+]
+
+
+def binary_accuracy(dvals: jax.Array, y: jax.Array) -> jax.Array:
+    """Accuracy of sign(dval) against labels coded ±1 (paper §2.2)."""
+    pred = jnp.where(dvals >= 0, 1.0, -1.0)
+    return jnp.mean(pred == jnp.sign(y).astype(pred.dtype))
+
+
+def auc(dvals: jax.Array, y: jax.Array) -> jax.Array:
+    """Area under the ROC curve via the rank-sum (Mann-Whitney U) statistic.
+
+    Ties in ``dvals`` are handled with mid-ranks. Labels are ±1.
+    Bias-term independent, as noted in paper §2.5.
+    """
+    dvals = dvals.reshape(-1)
+    y = y.reshape(-1)
+    n = dvals.shape[0]
+    order = jnp.argsort(dvals)
+    sorted_d = dvals[order]
+    ranks_sorted = jnp.arange(1, n + 1, dtype=dvals.dtype)
+    # mid-ranks for ties: average rank within groups of equal dvals
+    # group id = number of strictly-smaller elements
+    first_ge = jnp.searchsorted(sorted_d, sorted_d, side="left")
+    last_ge = jnp.searchsorted(sorted_d, sorted_d, side="right")
+    mid = (first_ge + 1 + last_ge).astype(dvals.dtype) / 2.0
+    ranks = jnp.zeros(n, dvals.dtype).at[order].set(mid + 0 * ranks_sorted)
+    pos = y > 0
+    n_pos = jnp.sum(pos)
+    n_neg = n - n_pos
+    rank_sum_pos = jnp.sum(jnp.where(pos, ranks, 0.0))
+    u = rank_sum_pos - n_pos * (n_pos + 1) / 2.0
+    denom = jnp.maximum(n_pos * n_neg, 1).astype(dvals.dtype)
+    return u / denom
+
+
+def multiclass_accuracy(pred_labels: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((pred_labels == y).astype(jnp.float32))
+
+
+def confusion_matrix(pred_labels: jax.Array, y: jax.Array, num_classes: int) -> jax.Array:
+    """(C, C) matrix: rows = true class, cols = predicted class."""
+    idx = y * num_classes + pred_labels
+    counts = jnp.bincount(idx, length=num_classes * num_classes)
+    return counts.reshape(num_classes, num_classes)
+
+
+def mse(y_pred: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((y_pred - y) ** 2)
+
+
+def r2(y_pred: jax.Array, y: jax.Array) -> jax.Array:
+    ss_res = jnp.sum((y - y_pred) ** 2)
+    ss_tot = jnp.sum((y - jnp.mean(y)) ** 2)
+    return 1.0 - ss_res / jnp.maximum(ss_tot, jnp.finfo(y.dtype).tiny)

@@ -1,0 +1,93 @@
+"""Deterministic synthetic token pipeline for LM training/serving.
+
+A real deployment would stream tokenised corpora; offline we provide a
+seeded, reproducible, infinitely-repeatable token source with the same
+interface a production loader would have: global-batch iteration,
+per-process sharding (each data-parallel group reads only its slice),
+checkpointable cursor (resume from a step), and modality stubs for the
+[vlm]/[audio] architectures (precomputed patch/frame embeddings per the
+assignment: frontends are STUBS, only the backbone is modelled).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenStreamConfig", "TokenStream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # modality stubs
+    num_codebooks: int = 0            # [audio] musicgen: >0 => multi-codebook
+    vision_tokens: int = 0            # [vlm] llama-vision: >0 => patch embeds
+    vision_dim: int = 0
+
+
+class TokenStream:
+    """Seeded synthetic token batches with a checkpointable cursor.
+
+    Tokens are a Zipf-ish mixture (realistic rank-frequency profile) drawn
+    from a counter-based RNG keyed on (seed, step, shard), so any shard of
+    any step is reproducible in O(1) — the property that makes elastic
+    restarts and straggler re-assignment trivial.
+    """
+
+    def __init__(self, cfg: TokenStreamConfig, step: int = 0):
+        self.cfg = cfg
+        self.step = step
+
+    def checkpoint_state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @staticmethod
+    def restore(cfg: TokenStreamConfig, state: dict) -> "TokenStream":
+        assert state["seed"] == cfg.seed, "data seed changed across restart"
+        return TokenStream(cfg, step=int(state["step"]))
+
+    def _batch_at(self, step: int, batch: int, seq_plus_one: bool) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        s = cfg.seq_len + (1 if seq_plus_one else 0)
+        # Zipf-like: exponential-rank sampling keeps a heavy head like text.
+        u = rng.random((batch, s))
+        ranks = (-np.log1p(-u * (1 - np.exp(-12.0))) / 12.0 * cfg.vocab_size)
+        toks = np.clip(ranks.astype(np.int32), 0, cfg.vocab_size - 1)
+        out = {"tokens": toks}
+        if cfg.num_codebooks:
+            out["tokens"] = np.clip(
+                rng.integers(0, cfg.vocab_size, (batch, cfg.num_codebooks, s),
+                             dtype=np.int32), 0, cfg.vocab_size - 1)
+        if cfg.vision_tokens:
+            out["vision_embeds"] = rng.standard_normal(
+                (batch, cfg.vision_tokens, cfg.vision_dim)).astype(np.float32)
+        return out
+
+    def next_batch(self, shard_index: int = 0, num_shards: int = 1) -> dict:
+        """One step's shard: batch rows [shard*b/ns, (shard+1)*b/ns)."""
+        assert self.cfg.global_batch % num_shards == 0
+        local = self.cfg.global_batch // num_shards
+        full = self._batch_at(self.step, self.cfg.global_batch, seq_plus_one=True)
+        out = {}
+        for k, v in full.items():
+            sl = v[shard_index * local:(shard_index + 1) * local]
+            if k == "tokens":
+                out["tokens"] = jnp.asarray(sl[..., :-1])
+                out["labels"] = jnp.asarray(sl[..., 1:])
+            else:
+                out[k] = jnp.asarray(sl)
+        self.step += 1
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot-spots (+ the substrate's
+# attention). Each subpackage: <name>.py (pl.pallas_call + BlockSpec),
+# ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).

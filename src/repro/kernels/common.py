@@ -1,0 +1,35 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, MXU-aligned
+block shapes). On this CPU-only container they are validated with
+``interpret=True`` which executes the kernel bodies in Python; the
+``interpret`` default below auto-detects the platform so the same call
+sites run compiled on real TPUs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["default_interpret", "pad_to", "cdiv"]
+
+
+def default_interpret() -> bool:
+    """interpret=True off-TPU (CPU validation), False on real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple (MXU alignment)."""
+    size = x.shape[axis]
+    target = cdiv(size, multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)

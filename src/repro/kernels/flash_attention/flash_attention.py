@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: causal flash attention with GQA, local windows, softcap.
+
+Covers the attention variants of the assigned architecture pool from one
+kernel: grouped-query attention (all archs), sliding-window local attention
+(gemma2 / recurrentgemma local layers), and logit soft-capping (gemma2).
+
+Online-softmax tiling: grid (B·Hq, S/bq, S/bk) with the key axis innermost;
+running max/denominator/accumulator live in VMEM scratch across the key
+loop (the classic FlashAttention-2 schedule, laid out for the MXU with
+(bq × d)·(d × bk) tiles). Fully-masked key blocks (beyond the causal
+frontier or outside the local window) are skipped with ``pl.when`` — for
+long_500k-class shapes the window skip is what makes local layers O(S·W).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_k: int, n_kblocks: int,
+                  causal: bool, window: Optional[int], softcap: Optional[float]):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+
+    # Block-level reachability: last query in block vs first key in block.
+    reachable = True
+    if causal:
+        reachable = q_start + block_q - 1 >= k_start
+    if window is not None:
+        # first query in block vs last key in block: q - k < window
+        reachable = jnp.logical_and(
+            reachable, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(reachable)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, q_idx >= k_idx)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_idx - k_idx < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kblocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           scale: float, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0; S % blocks == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (b * hq, s // block_q, s // block_k)
+
+    def q_map(bh, iq, jk):
+        return (bh // hq, bh % hq, iq, 0)
+
+    def kv_map(bh, iq, jk):
+        return (bh // hq, (bh % hq) // group, jk, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kblocks=grid[2], causal=causal, window=window, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), q_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

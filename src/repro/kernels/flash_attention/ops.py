@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for flash attention (padding + platform dispatch)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Self-attention (S_q == S_kv) via the Pallas kernel; pads S to block
+    multiples (padded keys are causally/locally unreachable from real
+    queries because they come *after* them, so results are unaffected)."""
+    if interpret is None:
+        interpret = default_interpret()
+    s = q.shape[2]
+    bq = min(block_q, max(8, 1 << (s - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (s - 1).bit_length()))
+    qp = pad_to(q, bq, 2)
+    kp = pad_to(k, bk, 2)
+    vp = pad_to(v, bk, 2)
+    if kp.shape[2] != qp.shape[2]:  # equalise padded lengths
+        target = max(kp.shape[2], qp.shape[2])
+        qp = pad_to(qp, target, 2)
+        kp = pad_to(kp, target, 2)
+        vp = pad_to(vp, target, 2)
+    out = flash_attention_pallas(qp, kp, vp, scale=scale, causal=causal,
+                                 window=window, softcap=softcap,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :s, :]

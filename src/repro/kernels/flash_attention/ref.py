@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: dense (masked-softmax) attention with GQA/window/softcap.
+
+Also serves as the XLA attention path used by the model substrate on
+non-TPU backends and inside the multi-pod dry-run (Pallas kernels target
+real TPUs; GSPMD lowers this einsum form on any backend).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S_kv, D). Returns (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv, s_kv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, s, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_idx = jnp.arange(s)[:, None] + (s_kv - s)   # align ends (decode offset)
+    k_idx = jnp.arange(s_kv)[None, :]
+    mask = jnp.ones((s, s_kv), dtype=bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)

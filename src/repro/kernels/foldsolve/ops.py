@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for foldsolve."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.foldsolve.foldsolve import foldsolve_pallas
+
+__all__ = ["foldsolve"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def foldsolve(h_te: jax.Array, e_te: jax.Array, *,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """ė_Te = (I − H_Te)⁻¹ ê_Te for all folds at once.
+
+    h_te: (K, m, m) diagonal fold blocks of the hat matrix.
+    e_te: (K, m) or (K, m, B) full-fit errors (B = permutation batch).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    squeeze = e_te.ndim == 2
+    e = e_te[..., None] if squeeze else e_te
+    out = foldsolve_pallas(h_te, e, interpret=interpret)
+    return out[..., 0] if squeeze else out

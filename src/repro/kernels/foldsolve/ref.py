@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for foldsolve: batched (I − H_Te)⁻¹ ê_Te."""
+
+import jax
+import jax.numpy as jnp
+
+
+def foldsolve_ref(h_te: jax.Array, e_te: jax.Array) -> jax.Array:
+    m = h_te.shape[-1]
+    eye = jnp.eye(m, dtype=h_te.dtype)
+
+    def solve_one(h, e):
+        return jnp.linalg.solve(eye - h, e)
+
+    return jax.vmap(solve_one)(h_te, e_te)

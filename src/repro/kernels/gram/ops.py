@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for the gram kernel: padding, centering, dispatch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, default_interpret, pad_to
+from repro.kernels.gram.gram import gram_pallas
+from repro.kernels.gram import ref
+
+__all__ = ["gram", "centered_gram"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret", "center"))
+def gram(x: jax.Array, *, center: bool = False, block_n: Optional[int] = None,
+         block_p: Optional[int] = None, interpret: Optional[bool] = None) -> jax.Array:
+    """G = X Xᵀ (optionally column-centered first) via the Pallas kernel.
+
+    Inputs of arbitrary (N, P) are zero-padded to block multiples; padding
+    rows are sliced away on return (zero-padding P contributes 0 to XXᵀ).
+    Blocks shrink to the (padded) matrix size for small problems.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if center:
+        x = x - jnp.mean(x, axis=0, keepdims=True)
+    n, p = x.shape
+    bn = min(block_n or 256, max(8, 1 << (n - 1).bit_length()))
+    bp = min(block_p or 512, max(8, 1 << (p - 1).bit_length()))
+    xp = pad_to(pad_to(x, bn, 0), bp, 1)
+    g = gram_pallas(xp, block_n=bn, block_p=bp, interpret=interpret)
+    return g[:n, :n]
+
+
+def centered_gram(x: jax.Array, **kw) -> jax.Array:
+    """Centered Gram G_c = X_c X_cᵀ — the dual hat-matrix building block."""
+    return gram(x, center=True, **kw)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the gram kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+    return x @ x.T
+
+
+def centered_gram_ref(x: jax.Array) -> jax.Array:
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    return gram_ref(xc)

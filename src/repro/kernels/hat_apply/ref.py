@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for hat_apply: E = Y − H Y."""
+
+import jax
+
+
+def hat_apply_ref(h: jax.Array, y: jax.Array) -> jax.Array:
+    return y - h @ y

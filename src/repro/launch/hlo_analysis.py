@@ -1,0 +1,250 @@
+"""Loop-aware HLO analysis: FLOPs and collective bytes with trip counts.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — with
+scan-over-layers (and inner scans: sLSTM over sequence, mLSTM chunks,
+query-chunked attention) that undercounts by the trip count, and the same
+applies to collectives inside loop bodies. This module parses the
+post-SPMD HLO text into its computations, extracts while-loop trip counts
+from their condition computations, propagates multipliers through the
+call graph (while/fusion/call/conditional), and accumulates:
+
+  * dot FLOPs:       2 · prod(result_shape) · prod(lhs contracting dims)
+  * dot HBM bytes:   lhs + rhs + out bytes per dot (perfect-fusion lower
+                     bound for the memory term)
+  * collective bytes per op kind (result-shape convention)
+
+Numbers are per-device (the HLO is the per-device SPMD program).
+Verified against unrolled compilations in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["analyze_hlo", "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_info(s: str):
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return dt, shape
+
+
+def _nbytes(s: str) -> int:
+    info = _shape_info(s)
+    if info is None:
+        return 0
+    dt, shape = info
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 0)
+
+
+_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*\S.*\{\s*$")
+
+
+def _split_computations(hlo: str) -> Dict[str, list[str]]:
+    comps: Dict[str, list[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _HEADER_RE.match(line)
+        if m and "=" not in line.split("(")[0]:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if stripped in ("}", "})"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+_CALL_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=\s*%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(
+    r"=\s*\S+\s+while\(.*?body=\s*%?([\w\.\-]+).*?"
+    r"|while\(.*", re.DOTALL)
+
+
+def _while_edges(line: str):
+    """(body, cond) names if this line is a while op."""
+    if " while(" not in line:
+        return None
+    body = re.search(r"body=\s*%?([\w\.\-]+)", line)
+    cond = re.search(r"condition=\s*%?([\w\.\-]+)", line)
+    if body and cond:
+        return body.group(1), cond.group(1)
+    return None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Max integer constant in the while condition ~ trip count.
+
+    Scan-lowered conds compare the induction variable against the length;
+    fallback 1 if nothing parses (counts the body once, like XLA)."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" not in line:
+            continue
+        for m in re.finditer(r"constant\((-?\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])")
+
+
+def _symbol_table(lines: list[str]) -> dict:
+    """SSA name -> shape string, from definition lines."""
+    tab = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            tab[m.group(1)] = m.group(2)
+    return tab
+
+
+def _dot_flops_bytes(line: str, symtab: dict):
+    """(flops, hbm_bytes) for a dot op line, else None.
+
+    Operand shapes come inline (`dot(f32[..] %a, ...)`) when present, else
+    from the computation's symbol table (`dot(%a, %b)`, final-HLO style).
+    """
+    m = re.search(r"=\s*(\S+)\s+dot\((.*?)\)", line)
+    if not m:
+        return None
+    result_s, operands_s = m.groups()
+    res = _shape_info(result_s)
+    if res is None:
+        return None
+    _, res_shape = res
+    out_elems = 1
+    for d in res_shape:
+        out_elems *= d
+    ops = re.findall(r"([a-z0-9]+\[[0-9,]*\])", operands_s)
+    if len(ops) < 2:
+        names = re.findall(r"%([\w\.\-]+)", operands_s)
+        ops = [symtab[n] for n in names if n in symtab]
+    lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1
+    if ops and lhs_c is not None:
+        lhs_info = _shape_info(ops[0])
+        if lhs_info:
+            _, lhs_shape = lhs_info
+            for d in lhs_c.group(1).split(","):
+                if d != "" and int(d) < len(lhs_shape):
+                    contract *= lhs_shape[int(d)]
+    flops = 2 * out_elems * contract
+    hbm = _nbytes(result_s.split("{")[0]) + sum(_nbytes(o) for o in ops)
+    return flops, hbm
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+
+    # local stats per computation
+    local = {}
+    edges = defaultdict(list)      # comp -> [(child, multiplier)]
+    for name, lines in comps.items():
+        flops = 0
+        dot_bytes = 0
+        coll = {k: 0 for k in COLLECTIVE_OPS}
+        coll_n = {k: 0 for k in COLLECTIVE_OPS}
+        symtab = _symbol_table(lines)
+        for line in lines:
+            d = _dot_flops_bytes(line, symtab)
+            if d:
+                flops += d[0]
+                dot_bytes += d[1]
+            for op in COLLECTIVE_OPS:
+                if f" {op}(" in line or f" {op}-start(" in line:
+                    m = re.search(r"=\s*((?:\([^)]*\))|(?:\S+))\s+" + op, line)
+                    if m:
+                        shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", m.group(1))
+                        coll[op] += sum(_nbytes(s) for s in shapes)
+                        coll_n[op] += 1
+            we = _while_edges(line)
+            if we:
+                body, cond = we
+                trips = _trip_count(comps.get(cond, []))
+                edges[name].append((body, trips))
+                edges[name].append((cond, trips))
+            else:
+                for m in _CALL_RE.finditer(line):
+                    child = m.group(1)
+                    if child in comps:
+                        edges[name].append((child, 1))
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for child in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        if child in comps:
+                            edges[name].append((child, 1))
+        local[name] = {"flops": flops, "dot_bytes": dot_bytes,
+                       "coll": coll, "coll_n": coll_n}
+
+    # entry = computation not referenced by anyone (prefer one named ENTRY
+    # or containing ".entry"/"main")
+    referenced = {c for kids in edges.values() for c, _ in kids}
+    entries = [c for c in comps if c not in referenced]
+    entry = None
+    for c in entries:
+        if "main" in c or "entry" in c:
+            entry = c
+            break
+    if entry is None and entries:
+        entry = max(entries, key=lambda c: local[c]["flops"])
+
+    mult = defaultdict(float)
+    if entry is not None:
+        stack = [(entry, 1.0)]
+        seen_pairs = defaultdict(float)
+        while stack:
+            comp, m = stack.pop()
+            mult[comp] += m
+            for child, trips in edges.get(comp, []):
+                stack.append((child, m * trips))
+
+    total_flops = 0.0
+    total_dot_bytes = 0.0
+    coll_bytes = {k: 0.0 for k in COLLECTIVE_OPS}
+    coll_counts = {k: 0.0 for k in COLLECTIVE_OPS}
+    for name, stats in local.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        total_flops += m * stats["flops"]
+        total_dot_bytes += m * stats["dot_bytes"]
+        for op in COLLECTIVE_OPS:
+            coll_bytes[op] += m * stats["coll"][op]
+            coll_counts[op] += m * stats["coll_n"][op]
+
+    return {
+        "flops": total_flops,
+        "dot_hbm_bytes": total_dot_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "collective_total_bytes": sum(coll_bytes.values()),
+        "num_computations": len(comps),
+        "entry": entry,
+    }

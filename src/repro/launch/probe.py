@@ -1,0 +1,95 @@
+"""Layer-probe driver: the paper's technique applied to model representations.
+
+The modern analogue of the paper's MVPA workloads (DESIGN.md §3): extract
+hidden states from a (smoke-sized) assigned architecture, then run
+analytical-CV LDA probes + permutation testing per layer — the
+"classifier per time point" of §2.13 becomes "probe per layer", with the
+identical K·T training-iteration explosion that Algorithm 1 collapses.
+
+    PYTHONPATH=src python -m repro.launch.probe --arch gemma2-2b \
+        --n-per-class 48 --n-perm 200
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_archs
+from repro.core import folds as foldlib, permutation
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def layerwise_hidden_states(params, tokens, cfg, vision_embeds=None):
+    """Forward pass capturing the residual stream after every block repeat.
+
+    Returns (n_points, N, d_model) float32 — one feature set per scan
+    repeat (pattern group), mean-pooled over the sequence.
+    """
+    positions = jnp.arange(tokens.shape[-1], dtype=jnp.int32)[None, :]
+    h = M._embed(params, tokens, cfg, positions)
+    vis_kv = M._vision_kv(params, vision_embeds, cfg)
+    pat, n_rep, tail = T._pattern_split(cfg)
+
+    def repeat_body(carry, rep_params):
+        x, _ = carry
+        for pos, kind in enumerate(pat):
+            x, _, _ = T.apply_block_full(rep_params[pos], x, kind, cfg,
+                                         positions=positions, vis_kv=vis_kv)
+        return (x, jnp.zeros(())), jnp.mean(x, axis=1)   # pooled snapshot
+
+    (h, _), snaps = jax.lax.scan(repeat_body, (h, jnp.zeros(())),
+                                 tuple(params["blocks"]["stack"]))
+    return snaps.astype(jnp.float32)                     # (n_rep, N, D)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=list_archs())
+    ap.add_argument("--n-per-class", type=int, default=48)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--n-perm", type=int, default=100)
+    ap.add_argument("--folds", type=int, default=6)
+    ap.add_argument("--lam", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+
+    # two synthetic "stimulus classes": token sequences drawn from two
+    # disjoint vocabulary bands (a decodable condition difference)
+    n = 2 * args.n_per_class
+    half_v = cfg.vocab_size // 2
+    k1, k2, k3 = jax.random.split(key, 3)
+    tok_a = jax.random.randint(k1, (args.n_per_class, args.seq_len), 0, half_v)
+    tok_b = jax.random.randint(k2, (args.n_per_class, args.seq_len),
+                               half_v, cfg.vocab_size)
+    tokens = jnp.concatenate([tok_a, tok_b], axis=0)
+    y = jnp.concatenate([-jnp.ones(args.n_per_class), jnp.ones(args.n_per_class)])
+    vis = (jax.random.normal(k3, (n, cfg.vision_tokens, cfg.vision_dim),
+                             jnp.float32) if cfg.vision_tokens else None)
+    if cfg.num_codebooks:
+        tokens = jnp.tile(tokens[:, None, :], (1, cfg.num_codebooks, 1))
+
+    feats = layerwise_hidden_states(params, tokens, cfg, vision_embeds=vis)
+    f = foldlib.kfold(n, args.folds, seed=0)
+
+    print(f"[probe] arch={cfg.name} layers(points)={feats.shape[0]} "
+          f"N={n} P={feats.shape[2]} perms={args.n_perm}")
+    print("point | observed acc | p-value | null mean")
+    for li in range(feats.shape[0]):
+        x = feats[li].astype(jnp.float64)
+        res = permutation.analytical_permutation_binary(
+            x, y.astype(jnp.float64), f, args.lam, n_perm=args.n_perm,
+            key=jax.random.PRNGKey(li), chunk=min(args.n_perm, 64))
+        print(f"{li:5d} | {float(res.observed):.3f}        | "
+              f"{float(res.p):.4f}  | {float(jnp.mean(res.null)):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,329 @@
+"""Logical-axis sharding: rules mapping model tensors onto the mesh.
+
+Megatron-style TP over the "model" axis, DP over ("pod", "data"), optional
+sequence parallelism (residual stream sharded over "model" on the seq dim
+between blocks), expert parallelism (experts over "model"), and ZeRO-1
+(optimizer state additionally sharded over "data").
+
+Models never name mesh axes directly; they call :func:`constrain` with
+*logical* axis names which resolve through ``LOGICAL_RULES`` against the
+currently active mesh (no-op when no mesh is active — CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "axis_ctx", "constrain", "param_spec", "param_sharding_tree",
+    "opt_state_spec", "data_spec", "LOGICAL_RULES", "set_sequence_parallel",
+]
+
+_state = threading.local()
+
+# logical axis -> mesh axis (None = replicate)
+LOGICAL_RULES: dict[str, Optional[object]] = {
+    "batch": ("pod", "data"),
+    "batch_dp": ("pod", "data"),   # always DP-only (MoE dispatch: "model" carries experts)
+    "batch_unembed": ("pod", "data"),  # embed/unembed batch: must match the
+                                       # vocab-sharded logits' batch axes, or
+                                       # the tied-embedding backward all-gathers
+                                       # the GLOBAL (B,S,V) logits (§Perf H1 it.3)
+    "seq": None,              # "model" when sequence parallelism is on
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,         # too few kv heads on most archs; see kv rule
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "rnn": "model",
+    "vision_seq": None,
+    "codebooks": None,
+}
+
+
+def set_sequence_parallel(enabled: bool) -> None:
+    LOGICAL_RULES["seq"] = "model" if enabled else None
+
+
+# Embedding lookup strategy (§Perf hillclimb): with a vocab-sharded table,
+# a plain gather makes GSPMD mask-and-psum a full (B,S,D) activation —
+# huge. "gathered" instead all-gathers the (V,D) table once per step
+# (bounded by the table size) and gathers locally.
+GATHERED_EMBED = False
+
+
+def set_gathered_embed(enabled: bool) -> None:
+    global GATHERED_EMBED
+    GATHERED_EMBED = enabled
+
+
+_PROFILES = {
+    # megatron-style TP over "model" (baseline)
+    "tp": {"heads": "model", "ffn": "model", "rnn": "model",
+           "experts": "model", "vocab": "model",
+           "batch": ("pod", "data")},
+    # DP-heavy: weights replicated over "model" (ZeRO-1 still shards the
+    # optimizer over "data"); vocab stays sharded so (B,S,V) logits never
+    # materialise unsharded; experts stay sharded (MoE params don't fit
+    # replicated). Right call for small-d_model archs where per-layer TP
+    # all-reduces dwarf compute (§Perf H1/H2).
+    # batch shards over "model" too (full 256/512-way DP) — without this
+    # the model axis idles and compute is replicated 16x (§Perf H1 iter 1,
+    # refuted-then-fixed hypothesis).
+    "dp": {"heads": None, "ffn": None, "rnn": None,
+           "experts": "model", "vocab": "model",
+           "batch": ("pod", "data", "model")},
+    # pure DP over (pod, data) with the model axis idle except vocab/experts:
+    # for tiny recurrent archs (xlstm) whose sequential scans emit a
+    # collective per step under any "model" sharding of the cell state
+    # (§Perf H2 iter 3) — trading replicated compute for a collective-free
+    # inner loop.
+    "dp16": {"heads": None, "ffn": None, "rnn": None,
+             "experts": "model", "vocab": "model",
+             "batch": ("pod", "data")},
+    # FSDP: like "dp" (replicated compute layout, 256-way batch) but the
+    # weights are stored fully sharded over (data, model) and all-gathered
+    # at use — params/optimizer resident bytes drop ~256x for the cost of
+    # one weight AG per layer per pass (§Perf H1 final iteration).
+    "fsdp": {"heads": None, "ffn": None, "rnn": None,
+             "experts": "model", "vocab": "model",
+             "batch": ("pod", "data", "model")},
+}
+
+FSDP = False
+
+
+def apply_profile(name: str) -> None:
+    global FSDP
+    FSDP = name == "fsdp"
+    for k, v in _PROFILES[name].items():
+        LOGICAL_RULES[k] = v
+
+
+class axis_ctx:
+    """Context manager activating a mesh for :func:`constrain`."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _state.mesh = self.mesh
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _state.mesh = None
+
+
+def _active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _resolve(logical_axes, mesh: Mesh) -> P:
+    raw = []
+    for ax in logical_axes:
+        mesh_ax = LOGICAL_RULES.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            raw.append(())
+            continue
+        axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        raw.append(tuple(a for a in axes if a in mesh.axis_names))
+    # resolve duplicates: single-axis entries (e.g. vocab -> "model") claim
+    # their axis first; multi-axis (batch) tuples drop already-claimed axes
+    claimed = {a for axes in raw if len(axes) == 1 for a in axes}
+    spec = []
+    seen = set()
+    for axes in raw:
+        if len(axes) > 1:
+            axes = tuple(a for a in axes if a not in claimed and a not in seen)
+        else:
+            axes = tuple(a for a in axes if a not in seen)
+        seen.update(axes)
+        spec.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*spec)
+
+
+def constrain(x: jax.Array, logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    spec = _resolve(logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: path-pattern -> logical axes per dimension.
+# Scanned parameter stacks carry a leading "layers" dim (replicated).
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/tokens$", ("vocab", "embed")),
+    (r"embed/codebook_\d+$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"lm_head_\d+$", ("embed", "vocab")),
+    (r"vision_proj/w$", (None, "embed")),
+    # attention
+    (r"attn/wq$", ("embed", "heads", "head_dim")),
+    (r"attn/wk$", ("embed", "kv_heads", "head_dim")),
+    (r"attn/wv$", ("embed", "kv_heads", "head_dim")),
+    (r"attn/wo$", ("heads", "head_dim", "embed")),
+    (r"attn/(q_norm|k_norm)$", ("head_dim",)),
+    # dense mlp
+    (r"mlp/w_(gate|up)$", ("embed", "ffn")),
+    (r"mlp/w_down$", ("ffn", "embed")),
+    # moe: expert-parallel over "model"; per-expert F is small (768-1024),
+    # so weights shard on the expert axis only (EP, not EP+TP)
+    (r"moe/router$", ("embed", None)),
+    (r"moe/w_(gate|up)$", ("experts", None, None)),
+    (r"moe/w_down$", ("experts", None, None)),
+    # rg-lru
+    (r"rglru/w_(x|gate)$", ("embed", "rnn")),
+    (r"rglru/w_out$", ("rnn", "embed")),
+    (r"rglru/(conv_w)$", (None, "rnn")),
+    (r"rglru/(conv_b|a_param|w_a_b|w_x_b)$", ("rnn",)),
+    (r"rglru/w_a$", ("rnn",)),
+    (r"rglru/w_input_gate$", ("rnn",)),
+    # xlstm
+    (r"(mlstm|slstm)/w_(up|ffgate)$", ("embed", "ffn")),
+    (r"(mlstm|slstm)/w_down$", ("ffn", "embed")),
+    (r"(mlstm|slstm)/w_(q|k|v|i|f|o|zg)$", ("embed", "ffn")),
+    (r"(mlstm|slstm)/r_(i|f|z|o)$", (None, "ffn", None)),
+    (r"(mlstm|slstm)/conv_w$", (None, "ffn")),
+    (r"(mlstm|slstm)/(conv_b|b_.*|skip_scale)$", ("ffn",)),
+    (r"(mlstm|slstm)/gn$", ("ffn",)),
+]
+
+
+def param_spec(path: str, ndim: int) -> P:
+    """PartitionSpec for a parameter given its tree path and rank."""
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            axes = tuple(axes)
+            if ndim == len(axes) + 1:          # scanned stack: leading layer dim
+                axes = (None,) + axes
+            if len(axes) != ndim:
+                axes = tuple(axes[:ndim]) if len(axes) > ndim else axes + (None,) * (ndim - len(axes))
+            return P(*[
+                (LOGICAL_RULES.get(a) if isinstance(a, str) else None)
+                for a in axes
+            ])
+    return P(*([None] * ndim))                  # norms, biases, gates: replicate
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def _fsdp_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Shard the largest still-replicated dim over the unused DP axes."""
+    spec = list(spec)
+    used = set()
+    for ax in spec:
+        for a in ((ax,) if isinstance(ax, str) else (ax or ())):
+            used.add(a)
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names
+                 and a not in used)
+    if not axes:
+        return P(*spec)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    best, best_dim = None, 0
+    for i, ax in enumerate(spec):
+        if ax is None and shape[i] % size == 0 and shape[i] > best_dim:
+            best, best_dim = i, shape[i]
+    if best is not None and best_dim >= size:
+        spec[best] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def param_sharding_tree(params, mesh: Mesh):
+    """NamedSharding tree for a parameter pytree."""
+    flat, treedef = _flatten_with_paths(params)
+    shardings = []
+    for path, leaf in flat:
+        spec = _sanitize(param_spec(path, np.ndim(leaf)), np.shape(leaf), mesh)
+        if FSDP and int(np.prod(np.shape(leaf))) > 1 << 16:
+            spec = _fsdp_spec(spec, np.shape(leaf), mesh)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim evenly."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def opt_state_spec(path: str, ndim: int, shape, mesh: Mesh) -> P:
+    """ZeRO-1: optimizer moments/master take the param spec plus an extra
+    shard over the unused DP axes on the largest replicated dim."""
+    spec = list(_sanitize(param_spec(path, ndim), shape, mesh))
+    used = set()
+    for ax in spec:
+        if isinstance(ax, str):
+            used.add(ax)
+        elif isinstance(ax, tuple):
+            used.update(ax)
+    for extra in (("data", "model"), ("data",)):
+        axes = tuple(a for a in extra if a in mesh.axis_names and a not in used)
+        if not axes:
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        best, best_dim = None, 0
+        for i, ax in enumerate(spec):
+            if ax is None and shape[i] % size == 0 and shape[i] > best_dim:
+                best, best_dim = i, shape[i]
+        if best is not None:
+            spec[best] = axes if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P(*spec)
+
+
+def data_spec(mesh: Mesh, *logical_axes) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(logical_axes, mesh))
+
+
+def constrain_like_opt(tree):
+    """Constrain a param-shaped pytree (e.g. the f32 gradient accumulator
+    in microbatched training) to the ZeRO-1 optimizer sharding: the
+    accumulator then costs 1/|data| of the param bytes instead of a full
+    f32 copy per chip. No-op without an active mesh."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return tree
+    flat, treedef = _flatten_with_paths(tree)
+    out = [jax.lax.with_sharding_constraint(
+        leaf, NamedSharding(mesh, opt_state_spec(
+            path, np.ndim(leaf), np.shape(leaf), mesh)))
+        for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,321 @@
+"""Core transformer layers: norms, RoPE, GQA attention (+cache), MLPs.
+
+Functional style: ``init_*`` builds nested param dicts (named to match the
+sharding rules in ``repro.launch.sharding``); ``apply`` functions are pure.
+Attention weights are stored 3D — wq (D, H, Dh) etc. — so tensor-parallel
+sharding of the head axis is expressed directly in the param layout.
+
+Compute dtype is bf16 with f32 norms/softmax/logits (TPU-native mix);
+smoke tests may run everything f32 via the config dtype fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.launch.sharding import constrain
+
+Init = jax.nn.initializers
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, in_axis=0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms --
+
+def init_norm(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """Per-head RMS norm (qk-norm, Qwen3-style); x: (..., Dh), f32 math."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (out * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope --
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (B, S) or (S,). Pairwise rotation."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)                  # (B, S, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) or (S,) -> (B, S, D) sinusoidal embeddings (MusicGen-style)."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------- attention --
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    kv_in = cfg.d_model  # cross-attn keys come from projected vision embeds (D)
+    p = {
+        "wq": dense_init(kq, (d, h, dh), _pdt(cfg)),
+        "wk": dense_init(kk, (kv_in, hkv, dh), _pdt(cfg)),
+        "wv": dense_init(kv, (kv_in, hkv, dh), _pdt(cfg)),
+        "wo": dense_init(ko, (h, dh, d), _pdt(cfg), in_axis=0),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, kv_src, cfg: ArchConfig, positions, rope_on: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope_on and cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+ATTN_CHUNK_THRESHOLD = 8192
+ATTN_CHUNK = 1024
+
+
+def _attention_xla_chunked(q, k, v, *, scale, causal, window, softcap):
+    """Query-chunked masked attention: O(S·chunk) logits memory.
+
+    XLA analogue of the flash kernel's memory behaviour for the dry-run /
+    non-TPU backends: a scan over query blocks keeps per-step logits at
+    (B, H, chunk, S) instead of (B, H, S, S).
+    """
+    b, hq, s, d = q.shape
+    hkv, s_kv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    chunk = ATTN_CHUNK if s % ATTN_CHUNK == 0 else s
+    n_chunks = s // chunk
+    qc = q.reshape(b, hkv, group, n_chunks, chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    k_idx = jnp.arange(s_kv)[None, :]
+
+    def one_chunk(ci, qi):
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                            kf) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        q_idx = (ci * chunk + jnp.arange(chunk))[:, None] + (s_kv - s)
+        mask = jnp.ones((chunk, s_kv), bool)
+        if causal:
+            mask &= q_idx >= k_idx
+        if window is not None:
+            mask &= (q_idx - k_idx) < window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+
+    outs = jax.lax.map(lambda args: one_chunk(*args),
+                       (jnp.arange(n_chunks), qc))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, s, d)
+    return out.astype(q.dtype)
+
+
+def attention_full(p, x, cfg: ArchConfig, *, positions, window=None,
+                   kv_src=None, causal=True):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    k/v returned in (B, S, Hkv, Dh) layout for cache initialisation.
+    Long sequences take the query-chunked path (flash-like memory).
+    """
+    cross = kv_src is not None
+    src = kv_src if cross else x
+    q, k, v = _project_qkv(p, x, src, cfg, positions, rope_on=not cross)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    qT = constrain(q.transpose(0, 2, 1, 3), ("batch", "heads", "seq", None))
+    # Broadcast KV to the full query-head count: under TP the head axis is
+    # sharded 16-way while Hkv (1-36 on this pool) rarely divides the mesh;
+    # repeating keeps every attention tensor cleanly "heads"-sharded.
+    group = cfg.num_heads // cfg.num_kv_heads
+    k_rep = jnp.repeat(k, group, axis=2) if group > 1 else k
+    v_rep = jnp.repeat(v, group, axis=2) if group > 1 else v
+    kT = constrain(k_rep.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
+    vT = constrain(v_rep.transpose(0, 2, 1, 3), ("batch", "heads", None, None))
+    is_causal = causal and not cross
+    if x.shape[1] >= ATTN_CHUNK_THRESHOLD and not cross:
+        out = _attention_xla_chunked(qT, kT, vT, scale=scale, causal=is_causal,
+                                     window=window,
+                                     softcap=cfg.attn_logit_softcap)
+    else:
+        out = attention_ref(qT, kT, vT, scale=scale, causal=is_causal,
+                            window=window, softcap=cfg.attn_logit_softcap)
+    out = out.transpose(0, 2, 1, 3)                     # (B, S, H, Dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(out, ("batch", "seq", "embed")), (k, v)
+
+
+def quantize_kv(t):
+    """Per-(token, head) int8 KV quantisation. t: (B, S, H, Dh) ->
+    (int8 values, f32 scales (B, S, H))."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(p, x, cfg: ArchConfig, *, cache_k, cache_v, pos,
+                     window=None, cache_k_scale=None, cache_v_scale=None):
+    """Single-token decode against a static-shape KV cache.
+
+    x: (B, 1, D). cache_k/v: (B, C, Hkv, Dh) where C = cache capacity
+    (full context, or the ring-buffer window for local layers); int8 with
+    per-(slot, head) f32 scales when cfg.kv_quant (serving memory lever).
+    pos: () int32 absolute position of the new token.
+    Returns (out (B,1,D), new caches dict).
+    """
+    b, _, d = x.shape
+    cap = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, positions, rope_on=True)
+    slot = pos % cap if window is not None else jnp.minimum(pos, cap - 1)
+    quant = cache_k_scale is not None
+    if quant:
+        k_q, k_s = quantize_kv(k_new)
+        v_q, v_s = quantize_kv(v_new)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_q, slot, axis=1)
+        cache_k_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache_k_scale, k_s, slot, axis=1)
+        cache_v_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache_v_scale, v_s, slot, axis=1)
+        k_eff = dequantize_kv(cache_k, cache_k_scale, x.dtype)
+        v_eff = dequantize_kv(cache_v, cache_v_scale, x.dtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+        k_eff, v_eff = cache_k, cache_v
+
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, 1, hkv, group, cfg.head_dim)
+    logits = jnp.einsum("bqhgk,bchk->bhgqc", qg.astype(jnp.float32),
+                        k_eff.astype(jnp.float32)) * scale
+    if cfg.attn_logit_softcap is not None:
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    idx = jnp.arange(cap)
+    if window is not None:
+        # ring buffer: slot c holds absolute position pos - ((slot - c) % cap)
+        age = (slot - idx) % cap
+        abs_pos = pos - age
+        valid = (abs_pos >= 0) & (age < cap)
+    else:
+        valid = idx <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqc,bchk->bqhgk", probs, v_eff.astype(jnp.float32))
+    out = out.reshape(b, 1, hq, cfg.head_dim).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    new_cache = {"k": cache_k, "v": cache_v}
+    if quant:
+        new_cache["k_scale"] = cache_k_scale
+        new_cache["v_scale"] = cache_v_scale
+    return out, new_cache
+
+
+def cross_attention_decode(p, x, cfg: ArchConfig, *, cross_k, cross_v):
+    """Decode-time cross attention against fixed (cached) vision K/V."""
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, 1, hkv, group, cfg.head_dim)
+    logits = jnp.einsum("bqhgk,bchk->bhgqc", qg.astype(jnp.float32),
+                        cross_k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqc,bchk->bqhgk", probs, cross_v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq, cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------- mlps --
+
+def init_mlp(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {"w_up": dense_init(k1, (d, f), _pdt(cfg)),
+         "w_down": dense_init(k2, (f, d), _pdt(cfg))}
+    if gated:
+        p["w_gate"] = dense_init(k3, (d, f), _pdt(cfg))
+    return p
+
+
+def apply_mlp(p, x, cfg: ArchConfig):
+    up = constrain(x @ p["w_up"].astype(x.dtype), ("batch", "seq", "ffn"))
+    if cfg.mlp == "swiglu":
+        gate = x @ p["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp == "geglu":
+        gate = x @ p["w_gate"].astype(x.dtype)
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    out = h @ p["w_down"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed"))

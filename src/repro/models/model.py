@@ -1,0 +1,174 @@
+"""Model assembly: embeddings → trunk → head; train / prefill / decode steps.
+
+``init_params(key, cfg)`` builds the full parameter pytree (layout matches
+the sharding rules); ``train_step`` / ``prefill_step`` / ``decode_step``
+are the three programs the launcher jits and the dry-run lowers.
+
+Modality stubs (per assignment): [vlm] takes precomputed patch embeddings
+(B, vision_tokens, vision_dim) through a linear projector feeding the
+cross-attention layers; [audio] sums ``num_codebooks`` token embeddings and
+predicts each codebook with its own head.
+
+Cross-entropy is computed in the sharded-vocab-friendly masked-reduce form
+(no (B,S,V) one-hot materialisation, exact under a "model"-sharded vocab).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.launch.sharding import constrain
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: dict = {}
+    if cfg.num_codebooks:
+        p["embed"] = {f"codebook_{i}": L.dense_init(k, (cfg.vocab_size, cfg.d_model), dt)
+                      for i, k in enumerate(jax.random.split(ks[0], cfg.num_codebooks))}
+    else:
+        p["embed"] = {"tokens": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt)}
+    if cfg.vision_tokens:
+        p["vision_proj"] = {"w": L.dense_init(ks[1], (cfg.vision_dim, cfg.d_model), dt)}
+    p["blocks"] = T.init_trunk(ks[2], cfg)
+    p["final_norm"] = L.init_norm(cfg)
+    if cfg.num_codebooks:
+        for i, k in enumerate(jax.random.split(ks[3], cfg.num_codebooks)):
+            p[f"lm_head_{i}"] = L.dense_init(k, (cfg.d_model, cfg.vocab_size), dt)
+    elif not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def _embed(params, tokens, cfg: ArchConfig, positions):
+    from repro.launch import sharding as _sh
+    dt = jnp.dtype(cfg.dtype)
+
+    def lookup(table, ids):
+        if _sh.GATHERED_EMBED:
+            # force one (V, D) table all-gather instead of letting GSPMD
+            # mask-and-psum a (B, S, D) activation per lookup (§Perf)
+            table = constrain(table, (None, None))
+        return jnp.take(table, ids, axis=0)
+
+    if cfg.num_codebooks:
+        # tokens: (B, K, S) — sum codebook embeddings
+        parts = [lookup(params["embed"][f"codebook_{i}"], tokens[:, i])
+                 for i in range(cfg.num_codebooks)]
+        h = sum(parts).astype(dt)
+    else:
+        h = lookup(params["embed"]["tokens"], tokens).astype(dt)
+    # keep the lookup's batch sharding aligned with the DP axes so the
+    # backward scatter into the (vocab-sharded) table stays shard-local
+    h = constrain(h, ("batch_unembed", "seq", "embed"))
+    if cfg.emb_scale is not None:
+        h = h * jnp.asarray(cfg.emb_scale, dt)
+    if cfg.pos_embedding == "sinusoidal":
+        h = h + L.sinusoidal(positions, cfg.d_model).astype(dt)
+    return constrain(h, ("batch", "seq", "embed"))
+
+
+def _unembed(params, h, cfg: ArchConfig):
+    """h: (B, S, D) -> logits f32 (B, S, V) or (B, S, K, V) for [audio]."""
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    # align the unembed batch axes with the vocab-sharded logits: without
+    # this the tied-embedding weight gradient all-gathers global (B,S,V)
+    hf = constrain(h.astype(jnp.float32), ("batch_unembed", "seq", "embed"))
+    if cfg.num_codebooks:
+        logits = jnp.stack(
+            [hf @ params[f"lm_head_{i}"].astype(jnp.float32)
+             for i in range(cfg.num_codebooks)], axis=2)  # (B,S,K,V)
+    elif cfg.tie_embeddings:
+        logits = hf @ params["embed"]["tokens"].astype(jnp.float32).T
+    else:
+        logits = hf @ params["lm_head"].astype(jnp.float32)
+    if cfg.logit_scale is not None:
+        logits = logits * cfg.logit_scale
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return constrain(logits, ("batch", "seq", "vocab")) if not cfg.num_codebooks \
+        else logits
+
+
+def _vision_kv(params, vision_embeds, cfg: ArchConfig):
+    if vision_embeds is None:
+        return None
+    w = params["vision_proj"]["w"].astype(jnp.dtype(cfg.dtype))
+    return vision_embeds.astype(w.dtype) @ w      # (B, n_vis, D)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, vision_embeds=None,
+            collect_cache: bool = False):
+    """Full-sequence forward. Returns (logits, caches|None, aux_loss)."""
+    seq_axis = -1
+    s = tokens.shape[seq_axis]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    h = _embed(params, tokens, cfg, positions)
+    vis_kv = _vision_kv(params, vision_embeds, cfg)
+    h, caches, aux = T.apply_trunk_full(params["blocks"], h, cfg,
+                                        positions=positions, vis_kv=vis_kv,
+                                        collect_cache=collect_cache)
+    return _unembed(params, h, cfg), caches, aux
+
+
+def cross_entropy(logits, labels):
+    """Sharded-vocab-safe CE. logits f32 (..., V); labels int (...,)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    label_logit = jnp.sum(jnp.where(idx == labels[..., None], logits, 0.0),
+                          axis=-1)
+    return lse - label_logit
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Mean next-token CE (+ MoE aux). batch: tokens/labels (+vision)."""
+    logits, _, aux = forward(params, batch["tokens"], cfg,
+                             vision_embeds=batch.get("vision_embeds"))
+    if cfg.num_codebooks:
+        # logits (B,S,K,V); labels (B,K,S)
+        labels = batch["labels"].transpose(0, 2, 1)     # (B,S,K)
+        ce = cross_entropy(logits, labels)
+        loss = jnp.mean(ce)
+    else:
+        loss = jnp.mean(cross_entropy(logits, batch["labels"]))
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill_step(params, batch, cfg: ArchConfig):
+    """Prefill: full forward returning last-position logits + KV caches."""
+    logits, caches, _ = forward(params, batch["tokens"], cfg,
+                                vision_embeds=batch.get("vision_embeds"),
+                                collect_cache=True)
+    if cfg.num_codebooks:
+        last = logits[:, -1]                            # (B,K,V)
+    else:
+        last = logits[:, -1]                            # (B,V)
+    return last, caches
+
+
+def decode_step(params, tokens, pos, caches, cfg: ArchConfig, *,
+                vision_embeds=None):
+    """One-token decode. tokens: (B, 1) or (B, K, 1) [audio].
+
+    pos: () int32 — absolute position of the new token. Returns
+    (logits (B, 1, V|K,V), new_caches).
+    """
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    h = _embed(params, tokens, cfg, positions)
+    h, new_caches = T.apply_trunk_decode(params["blocks"], h, cfg, pos=pos,
+                                         caches=caches)
+    logits = _unembed(params, h, cfg)
+    return logits, new_caches
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

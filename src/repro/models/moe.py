@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, EP sharding.
+
+GShard-style dense dispatch: tokens are grouped per sequence, each group
+dispatches into (E, C) capacity slots with two one-hot factors, experts run
+as a single batched einsum over the expert-stacked weights (sharded over
+the "model"/EP axis), and results are combined with the routing gates.
+Over-capacity tokens are dropped (residual passes through) — the standard
+trade for static shapes on TPU. An auxiliary load-balancing loss (Switch
+Transformer form) is returned for the trainer.
+
+Routing follows OLMoE/Qwen3-MoE: softmax over experts, top-k, gate values
+renormalised over the selected k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, _pdt
+from repro.launch.sharding import constrain
+
+
+def init_moe(key, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, e), jnp.float32),
+        "w_gate": dense_init(kg, (e, d, f), _pdt(cfg)),
+        "w_up": dense_init(ku, (e, d, f), _pdt(cfg)),
+        "w_down": dense_init(kd, (e, f, d), _pdt(cfg), in_axis=1),
+    }
+
+
+MOE_GROUP = 4096
+
+
+def apply_moe(p, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss ()).
+
+    Long sequences are regrouped to (B·S/4096, 4096, D): dispatch groups
+    (and hence capacity) are per-4096-token blocks, keeping the staged
+    (group, L, E, C) dispatch tensor bounded — at S=32k the ungrouped
+    tensor is ~17 GB/chip (EXPERIMENTS §Dry-run). The leading (sharded)
+    batch dim stays leading, so the reshape is shard-local under GSPMD.
+    """
+    b, s, d = x.shape
+    if s > MOE_GROUP and s % MOE_GROUP == 0:
+        nc = s // MOE_GROUP
+        out, aux = apply_moe(p, x.reshape(b * nc, MOE_GROUP, d), cfg)
+        return out.reshape(b, s, d), aux
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cap = int(s * k * cfg.moe_capacity_factor / e) or 1
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                     # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balancing aux loss (fraction routed × router prob).
+    me = jnp.mean(probs, axis=(0, 1))                                   # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * cfg.moe_aux_loss_coef
+
+    # positions within each expert's capacity, per group (= per sequence)
+    onehot_e = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)         # (B,S,k,E)
+    flat = onehot_e.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                                # (B,S*k,E)
+    pos = pos.reshape(b, s, k, e)
+    in_cap = (pos < cap) & (onehot_e > 0)
+    slot = jnp.sum(pos * onehot_e, axis=-1)                             # (B,S,k)
+
+    onehot_c = jax.nn.one_hot(slot.astype(jnp.int32), cap,
+                              dtype=x.dtype) * in_cap.any(-1, keepdims=False
+                              ).astype(x.dtype)[..., None]              # (B,S,k,C)
+    disp_e = (onehot_e * in_cap).astype(x.dtype)                        # (B,S,k,E)
+
+    # dispatch, staged so GSPMD lowers the resharding as an expert-parallel
+    # all-to-all instead of all-gathering the one-hot masks (§Perf H3):
+    # (B,S,k,E)×(B,S,k,C) -> (B,S,E,C), then ×(B,S,D) -> (B,E,C,D)
+    disp = jnp.einsum("bske,bskc->bsec", disp_e, onehot_c)
+    x_disp = jnp.einsum("bsec,bsd->becd", disp, x)
+    x_disp = constrain(x_disp, ("batch_dp", "experts", None, "embed"))
+
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", x_disp, wg)) * jnp.einsum(
+        "becd,edf->becf", x_disp, wu)
+    y = jnp.einsum("becf,efd->becd", h, wd)                             # (B,E,C,D)
+    y = constrain(y, ("batch_dp", "experts", None, "embed"))
+
+    # combine with gates: weight (B,S,k) on the (E,C) slot of each choice
+    combine = disp * jnp.einsum("bske,bsk->bse", disp_e,
+                                gate_vals.astype(x.dtype))[..., None]
+    out = jnp.einsum("bsec,becd->bsd", combine, y)
+    return constrain(out, ("batch", "seq", "embed")), aux

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)            recurrence gate (block-diag linear)
+    i_t = σ(W_x x_t + b_x)            input gate      (block-diag linear)
+    a_t = exp(c · softplus(Λ) · (−r_t))   with c = 8, Λ learnable
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The linear recurrence is evaluated with ``jax.lax.associative_scan`` over
+the sequence axis — TPU-parallel, O(S log S) depth — which is the
+hardware adaptation of Griffin's custom linear-scan kernel (DESIGN.md §2).
+Decode carries h as O(1) state: this is what makes the arch long_500k-able.
+
+Block structure (Griffin recurrent block): norm → {linear → conv1d(4) →
+RG-LRU} ⊙ gelu(linear) → linear out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, _pdt
+from repro.launch.sharding import constrain
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig):
+    d = cfg.d_model
+    r = cfg.rnn_width or d
+    nb = cfg.num_heads                       # block-diagonal gate blocks
+    rb = r // nb
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, r), _pdt(cfg)),
+        "w_gate": dense_init(ks[1], (d, r), _pdt(cfg)),
+        "w_out": dense_init(ks[2], (r, d), _pdt(cfg)),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, r), _pdt(cfg)),
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": dense_init(ks[4], (nb, rb, rb), jnp.float32),
+        "w_input_gate": dense_init(ks[5], (nb, rb, rb), jnp.float32),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "b_input_gate": jnp.zeros((r,), jnp.float32),
+        # Λ init so a ≈ uniform(0.9, 0.999)^c at r=0.5 (Griffin appendix)
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, r)) / _C)).astype(jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width W. x: (B, S, R), w: (W, R).
+
+    state: (B, W-1, R) trailing inputs from the previous segment (decode).
+    Returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)             # (B, S+W-1, R)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return y + b.astype(y.dtype), new_state
+
+
+def _block_linear(x, w, b):
+    """Block-diagonal linear: x (..., R) with blocks (NB, RB, RB)."""
+    nb, rb, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, rb)
+    y = jnp.einsum("...nr,nrq->...nq", xs.astype(jnp.float32), w)
+    return y.reshape(*x.shape) + b
+
+
+def _gates(p, x):
+    """log a_t (f32) and gated input; x: (B, S, R)."""
+    r_t = jax.nn.sigmoid(_block_linear(x, p["w_a"], p["b_a"]))
+    i_t = jax.nn.sigmoid(_block_linear(x, p["w_input_gate"], p["b_input_gate"]))
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r_t       # (B,S,R), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i_t * x.astype(jnp.float32)
+    return log_a, gated_x
+
+
+def rglru_scan(p, x):
+    """Full-sequence RG-LRU via associative scan. x: (B, S, R) -> (B, S, R)."""
+    log_a, gx = _gates(p, x)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2_, b2 = c2
+        return a1 * a2_, a2_ * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x, h_prev):
+    """Single decode step. x: (B, 1, R), h_prev: (B, R) -> (y, h)."""
+    log_a, gx = _gates(p, x)
+    a = jnp.exp(log_a[:, 0])
+    h = a * h_prev + gx[:, 0]
+    return h[:, None, :].astype(x.dtype), h
+
+
+def init_recurrent_block(key, cfg: ArchConfig):
+    return {"rglru": init_rglru(key, cfg)}
+
+
+def apply_recurrent_block(p, x, cfg: ArchConfig, state=None):
+    """Griffin recurrent mixer. x: (B, S, D).
+
+    state: None (train/prefill) or {"h": (B,R) f32, "conv": (B,W-1,R)}.
+    Returns (out, new_state).
+    """
+    q = p["rglru"]
+    branch = x @ q["w_x"].astype(x.dtype)                    # (B, S, R)
+    branch = constrain(branch, ("batch", "seq", "rnn"))
+    gate = jax.nn.gelu(x @ q["w_gate"].astype(x.dtype), approximate=True)
+    if state is None:
+        conv_out, _ = _causal_conv(branch, q["conv_w"].astype(x.dtype),
+                                   q["conv_b"])
+        h = rglru_scan(q, conv_out)
+        new_state = None
+    else:
+        conv_out, conv_state = _causal_conv(
+            branch, q["conv_w"].astype(x.dtype), q["conv_b"], state["conv"])
+        y, h_new = rglru_step(q, conv_out, state["h"])
+        h = y
+        new_state = {"h": h_new, "conv": conv_state}
+    out = (h * gate) @ q["w_out"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def init_recurrent_state(cfg: ArchConfig, batch: int):
+    r = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), _pdt(cfg))}

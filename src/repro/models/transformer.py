@@ -1,0 +1,278 @@
+"""Generic decoder trunk: pattern superblocks, scan-over-layers, caches.
+
+Architectures are described by ``cfg.layer_pattern`` (e.g. gemma2 =
+("local", "attn"), recurrentgemma = ("rglru", "rglru", "local")). Layers
+are grouped into *repeats* of the pattern; parameters of each pattern
+position are stacked over repeats and the whole trunk runs as one
+``lax.scan`` (+ per-repeat ``jax.checkpoint`` in training) — compile time
+and HLO size are O(pattern), not O(num_layers). Layers beyond the last
+full repeat ("tail") run unscanned.
+
+Block kinds: attn | local | cross | rglru | slstm | mlstm. Every kind is a
+pre-norm residual mixer; attention-family blocks are followed by a second
+residual MLP/MoE sub-block (xLSTM kinds are self-contained, cfg.d_ff == 0).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+from repro.launch.sharding import constrain
+
+ATTN_KINDS = ("attn", "local", "cross")
+
+
+# ----------------------------------------------------------------- blocks --
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    p: dict = {"pre_norm": L.init_norm(cfg)}
+    if kind in ATTN_KINDS:
+        p["attn"] = L.init_attention(ks[0], cfg, cross=(kind == "cross"))
+        if kind == "cross":
+            p["gate_attn"] = jnp.zeros((), jnp.float32)
+            p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    elif kind == "rglru":
+        p.update(rg.init_recurrent_block(ks[0], cfg))
+    elif kind == "mlstm":
+        p["mlstm"] = xl.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = xl.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        p["post_norm"] = L.init_norm(cfg)
+    if kind not in ("mlstm", "slstm"):
+        p["pre_mlp_norm"] = L.init_norm(cfg)
+        if cfg.moe_experts:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        if cfg.post_norms:
+            p["post_mlp_norm"] = L.init_norm(cfg)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int):
+    """Static-shape decode cache for one block."""
+    dt = jnp.dtype(cfg.dtype)
+    if kind in ("attn", "local", "cross"):
+        if kind == "cross":
+            cap = cfg.vision_tokens
+        elif kind == "local":
+            cap = min(cfg.local_window or cache_len, cache_len)
+        else:
+            cap = cache_len
+        shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.kv_quant and kind != "cross":
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                    "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if kind == "rglru":
+        state = rg.init_recurrent_state(cfg, batch)
+        cap = min(cfg.local_window or cache_len, cache_len)
+        return state
+    if kind == "mlstm":
+        return xl.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xl.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _residual(x, out, p, cfg: ArchConfig, post_key: str):
+    if cfg.post_norms and post_key in p:
+        out = L.apply_norm(p[post_key], out, cfg)
+    if cfg.residual_scale is not None:
+        out = out * cfg.residual_scale
+    return x + out
+
+
+def apply_block_full(p, x, kind: str, cfg: ArchConfig, *, positions,
+                     vis_kv=None):
+    """Train/prefill block. Returns (x, cache_init_or_None, aux_loss)."""
+    h = L.apply_norm(p["pre_norm"], x, cfg)
+    cache = None
+    if kind in ATTN_KINDS:
+        window = cfg.local_window if kind == "local" else None
+        out, (k, v) = L.attention_full(
+            p["attn"], h, cfg, positions=positions, window=window,
+            kv_src=vis_kv if kind == "cross" else None)
+        if kind == "cross":
+            out = out * jnp.tanh(p["gate_attn"]).astype(out.dtype)
+            cache = {"k": k, "v": v}
+        elif cfg.kv_quant:
+            kq, ks = L.quantize_kv(k)
+            vq, vs = L.quantize_kv(v)
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            cache = {"k": k, "v": v}
+    elif kind == "rglru":
+        out, _ = rg.apply_recurrent_block(p, h, cfg)
+    elif kind == "mlstm":
+        out, _ = xl.apply_mlstm(p["mlstm"], h, cfg)
+    elif kind == "slstm":
+        out, _ = xl.apply_slstm(p["slstm"], h, cfg)
+    x = _residual(x, out, p, cfg, "post_norm")
+
+    aux = jnp.zeros((), jnp.float32)
+    if kind not in ("mlstm", "slstm"):
+        h2 = L.apply_norm(p["pre_mlp_norm"], x, cfg)
+        if cfg.moe_experts:
+            out2, aux = moe_lib.apply_moe(p["moe"], h2, cfg)
+        else:
+            out2 = L.apply_mlp(p["mlp"], h2, cfg)
+        if kind == "cross":
+            out2 = out2 * jnp.tanh(p["gate_mlp"]).astype(out2.dtype)
+        x = _residual(x, out2, p, cfg, "post_mlp_norm")
+    return x, cache, aux
+
+
+def apply_block_decode(p, x, kind: str, cfg: ArchConfig, *, pos, cache):
+    """Single-token decode block. Returns (x, new_cache)."""
+    h = L.apply_norm(p["pre_norm"], x, cfg)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        out, new_cache = L.attention_decode(
+            p["attn"], h, cfg, cache_k=cache["k"], cache_v=cache["v"],
+            pos=pos, window=window,
+            cache_k_scale=cache.get("k_scale"),
+            cache_v_scale=cache.get("v_scale"))
+    elif kind == "cross":
+        out = L.cross_attention_decode(p["attn"], h, cfg, cross_k=cache["k"],
+                                       cross_v=cache["v"])
+        out = out * jnp.tanh(p["gate_attn"]).astype(out.dtype)
+        new_cache = cache
+    elif kind == "rglru":
+        out, new_cache = rg.apply_recurrent_block(p, h, cfg, state=cache)
+    elif kind == "mlstm":
+        out, new_cache = xl.apply_mlstm(p["mlstm"], h, cfg, state=cache)
+    elif kind == "slstm":
+        out, new_cache = xl.apply_slstm(p["slstm"], h, cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    x = _residual(x, out, p, cfg, "post_norm")
+
+    if kind not in ("mlstm", "slstm"):
+        h2 = L.apply_norm(p["pre_mlp_norm"], x, cfg)
+        if cfg.moe_experts:
+            out2, _ = moe_lib.apply_moe(p["moe"], h2, cfg)
+        else:
+            out2 = L.apply_mlp(p["mlp"], h2, cfg)
+        if kind == "cross":
+            out2 = out2 * jnp.tanh(p["gate_mlp"]).astype(out2.dtype)
+        x = _residual(x, out2, p, cfg, "post_mlp_norm")
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ trunk --
+
+def _pattern_split(cfg: ArchConfig):
+    pat = cfg.layer_pattern
+    n_rep = cfg.num_layers // len(pat)
+    tail = cfg.layer_kinds[n_rep * len(pat):]
+    return pat, n_rep, tail
+
+
+def init_trunk(key, cfg: ArchConfig):
+    pat, n_rep, tail = _pattern_split(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    stack = []
+    for pos, kind in enumerate(pat):
+        per_rep = [init_block(keys[r * len(pat) + pos], cfg, kind)
+                   for r in range(n_rep)]
+        stack.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+                     if n_rep > 1 else jax.tree.map(lambda t: t[None], per_rep[0]))
+    tail_p = [init_block(keys[n_rep * len(pat) + i], cfg, kind)
+              for i, kind in enumerate(tail)]
+    return {"stack": stack, "tail": tail_p}
+
+
+def init_trunk_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    pat, n_rep, tail = _pattern_split(cfg)
+    stack = []
+    for kind in pat:
+        one = init_block_cache(cfg, kind, batch, cache_len)
+        stack.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n_rep,) + t.shape), one))
+    tail_c = [init_block_cache(cfg, kind, batch, cache_len) for kind in tail]
+    return {"stack": stack, "tail": tail_c}
+
+
+def apply_trunk_full(trunk, x, cfg: ArchConfig, *, positions, vis_kv=None,
+                     collect_cache: bool = False):
+    """Returns (x, caches_or_None, aux_loss_sum)."""
+    pat, n_rep, tail = _pattern_split(cfg)
+
+    def repeat_body(carry, rep_params):
+        h, aux = carry
+        caches = []
+        for pos, kind in enumerate(pat):
+            h, cache, a = apply_block_full(rep_params[pos], h, kind, cfg,
+                                           positions=positions, vis_kv=vis_kv)
+            aux = aux + a
+            if collect_cache:
+                caches.append(cache)
+        return (h, aux), caches if collect_cache else None
+
+    body = repeat_body
+    if cfg.remat:
+        body = jax.checkpoint(repeat_body, prevent_cse=False)
+
+    (x, aux), stack_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), tuple(trunk["stack"]))
+
+    tail_caches = []
+    for i, kind in enumerate(tail):
+        x, cache, a = apply_block_full(trunk["tail"][i], x, kind, cfg,
+                                       positions=positions, vis_kv=vis_kv)
+        aux = aux + a
+        if collect_cache:
+            tail_caches.append(cache)
+    caches = ({"stack": stack_caches, "tail": tail_caches}
+              if collect_cache else None)
+    return x, caches, aux
+
+
+def apply_trunk_decode(trunk, x, cfg: ArchConfig, *, pos, caches):
+    """Caches ride in the scan CARRY (updated in place with a one-hot-slot
+    dynamic_update_slice per repeat) rather than as xs→ys: while-loop
+    carries alias their buffers, so the multi-GB KV cache is single-
+    buffered instead of holding separate input and output copies."""
+    pat, n_rep, tail = _pattern_split(cfg)
+    rep_idx = jnp.arange(n_rep)
+
+    def repeat_body(carry, rep_in):
+        h, all_caches = carry
+        rep_params, r = rep_in
+        rep_cache = jax.tree.map(lambda c: c[r], all_caches)
+        new_caches = []
+        for i, kind in enumerate(pat):
+            h, nc = apply_block_decode(rep_params[i], h, kind, cfg, pos=pos,
+                                       cache=rep_cache[i])
+            new_caches.append(nc)
+        all_caches = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), r, 0),
+            all_caches, new_caches)
+        return (h, all_caches), None
+
+    (x, new_stack), _ = jax.lax.scan(
+        repeat_body, (x, caches["stack"]), (tuple(trunk["stack"]), rep_idx))
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, nc = apply_block_decode(trunk["tail"][i], x, kind, cfg, pos=pos,
+                                   cache=caches["tail"][i])
+        new_tail.append(nc)
+    return x, {"stack": new_stack, "tail": new_tail}

@@ -1,0 +1,51 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+At 1000+ node scale the data-parallel gradient all-reduce dominates the
+step's collective bytes. Quantising gradients to int8 with a per-tensor
+scale cuts those bytes 4x (vs f32 grads); the quantisation error is fed
+back into the next step's gradient (error feedback, à la 1-bit SGD /
+PowerSGD practice) so convergence is preserved.
+
+The transform is applied *before* the optimizer consumes the (already
+psum-med) gradients in this single-controller setting; on a real fleet the
+quantised representation is what crosses the DCN (the all-reduce is then
+performed in int8 blocks with f32 scales). The numerics — quantise,
+dequantise, error-feedback — are identical, which is what the tests and
+convergence checks validate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_decompress"]
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err):
+    """Per-leaf int8 round-trip with error feedback.
+
+    grads, err: matching f32 pytrees. Returns (decompressed grads, new err).
+    """
+    def one(g, e):
+        g_fb = g + e
+        q, s = quantize_int8(g_fb)
+        deq = dequantize_int8(q, s)
+        return deq, g_fb - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deqs = treedef.unflatten([o[0] for o in out])
+    errs = treedef.unflatten([o[1] for o in out])
+    return deqs, errs

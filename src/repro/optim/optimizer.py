@@ -1,0 +1,129 @@
+"""AdamW optimizer with bf16-param / f32-master mixed precision, LR
+schedules (cosine + MiniCPM's WSD), global-norm clipping, and optional
+int8 error-feedback gradient compression.
+
+No optax dependency (offline container): a small, explicit implementation
+whose state pytree mirrors the param tree — which is exactly what lets the
+ZeRO-1 sharding rules (repro.launch.sharding.opt_state_spec) shard the
+master/moment tensors over the "data" axis independently of the bf16
+params' TP layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import compression
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_updates", "wsd_schedule",
+           "cosine_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"          # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: fraction of steps in decay phase
+    compress_grads: bool = False      # int8 error-feedback DP compression
+
+
+def cosine_schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr_peak * warm * (0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+
+
+def wsd_schedule(step, cfg: AdamWConfig):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4): linear warmup,
+    long stable plateau at peak LR, short exponential-ish decay tail."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_steps = int(cfg.total_steps * cfg.decay_frac)
+    decay_start = cfg.total_steps - decay_steps
+    in_decay = (step - decay_start) / jnp.maximum(decay_steps, 1)
+    decay = jnp.where(step >= decay_start,
+                      0.5 ** jnp.clip(in_decay, 0.0, 1.0) * 2.0
+                      * 0.5 ** (3.0 * jnp.clip(in_decay, 0.0, 1.0)), 1.0)
+    return cfg.lr_peak * warm * jnp.minimum(decay, 1.0)
+
+
+def _lr(step, cfg: AdamWConfig):
+    if cfg.schedule == "wsd":
+        return wsd_schedule(step, cfg)
+    if cfg.schedule == "cosine":
+        return cosine_schedule(step, cfg)
+    return jnp.asarray(cfg.lr_peak)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    master: dict       # f32 master params
+    mu: dict           # first moment (f32)
+    nu: dict           # second moment (f32)
+    err: Optional[dict]  # compression error feedback (f32) or None
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    # copy=True: the f32 master must never alias the (donatable) params
+    f32 = lambda t: jnp.array(t, dtype=jnp.float32, copy=True)
+    zeros = lambda t: jnp.zeros(t.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        err=jax.tree.map(zeros, params) if cfg.compress_grads else None,
+    )
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params (param_dtype), new_state, stats)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    err = state.err
+    if cfg.compress_grads:
+        grads, err = compression.compress_decompress(grads, state.err)
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    lr = _lr(step, cfg)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(m, g):
+        return cfg.b1 * m + (1 - cfg.b1) * g
+
+    def upd2(v, g):
+        return cfg.b2 * v + (1 - cfg.b2) * g * g
+
+    mu = jax.tree.map(upd, state.mu, grads)
+    nu = jax.tree.map(upd2, state.nu, grads)
+
+    def new_master(w, m, v):
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        return w - lr * (update + cfg.weight_decay * w)
+
+    master = jax.tree.map(new_master, state.master, mu, nu)
+    new_params = jax.tree.map(lambda w, old: w.astype(old.dtype), master, params)
+    new_state = OptState(step=step, master=master, mu=mu, nu=nu, err=err)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

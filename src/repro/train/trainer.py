@@ -1,0 +1,126 @@
+"""Training loop with fault tolerance: checkpoint/restart, straggler
+monitoring, non-finite-step skipping, elastic mesh restore.
+
+Single-controller JAX: the same loop drives 1 CPU device (smoke) or a
+512-chip mesh (via shardings from repro.launch.sharding); on a fleet the
+controller restarts after failures and resumes from ``latest_step`` —
+including onto a *different* mesh (elastic), because restore places
+arrays against the new job's sharding tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.optim import optimizer as O
+from repro.train import checkpoint as ckpt
+from repro.train import steps as steps_lib
+from repro.train.straggler import StepTimeMonitor
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+    skip_nonfinite: bool = True
+    straggler_threshold: float = 2.5
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt_cfg: O.AdamWConfig,
+                 tcfg: TrainerConfig, stream: TokenStream,
+                 mesh=None, shardings: Optional[tuple] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.stream = stream
+        self.mesh = mesh
+        self.monitor = StepTimeMonitor(threshold=tcfg.straggler_threshold)
+        self.metrics_log: list[dict] = []
+
+        self.params, self.opt_state = steps_lib.init_train_state(
+            jax.random.PRNGKey(seed), cfg, opt_cfg)
+        self._step_fn = jax.jit(steps_lib.make_train_step(cfg, opt_cfg),
+                                donate_argnums=(0, 1))
+        self.start_step = 0
+        self._maybe_restore()
+
+    # ------------------------------------------------------------- resume --
+    def _maybe_restore(self):
+        last = ckpt.latest_step(self.tcfg.checkpoint_dir)
+        if last is None:
+            return
+        state = {"params": self.params, "opt_state": self.opt_state}
+        restored, meta = ckpt.restore(self.tcfg.checkpoint_dir, last, state)
+        self.params = restored["params"]
+        self.opt_state = restored["opt_state"]
+        self.start_step = last
+        if "data" in meta:
+            self.stream = TokenStream.restore(self.stream.cfg, meta["data"])
+        print(f"[trainer] restored step {last} from {self.tcfg.checkpoint_dir}")
+
+    def _checkpoint(self, step: int):
+        ckpt.save_async(
+            self.tcfg.checkpoint_dir, step,
+            {"params": self.params, "opt_state": self.opt_state},
+            metadata={"data": self.stream.checkpoint_state(),
+                      "arch": self.cfg.name},
+            keep=self.tcfg.keep_checkpoints)
+
+    # --------------------------------------------------------------- loop --
+    def run(self) -> dict:
+        t_total = time.time()
+        skipped = 0
+        for step in range(self.start_step, self.tcfg.total_steps):
+            batch = self.stream.next_batch()
+            t0 = time.time()
+            new_params, new_opt, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+
+            if self.tcfg.skip_nonfinite and not np.isfinite(loss):
+                # fault tolerance: drop the update, keep going
+                skipped += 1
+                print(f"[trainer] step {step}: non-finite loss, skipped")
+                continue
+            self.params, self.opt_state = new_params, new_opt
+
+            if self.monitor.record(step, dt):
+                print(f"[trainer] step {step}: straggler "
+                      f"({dt:.2f}s vs median {self.monitor.median:.2f}s)")
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                entry = {"step": step, "loss": loss,
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "lr": float(metrics["lr"]), "sec": dt}
+                self.metrics_log.append(entry)
+                print(f"[trainer] step {step} loss={loss:.4f} "
+                      f"gnorm={entry['grad_norm']:.3f} lr={entry['lr']:.2e} "
+                      f"({dt:.2f}s)")
+            if (step + 1) % self.tcfg.checkpoint_every == 0:
+                self._checkpoint(step + 1)
+
+        ckpt.wait_for_pending()
+        return {
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "steps": self.tcfg.total_steps - self.start_step,
+            "skipped": skipped,
+            "straggler_events": len(self.monitor.events),
+            "wall_s": time.time() - t_total,
+            "log": self.metrics_log,
+        }

@@ -1,0 +1,145 @@
+"""Exactness of the analytical CV approach for binary LDA (paper Eq. 14/15).
+
+The central claim: the analytical decision values equal, to machine
+precision, the decision values of a regression-form model *retrained from
+scratch* on every training fold. We verify both hat-matrix paths
+(primal/dual), k-fold and LOO, N>P and P>N regimes, and the bias
+adjustment against explicitly recomputed LDA biases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastcv, folds as foldlib, lda, metrics
+from repro.data import synthetic
+
+
+def _data(n, p, seed=0, classes=2):
+    return synthetic.make_classification(jax.random.PRNGKey(seed), n, p, classes)
+
+
+@pytest.mark.parametrize("n,p,k,lam", [
+    (60, 10, 5, 0.0),       # N > P, unregularised, primal
+    (60, 10, 5, 1.0),       # N > P, ridge
+    (64, 40, 8, 0.1),       # N > P
+    (40, 200, 5, 1.0),      # P >> N (paper's regime), dual path
+    (30, 500, 10, 10.0),    # P >> N, strong ridge
+])
+def test_analytical_equals_retrained_regression(n, p, k, lam):
+    x, yc = _data(n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=1)
+    dv_fast, y_te = fastcv.binary_cv(x, y, f, lam=lam, adjust_bias=False)
+    dv_std, y_te_std = lda.standard_cv_binary(x, y, f, lam=lam, form="regression")
+    np.testing.assert_allclose(np.asarray(dv_fast), np.asarray(dv_std),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_array_equal(np.asarray(y_te), np.asarray(y_te_std))
+
+
+def test_loo_matches_retrained():
+    n, p = 40, 12
+    x, yc = _data(n, p, seed=3)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.loo(n)
+    dv_fast, _ = fastcv.binary_cv(x, y, f, lam=0.5, adjust_bias=False)
+    dv_std, _ = lda.standard_cv_binary(x, y, f, lam=0.5, form="regression")
+    np.testing.assert_allclose(np.asarray(dv_fast), np.asarray(dv_std),
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_primal_dual_hat_matrices_agree():
+    n, p, lam = 50, 30, 2.0
+    x, _ = _data(n, p, seed=5)
+    h_primal = fastcv.hat_matrix_primal(x, lam)
+    h_dual = fastcv.hat_matrix_dual(x, lam)
+    np.testing.assert_allclose(np.asarray(h_primal), np.asarray(h_dual),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_hat_matrix_maps_y_to_fullfit_predictions():
+    n, p, lam = 80, 20, 1.5
+    x, yc = _data(n, p, seed=7)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    h = fastcv.hat_matrix(x, lam)
+    w, b = lda.fit_binary_regression(x, y, lam)
+    np.testing.assert_allclose(np.asarray(h @ y), np.asarray(x @ w + b),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_hat_matrix_reproduces_constants():
+    """H·1 = 1 — the unpenalised intercept reproduces constant responses."""
+    n, p = 30, 100
+    x, _ = _data(n, p, seed=11)
+    h = fastcv.hat_matrix(x, 3.0)
+    np.testing.assert_allclose(np.asarray(h @ jnp.ones(n)), np.ones(n),
+                               rtol=0, atol=1e-9)
+
+
+def test_bias_adjustment_matches_explicit_lda_bias():
+    """dvals with adjust_bias must equal x·ẇ + b_LDA(ẇ) for the retrained
+    regression-form ẇ with the bias replaced per paper Eq. (4)."""
+    n, p, k, lam = 60, 15, 5, 0.7
+    key = jax.random.PRNGKey(13)
+    x = jax.random.normal(key, (n, p), jnp.float64)
+    # unbalanced classes: 2/3 vs 1/3 (bias adjustment actually matters)
+    yc = (jnp.arange(n) % 3 == 0).astype(jnp.int32)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=2)
+    dv_fast, _ = fastcv.binary_cv(x, y, f, lam=lam, adjust_bias=True)
+
+    dv_expected = []
+    for i in range(f.k):
+        tr = np.asarray(f.tr_idx[i])
+        te = np.asarray(f.te_idx[i])
+        w, _ = lda.fit_binary_regression(x[tr], y[tr], lam)
+        m1 = jnp.mean(x[tr][np.asarray(y)[tr] > 0], axis=0)
+        m2 = jnp.mean(x[tr][np.asarray(y)[tr] < 0], axis=0)
+        b_lda = -0.5 * jnp.dot(w, m1 + m2)
+        dv_expected.append(np.asarray(x[te] @ w + b_lda))
+    np.testing.assert_allclose(np.asarray(dv_fast), np.stack(dv_expected),
+                               rtol=1e-7, atol=1e-8)
+
+
+def test_regression_form_direction_matches_lda(seed=17):
+    """Appendix A: regression-form w ∝ (S_w+λI)⁻¹(m1−m2)."""
+    n, p, lam = 100, 20, 0.3
+    x, yc = _data(n, p, seed=seed)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    w_reg, _ = lda.fit_binary_regression(x, y, lam)
+    model = lda.fit_binary(x, y, lam)
+    cos = jnp.dot(w_reg, model.w) / (jnp.linalg.norm(w_reg) * jnp.linalg.norm(model.w))
+    assert abs(float(cos)) > 1.0 - 1e-10
+
+
+def test_accuracy_matches_standard_lda_predictions():
+    """Predicted labels from the analytical approach equal the standard
+    (direct-LDA, retrained) predictions — equal accuracy per fold."""
+    n, p, k, lam = 90, 45, 6, 1.0
+    x, yc = _data(n, p, seed=19)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.stratified_kfold(np.asarray(yc), k, seed=3)
+    dv_fast, y_te = fastcv.binary_cv(x, y, f, lam=lam, adjust_bias=True)
+    dv_std, _ = lda.standard_cv_binary(x, y, f, lam=lam, form="lda")
+    # decision values differ by a positive per-fold scale (App. A), labels agree
+    np.testing.assert_array_equal(np.asarray(dv_fast) >= 0, np.asarray(dv_std) >= 0)
+    acc_fast = metrics.binary_accuracy(dv_fast, y_te)
+    acc_std = metrics.binary_accuracy(dv_std, y_te)
+    assert float(acc_fast) == pytest.approx(float(acc_std))
+
+
+def test_batched_labels_match_loop():
+    """(N, B) label batches (permutation path) ≡ per-vector evaluation."""
+    n, p, k, lam = 48, 96, 4, 2.0
+    x, yc = _data(n, p, seed=23)
+    f = foldlib.kfold(n, k, seed=4)
+    plan = fastcv.prepare(x, f, lam)
+    rng = np.random.default_rng(0)
+    ys = np.stack([rng.permutation(np.where(np.asarray(yc) == 0, -1.0, 1.0))
+                   for _ in range(5)], axis=1)  # (N, 5)
+    batched = fastcv.binary_dvals(plan, jnp.asarray(ys))
+    for b in range(5):
+        single = fastcv.binary_dvals(plan, jnp.asarray(ys[:, b]))
+        np.testing.assert_allclose(np.asarray(batched[..., b]),
+                                   np.asarray(single), rtol=1e-10, atol=1e-12)

@@ -1,0 +1,102 @@
+"""Exactness of the analytical multi-class LDA CV (paper §2.10, Alg. 2).
+
+Chain of equivalences verified:
+  1. step-1 CV regression fits Ẏ ≡ retrained multivariate ridge fits
+  2. optimal-scoring W ≡ direct-LDA W (Hastie 1995, paper Eq. 20)
+  3. analytical CV predictions ≡ standard retrained direct-LDA predictions
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastcv, folds as foldlib, metrics, multiclass
+from repro.data import synthetic
+
+
+def _data(n, p, c, seed=0, sep=2.0):
+    return synthetic.make_classification(jax.random.PRNGKey(seed), n, p, c,
+                                         class_sep=sep)
+
+
+@pytest.mark.parametrize("n,p,c,k,lam", [
+    (60, 10, 3, 5, 0.5),
+    (90, 30, 5, 6, 1.0),
+    (40, 120, 4, 5, 2.0),    # P >> N dual path
+])
+def test_step1_fits_match_retrained_multivariate_ridge(n, p, c, k, lam):
+    x, y = _data(n, p, c)
+    y1h = multiclass.onehot(y, c)
+    f = foldlib.kfold(n, k, seed=1)
+    plan = fastcv.prepare(x, f, lam)
+    y_dot_te, y_dot_tr = fastcv.cv_errors(plan, y1h)
+
+    xa = jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+    i0 = jnp.eye(p + 1, dtype=x.dtype).at[p, p].set(0.0)
+    for i in range(f.k):
+        tr = np.asarray(f.tr_idx[i]); te = np.asarray(f.te_idx[i])
+        a = xa[tr].T @ xa[tr] + lam * i0
+        b = jnp.linalg.solve(a, xa[tr].T @ y1h[tr])
+        np.testing.assert_allclose(np.asarray(y_dot_te[i]),
+                                   np.asarray(xa[te] @ b), rtol=1e-7, atol=1e-8)
+        np.testing.assert_allclose(np.asarray(y_dot_tr[i]),
+                                   np.asarray(xa[tr] @ b), rtol=1e-7, atol=1e-8)
+
+
+@pytest.mark.parametrize("balanced", [True, False])
+def test_optimal_scoring_equals_direct_lda(balanced):
+    n, p, c, lam = 120, 15, 4, 0.8
+    x, y = _data(n, p, c, seed=2)
+    if not balanced:
+        # skew: relabel a third of class 0 as class 1
+        y = jnp.where((jnp.arange(n) % 9 == 0) & (y == 0), 1, y)
+    y1h = multiclass.onehot(y, c)
+    w_os, a2 = multiclass.optimal_scoring_fit(x, y1h, lam)
+    model = multiclass.fit_multiclass(x, y1h, lam)
+    # columns equal up to sign
+    for j in range(c - 1):
+        cos = jnp.dot(w_os[:, j], model.w[:, j]) / (
+            jnp.linalg.norm(w_os[:, j]) * jnp.linalg.norm(model.w[:, j]))
+        assert abs(float(cos)) > 1 - 1e-8, f"column {j}: |cos|={abs(float(cos))}"
+        ratio = jnp.linalg.norm(w_os[:, j]) / jnp.linalg.norm(model.w[:, j])
+        assert float(ratio) == pytest.approx(1.0, rel=1e-6), f"column {j} scale"
+    assert np.all(np.asarray(a2) < 1.0) and np.all(np.asarray(a2) > 0.0)
+
+
+@pytest.mark.parametrize("n,p,c,k,lam", [
+    (100, 20, 5, 5, 0.5),
+    (100, 20, 10, 10, 1.0),
+    (60, 200, 5, 6, 3.0),    # P >> N
+])
+def test_analytical_predictions_match_standard(n, p, c, k, lam):
+    x, y = _data(n, p, c, seed=4)
+    f = foldlib.stratified_kfold(np.asarray(y), k, seed=3)
+    pred_fast, y_te = multiclass.analytical_cv_multiclass(x, y, f, c, lam)
+    pred_std, y_te_std = multiclass.standard_cv_multiclass(x, y, f, c, lam)
+    np.testing.assert_array_equal(np.asarray(y_te), np.asarray(y_te_std))
+    np.testing.assert_array_equal(np.asarray(pred_fast), np.asarray(pred_std))
+
+
+def test_accuracy_beats_chance_on_separable_data():
+    n, p, c = 150, 30, 3
+    x, y = _data(n, p, c, seed=6, sep=4.0)
+    f = foldlib.stratified_kfold(np.asarray(y), 5, seed=1)
+    pred, y_te = multiclass.analytical_cv_multiclass(x, y, f, c, lam=1.0)
+    acc = float(metrics.multiclass_accuracy(pred, y_te))
+    assert acc > 0.8, acc
+
+
+def test_trivial_eigenpair_is_exact():
+    """M θ = α² D_π θ has the exact pair (α²=1, θ=1_C) — §multiclass docs."""
+    n, p, c, lam = 80, 25, 4, 1.0
+    x, y = _data(n, p, c, seed=8)
+    y1h = multiclass.onehot(y, c)
+    xa = jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+    i0 = jnp.eye(p + 1, dtype=x.dtype).at[p, p].set(0.0)
+    b = jnp.linalg.solve(xa.T @ xa + lam * i0, xa.T @ y1h)
+    m = (xa @ b).T @ y1h / n
+    d_pi = jnp.sum(y1h, axis=0) / n
+    lhs = m @ jnp.ones(c)
+    rhs = d_pi * 1.0
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-9)

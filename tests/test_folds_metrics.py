@@ -1,0 +1,101 @@
+"""Fold construction and metric correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import folds as foldlib, metrics, shrinkage
+from repro.data import synthetic
+
+
+def test_kfold_partition_properties():
+    f = foldlib.kfold(103, 5, seed=0)
+    te = np.asarray(f.te_idx)
+    tr = np.asarray(f.tr_idx)
+    assert te.shape == (5, 20)
+    assert tr.shape == (5, 83)
+    for i in range(5):
+        assert len(np.intersect1d(te[i], tr[i])) == 0
+        assert len(np.union1d(te[i], tr[i])) == 103
+    # test sets are disjoint across folds
+    flat = te.reshape(-1)
+    assert len(np.unique(flat)) == len(flat)
+
+
+def test_loo():
+    f = foldlib.loo(7)
+    assert f.k == 7 and f.test_size == 1
+    np.testing.assert_array_equal(np.sort(np.asarray(f.te_idx).ravel()),
+                                  np.arange(7))
+
+
+def test_stratified_preserves_proportions():
+    y = np.array([0] * 60 + [1] * 30 + [2] * 30)
+    f = foldlib.stratified_kfold(y, 5, seed=1)
+    for i in range(5):
+        labels = y[np.asarray(f.te_idx[i])]
+        counts = np.bincount(labels, minlength=3)
+        assert counts[0] >= counts[1] and counts[0] >= counts[2]
+        assert counts.min() >= 1
+
+
+def test_auc_against_sklearn_style_reference():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        d = rng.standard_normal(50)
+        y = np.where(rng.random(50) > 0.4, 1.0, -1.0)
+        # reference: probability a positive outranks a negative (ties=0.5)
+        pos, neg = d[y > 0], d[y < 0]
+        cmp = (pos[:, None] > neg[None, :]).mean() + 0.5 * (
+            pos[:, None] == neg[None, :]).mean()
+        got = float(metrics.auc(jnp.asarray(d), jnp.asarray(y)))
+        assert got == pytest.approx(float(cmp), abs=1e-9)
+
+
+def test_auc_handles_ties():
+    d = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    y = jnp.asarray([1.0, -1.0, 1.0, -1.0])
+    assert float(metrics.auc(d, y)) == pytest.approx(0.5)
+
+
+def test_auc_bias_invariance():
+    """Paper §2.5: AUC does not depend on the bias term."""
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(rng.standard_normal(40))
+    y = jnp.asarray(np.where(rng.random(40) > 0.5, 1.0, -1.0))
+    a1 = float(metrics.auc(d, y))
+    a2 = float(metrics.auc(d + 37.5, y))
+    assert a1 == pytest.approx(a2, abs=1e-12)
+
+
+def test_confusion_matrix():
+    pred = jnp.asarray([0, 1, 2, 1, 0])
+    y = jnp.asarray([0, 1, 1, 1, 2])
+    cm = np.asarray(metrics.confusion_matrix(pred, y, 3))
+    assert cm[0, 0] == 1 and cm[1, 1] == 2 and cm[1, 2] == 1 and cm[2, 0] == 1
+    assert cm.sum() == 5
+
+
+def test_shrink_to_ridge_equivalence():
+    """Eq. 18: shrinkage-regularised and converted-ridge scatter matrices are
+    proportional -> identical classifiers up to dval scaling."""
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(0), 50, 20)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    from repro.core import lda
+    sw, m1, m2 = lda.scatter_within(x, y)
+    p = x.shape[1]
+    nu = shrinkage.trace_scaling(x, y)
+    lam_s = 0.3
+    lam_r = float(shrinkage.shrink_to_ridge(lam_s, nu))
+    a_shrink = (1 - lam_s) * sw + lam_s * nu * jnp.eye(p)
+    a_ridge = sw + lam_r * jnp.eye(p)
+    ratio = np.asarray(a_shrink) / np.asarray(a_ridge)
+    np.testing.assert_allclose(ratio, (1 - lam_s) * np.ones_like(ratio),
+                               rtol=1e-9)
+
+
+def test_ledoit_wolf_in_unit_interval():
+    x, _ = synthetic.make_classification(jax.random.PRNGKey(1), 40, 60)
+    lw = float(shrinkage.ledoit_wolf_lambda(x))
+    assert 0.0 <= lw <= 1.0

@@ -1,0 +1,180 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernels target TPU; interpret
+executes the kernel bodies exactly). Tolerances: f64 near-exact; f32/bf16
+allow accumulation-order noise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gram.ops import gram, centered_gram
+from repro.kernels.gram.ref import gram_ref, centered_gram_ref
+from repro.kernels.hat_apply.ops import hat_errors
+from repro.kernels.hat_apply.ref import hat_apply_ref
+from repro.kernels.foldsolve.ops import foldsolve
+from repro.kernels.foldsolve.ref import foldsolve_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+_TOL = {
+    jnp.float64: dict(rtol=1e-9, atol=1e-9),
+    jnp.float32: dict(rtol=2e-3, atol=2e-3),
+}
+
+
+def _key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------- gram ----
+
+@pytest.mark.parametrize("n,p", [(8, 16), (100, 300), (256, 512), (130, 70),
+                                 (33, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_gram_sweep(n, p, dtype):
+    x = jax.random.normal(_key(n + p), (n, p), dtype)
+    got = gram(x, interpret=True)
+    want = gram_ref(x)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_TOL[dtype]["rtol"],
+                               atol=_TOL[dtype]["atol"] * scale)
+
+
+def test_centered_gram():
+    x = jax.random.normal(_key(3), (64, 200), jnp.float64)
+    np.testing.assert_allclose(np.asarray(centered_gram(x, interpret=True)),
+                               np.asarray(centered_gram_ref(x)), rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_gram_block_shapes():
+    x = jax.random.normal(_key(5), (96, 160), jnp.float64)
+    want = gram_ref(x)
+    for bn, bp in [(32, 32), (48, 80), (96, 160)]:
+        got = gram(x, block_n=bn, block_p=bp, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-9)
+
+
+# ----------------------------------------------------------- hat_apply ----
+
+@pytest.mark.parametrize("n,b", [(16, 1), (100, 7), (256, 128), (73, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_hat_apply_sweep(n, b, dtype):
+    h = jax.random.normal(_key(n), (n, n), dtype) / n
+    y = jax.random.normal(_key(b + 1), (n, b), dtype)
+    got = hat_errors(h, y, interpret=True)
+    want = hat_apply_ref(h, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL[dtype])
+
+
+def test_hat_apply_1d():
+    h = jax.random.normal(_key(9), (50, 50), jnp.float64) / 50
+    y = jax.random.normal(_key(10), (50,), jnp.float64)
+    got = hat_errors(h, y, interpret=True)
+    assert got.shape == (50,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y - h @ y),
+                               rtol=1e-10)
+
+
+# ----------------------------------------------------------- foldsolve ----
+
+@pytest.mark.parametrize("k,m,b", [(5, 8, 1), (10, 20, 4), (4, 50, 16),
+                                   (2, 1, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_foldsolve_sweep(k, m, b, dtype):
+    key1, key2 = jax.random.split(_key(k * m))
+    # realistic H_Te blocks: contraction-like, spectrum well inside (0,1)
+    a = jax.random.normal(key1, (k, m, m), dtype) / (3.0 * m**0.5)
+    h_te = jnp.einsum("kij,klj->kil", a, a)      # PSD, small norm
+    e = jax.random.normal(key2, (k, m, b), dtype)
+    got = foldsolve(h_te, e, interpret=True)
+    want = foldsolve_ref(h_te, e)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3 if dtype == jnp.float32 else 1e-8,
+                               atol=5e-4 if dtype == jnp.float32 else 1e-9)
+
+
+def test_foldsolve_2d_rhs():
+    h_te = jnp.zeros((3, 4, 4), jnp.float64)
+    e = jax.random.normal(_key(2), (3, 4), jnp.float64)
+    got = foldsolve(h_te, e, interpret=True)     # (I-0)^{-1} e = e
+    np.testing.assert_allclose(np.asarray(got), np.asarray(e), rtol=1e-12)
+
+
+def test_foldsolve_matches_cv_plan_solves():
+    """End-to-end: kernel solves == the fastcv cho_solve path on real H."""
+    from repro.core import fastcv, folds as foldlib
+    from repro.data import synthetic
+    x, yc = synthetic.make_classification(_key(0), 40, 120)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(40, 5, seed=1)
+    plan = fastcv.prepare(x, f, 1.0, with_train_block=False)
+    e_hat = y - plan.h @ y
+    h_te = plan.h[f.te_idx[:, :, None], f.te_idx[:, None, :]]
+    got = foldsolve(h_te, e_hat[f.te_idx], interpret=True)
+    y_dot_te, _ = fastcv.cv_errors(plan, y)
+    want = y[f.te_idx] - y_dot_te                 # ė_Te
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8,
+                               atol=1e-9)
+
+
+# ----------------------------------------------------- flash attention ----
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("s", [32, 128, 200])
+def test_flash_causal_gqa_sweep(hq, hkv, s):
+    b, d = 2, 16
+    dtype = jnp.float32
+    q = jax.random.normal(_key(1), (b, hq, s, d), dtype)
+    k = jax.random.normal(_key(2), (b, hkv, s, d), dtype)
+    v = jax.random.normal(_key(3), (b, hkv, s, d), dtype)
+    scale = 1.0 / d**0.5
+    got = flash_attention(q, k, v, scale=scale, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_local_window(window):
+    b, h, s, d = 1, 2, 128, 8
+    q = jax.random.normal(_key(4), (b, h, s, d), jnp.float32)
+    k = jax.random.normal(_key(5), (b, h, s, d), jnp.float32)
+    v = jax.random.normal(_key(6), (b, h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, scale=0.3, window=window, block_q=32,
+                          block_k=32, interpret=True)
+    want = attention_ref(q, k, v, scale=0.3, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_softcap():
+    b, h, s, d = 1, 2, 64, 8
+    q = jax.random.normal(_key(7), (b, h, s, d), jnp.float32) * 3
+    k = jax.random.normal(_key(8), (b, h, s, d), jnp.float32) * 3
+    v = jax.random.normal(_key(9), (b, h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, scale=0.5, softcap=20.0, block_q=32,
+                          block_k=32, interpret=True)
+    want = attention_ref(q, k, v, scale=0.5, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_bf16_io():
+    b, h, s, d = 1, 2, 64, 16
+    q = jax.random.normal(_key(10), (b, h, s, d)).astype(jnp.bfloat16)
+    k = jax.random.normal(_key(11), (b, h, s, d)).astype(jnp.bfloat16)
+    v = jax.random.normal(_key(12), (b, h, s, d)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, scale=0.25, block_q=32, block_k=32,
+                          interpret=True)
+    want = attention_ref(q, k, v, scale=0.25)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,53 @@
+"""Int8 KV-cache quantisation: decode must track the bf16-cache decode
+closely (serving memory lever; EXPERIMENTS §Dry-run)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def test_quantize_roundtrip_error_bounded():
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 4, 16), jnp.float32)
+    q, s = L.quantize_kv(k)
+    back = L.dequantize_kv(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - k)) / jnp.max(jnp.abs(k)))
+    assert rel < 1.0 / 127.0 + 1e-3
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "internlm2-20b"])
+def test_int8_decode_tracks_bf16_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    seq, batch = 16, 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
+                                cfg.vocab_size)
+
+    def run(cfg_run):
+        caches = T.init_trunk_cache(cfg_run, batch, seq)
+        decode = jax.jit(
+            lambda tok, pos, c: M.decode_step(params, tok, pos, c, cfg_run))
+        outs = []
+        for t in range(seq):
+            logits, caches = decode(tokens[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32), caches)
+            outs.append(logits[:, 0])
+        return jnp.stack(outs, 1)
+
+    full = run(cfg)
+    quant = run(cfg_q)
+    # int8 KV: small logit perturbation, same argmax almost everywhere
+    err = float(jnp.mean(jnp.abs(full - quant)))
+    scale = float(jnp.mean(jnp.abs(full))) + 1e-9
+    assert err / scale < 0.05, err / scale
+    agree = float(jnp.mean((jnp.argmax(full, -1) == jnp.argmax(quant, -1))
+                           .astype(jnp.float32)))
+    assert agree > 0.9, agree

@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fastcv, folds as foldlib, lda, multiclass
+from repro.data import synthetic
+
+_SETTINGS = dict(max_examples=12, deadline=None, derandomize=True)
+
+
+@st.composite
+def cv_problem(draw):
+    n = draw(st.integers(min_value=24, max_value=60))
+    p = draw(st.integers(min_value=4, max_value=80))
+    k = draw(st.sampled_from([2, 3, 4, 6]))
+    lam = draw(st.floats(min_value=0.05, max_value=20.0))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return n, p, k, lam, seed
+
+
+@given(cv_problem())
+@settings(**_SETTINGS)
+def test_analytical_cv_exactness_property(problem):
+    """∀ (N,P,K,λ): analytical dvals == retrained regression dvals."""
+    n, p, k, lam, seed = problem
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(seed), n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=seed % 1000)
+    dv_fast, _ = fastcv.binary_cv(x, y, f, lam=lam, adjust_bias=False)
+    dv_std, _ = lda.standard_cv_binary(x, y, f, lam=lam, form="regression")
+    np.testing.assert_allclose(np.asarray(dv_fast), np.asarray(dv_std),
+                               rtol=1e-6, atol=1e-7)
+
+
+@given(cv_problem())
+@settings(**_SETTINGS)
+def test_hat_matrix_spectrum_property(problem):
+    """H is symmetric with eigenvalues in [0, 1] (ridge smoother + intercept)."""
+    n, p, _, lam, seed = problem
+    x, _ = synthetic.make_classification(jax.random.PRNGKey(seed), n, p)
+    h = fastcv.hat_matrix(x, lam)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h).T, atol=1e-8)
+    ev = np.linalg.eigvalsh(np.asarray(h))
+    assert ev.min() > -1e-8
+    assert ev.max() < 1.0 + 1e-8
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.1, max_value=5.0))
+@settings(**_SETTINGS)
+def test_label_coding_invariance_property(seed, scale):
+    """App. A: the direction of w is invariant to the numeric class codes."""
+    n, p = 40, 12
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(seed), n, p)
+    y1 = jnp.where(yc == 0, -1.0, 1.0)
+    y2 = jnp.where(yc == 0, 0.0, scale)          # arbitrary coding
+    w1, _ = lda.fit_binary_regression(x, y1, 0.5)
+    w2, _ = lda.fit_binary_regression(x, y2, 0.5)
+    cos = jnp.dot(w1, w2) / (jnp.linalg.norm(w1) * jnp.linalg.norm(w2))
+    assert abs(float(cos)) > 1 - 1e-7
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=3, max_value=6))
+@settings(**_SETTINGS)
+def test_multiclass_exactness_property(seed, c):
+    n, p, k, lam = 60, 24, 4, 1.0
+    x, y = synthetic.make_classification(jax.random.PRNGKey(seed), n, p, c,
+                                         class_sep=2.0)
+    f = foldlib.stratified_kfold(np.asarray(y), k, seed=seed % 997)
+    pred_fast, _ = multiclass.analytical_cv_multiclass(x, y, f, c, lam)
+    pred_std, _ = multiclass.standard_cv_multiclass(x, y, f, c, lam)
+    np.testing.assert_array_equal(np.asarray(pred_fast), np.asarray(pred_std))
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**_SETTINGS)
+def test_fold_solve_consistency_property(seed):
+    """Σ_folds ẏ_Te errors reproduce per-fold retrained residual norms —
+    (I − H_Te) ė_Te == ê_Te exactly (Eq. 14 rearranged)."""
+    n, p, k, lam = 36, 50, 3, 2.0
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(seed), n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=seed % 911)
+    plan = fastcv.prepare(x, f, lam, with_train_block=False)
+    y_hat = plan.h @ y
+    e_hat = y - y_hat
+    y_dot_te, _ = fastcv.cv_errors(plan, y)
+    for i in range(k):
+        te = np.asarray(f.te_idx[i])
+        h_te = np.asarray(plan.h)[np.ix_(te, te)]
+        e_dot = np.asarray(y[te] - y_dot_te[i])
+        lhs = (np.eye(len(te)) - h_te) @ e_dot
+        np.testing.assert_allclose(lhs, np.asarray(e_hat)[te], rtol=1e-7,
+                                   atol=1e-9)

@@ -1,0 +1,61 @@
+"""Analytical CV for linear/ridge regression (paper §2.4, §4.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import folds as foldlib, regression
+from repro.data import synthetic
+
+
+@pytest.mark.parametrize("n,p,k,lam", [
+    (80, 20, 5, 0.0),
+    (80, 20, 8, 1.0),
+    (50, 300, 5, 5.0),     # P >> N
+])
+def test_analytical_equals_standard_cv(n, p, k, lam):
+    x, y = synthetic.make_regression(jax.random.PRNGKey(0), n, p)
+    f = foldlib.kfold(n, k, seed=1)
+    pred_fast, y_te = regression.analytical_cv(x, y, f, lam=lam)
+    pred_std, y_te_std = regression.standard_cv(x, y, f, lam=lam)
+    np.testing.assert_allclose(np.asarray(pred_fast), np.asarray(pred_std),
+                               rtol=1e-7, atol=1e-8)
+    np.testing.assert_array_equal(np.asarray(y_te), np.asarray(y_te_std))
+
+
+def test_primal_and_dual_ridge_fits_agree():
+    n, p, lam = 60, 40, 2.0
+    x, y = synthetic.make_regression(jax.random.PRNGKey(2), n, p)
+    # primal via explicit augmented solve
+    xa = jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+    i0 = jnp.eye(p + 1, dtype=x.dtype).at[p, p].set(0.0)
+    beta = jnp.linalg.solve(xa.T @ xa + lam * i0, xa.T @ y)
+    w_d, b_d = regression.fit_ridge(x, y, lam)  # p < n -> primal branch
+    np.testing.assert_allclose(np.asarray(w_d), np.asarray(beta[:-1]), rtol=1e-8)
+    assert float(b_d) == pytest.approx(float(beta[-1]), rel=1e-8)
+
+
+def test_dual_fit_matches_primal_in_overdetermined_overlap():
+    """For λ>0 both forms solve the same problem; compare on N=P+margin."""
+    n, p, lam = 50, 48, 1.0
+    x, y = synthetic.make_regression(jax.random.PRNGKey(3), n, p)
+    xa = jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+    i0 = jnp.eye(p + 1, dtype=x.dtype).at[p, p].set(0.0)
+    beta = jnp.linalg.solve(xa.T @ xa + lam * i0, xa.T @ y)
+
+    # force dual path by transposing regime: use fit on P >= N slice
+    x2, y2 = x[:p // 2], y[:p // 2]            # now P > N
+    w2, b2 = regression.fit_ridge(x2, y2, lam)
+    xa2 = jnp.concatenate([x2, jnp.ones((x2.shape[0], 1), x.dtype)], axis=1)
+    i02 = jnp.eye(p + 1, dtype=x.dtype).at[p, p].set(0.0)
+    beta2 = jnp.linalg.solve(xa2.T @ xa2 + lam * i02, xa2.T @ y2)
+    np.testing.assert_allclose(np.asarray(x2 @ w2 + b2),
+                               np.asarray(xa2 @ beta2), rtol=1e-6, atol=1e-7)
+
+
+def test_unregularised_highdim_raises():
+    x, y = synthetic.make_regression(jax.random.PRNGKey(4), 20, 50)
+    f = foldlib.kfold(20, 4)
+    with pytest.raises(ValueError):
+        regression.analytical_cv(x, y, f, lam=0.0)

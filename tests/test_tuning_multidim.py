@@ -1,0 +1,102 @@
+"""Beyond-paper extensions: analytical λ tuning, fold weights, multi-dim."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastcv, folds as foldlib, multidim, regression, tuning
+from repro.data import synthetic
+
+
+def test_loo_curve_matches_explicit_loo():
+    """Spectral LOO per λ == explicit plan-based LOO per λ."""
+    n, p = 40, 120
+    x, y = synthetic.make_regression(jax.random.PRNGKey(0), n, p)
+    lambdas = jnp.asarray([0.5, 5.0, 50.0])
+    curve = tuning.loo_curve(x, y, lambdas, criterion="mse")
+    f = foldlib.loo(n)
+    for i, lam in enumerate(np.asarray(lambdas)):
+        preds, y_te = regression.analytical_cv(x, y, f, lam=float(lam))
+        mse = float(jnp.mean((preds - y_te) ** 2))
+        assert float(curve[i]) == pytest.approx(mse, rel=1e-6), (i, lam)
+
+
+def test_tune_ridge_picks_generalising_lambda():
+    """On noisy high-dim data, tuned λ beats the extremes of the grid."""
+    n, p = 60, 400
+    x, y = synthetic.make_regression(jax.random.PRNGKey(1), n, p, noise=0.5)
+    res = tuning.tune_ridge(x, y)
+    assert float(res.scores.min()) == pytest.approx(float(res.best_score))
+    # best beats both grid endpoints
+    assert float(res.best_score) <= float(res.scores[0])
+    assert float(res.best_score) <= float(res.scores[-1])
+
+
+def test_tune_ridge_classification_criterion():
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(2), 50, 200,
+                                          class_sep=2.0)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    res = tuning.tune_ridge(x, y, criterion="error")
+    assert 0.0 <= float(res.best_score) <= 0.5
+
+
+def test_fold_weights_match_retrained_ridge():
+    n, p, k, lam = 36, 90, 4, 2.0
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(3), n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=0)
+    ws, bs = multidim.fold_weights(x, y, f, lam)
+    for i in range(k):
+        tr = np.asarray(f.tr_idx[i])
+        w_ref, b_ref = regression.fit_ridge(x[tr], y[tr], lam)
+        np.testing.assert_allclose(np.asarray(ws[i]), np.asarray(w_ref),
+                                   rtol=1e-6, atol=1e-8)
+        assert float(bs[i]) == pytest.approx(float(b_ref), rel=1e-6)
+
+
+def test_fold_weights_reproduce_analytical_dvals():
+    """x_te @ w_k + b_k must equal the Eq.-14 decision values."""
+    n, p, k, lam = 40, 150, 5, 1.0
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(4), n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=1)
+    ws, bs = multidim.fold_weights(x, y, f, lam)
+    dv_fast, _ = fastcv.binary_cv(x, y, f, lam=lam, adjust_bias=False)
+    dv_w = jnp.einsum("kmp,kp->km", x[f.te_idx], ws) + bs[:, None]
+    np.testing.assert_allclose(np.asarray(dv_w), np.asarray(dv_fast),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_cv_grid_matches_pointwise():
+    n, p, q = 32, 64, 4
+    keys = jax.random.split(jax.random.PRNGKey(5), q)
+    xs = jnp.stack([synthetic.make_classification(kk, n, p, class_sep=2.0)[0]
+                    for kk in keys])
+    _, yc = synthetic.make_classification(keys[0], n, p)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, 4, seed=2)
+    accs = multidim.cv_grid(xs, y, f, lam=1.0)
+    for i in range(q):
+        dv, y_te = fastcv.binary_cv(xs[i], y, f, lam=1.0)
+        pred = jnp.where(dv >= 0, 1.0, -1.0)
+        want = float(jnp.mean(pred == jnp.sign(y_te)))
+        assert float(accs[i]) == pytest.approx(want)
+
+
+def test_time_generalization_diagonal_and_transfer():
+    """Diagonal ≈ per-point CV; an informative point does not transfer to
+    a pure-noise point (off-diagonal ≈ chance)."""
+    n, p = 48, 80
+    key = jax.random.PRNGKey(6)
+    x_sig, yc = synthetic.make_classification(key, n, p, class_sep=3.0)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    x_noise = jax.random.normal(jax.random.fold_in(key, 1), (n, p),
+                                x_sig.dtype)
+    xs = jnp.stack([x_sig, x_noise])
+    f = foldlib.kfold(n, 4, seed=3)
+    tg = np.asarray(multidim.time_generalization(xs, y, f, lam=1.0))
+    assert tg.shape == (2, 2)
+    assert tg[0, 0] > 0.8                  # signal decodes
+    assert abs(tg[0, 1] - 0.5) < 0.25      # no transfer to noise
+    assert abs(tg[1, 1] - 0.5) < 0.3       # noise point at chance
