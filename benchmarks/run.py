@@ -21,7 +21,8 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from benchmarks import (bench_complexity, bench_cv, bench_eeg,
-                        bench_kernels, bench_multiclass, bench_perm)
+                        bench_kernels, bench_multiclass, bench_perm,
+                        bench_serve)
 from benchmarks.common import print_rows
 
 MODULES = [
@@ -31,6 +32,7 @@ MODULES = [
     ("multiclass(Fig3b)", bench_multiclass),
     ("eeg(Fig4)", bench_eeg),
     ("kernels", bench_kernels),
+    ("serve(engine)", bench_serve),
 ]
 
 

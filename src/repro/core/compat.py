@@ -1,0 +1,19 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+``jax.shard_map`` only became a top-level export in newer jax releases;
+older installed versions (e.g. 0.4.x) ship it as
+``jax.experimental.shard_map.shard_map``. Everything in this repo that
+shards (distributed CV, the serve engine's distributed plan builds) goes
+through :func:`shard_map` below so a single import works everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on older jax installs
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]

@@ -26,12 +26,14 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fastcv
+from repro.core.compat import shard_map
 from repro.core.folds import Folds
 
 __all__ = [
     "distributed_gram",
     "distributed_hat_matrix",
     "distributed_permutation_binary",
+    "sharded_null_from_plan",
     "searchlight_cv",
 ]
 
@@ -49,8 +51,7 @@ def distributed_gram(x: jax.Array, mesh: Mesh, *, center: bool = True,
         g = x_shard @ x_shard.T
         return jax.lax.psum(g, feature_axis)
 
-    other = tuple(a for a in mesh.axis_names if a != feature_axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_gram, mesh=mesh,
         in_specs=P(None, feature_axis),
         out_specs=P(None, None))
@@ -90,17 +91,36 @@ def distributed_permutation_binary(
     t_pad = -(-n_perm // n_shards) * n_shards
     perms = perm_lib.permutation_indices(key, y.shape[0], t_pad)  # (T, N)
 
+    null = sharded_null_from_plan(plan, y, perms, mesh, metric=metric,
+                                  perm_axes=perm_axes,
+                                  adjust_bias=adjust_bias)[:n_perm]
+    return perm_lib.PermutationResult(observed, null,
+                                      perm_lib.p_value(observed, null))
+
+
+def sharded_null_from_plan(plan: fastcv.CVPlan, y: jax.Array,
+                           perms: jax.Array, mesh: Mesh, *,
+                           metric: str = "accuracy",
+                           perm_axes: tuple = ("data",),
+                           adjust_bias: bool = True) -> jax.Array:
+    """Null-distribution metrics for ``perms`` (T, N), T sharded over
+    ``perm_axes``; the plan (hat matrix + fold factors) is replicated.
+
+    This is the serve engine's distributed permutation path: the plan is
+    built once (possibly via :func:`distributed_gram`) and every batch of
+    permutation requests fans out over the mesh's data-parallel axes.
+    """
+    from repro.core import permutation as perm_lib
+
     def shard_fn(perm_shard):
         yp = y[perm_shard].T                                   # (N, T_local)
         dv = fastcv.binary_dvals(plan, yp, adjust_bias=adjust_bias)
         y_te = yp[plan.te_idx]
         return perm_lib._fold_metric_binary(dv, y_te, metric)  # (T_local,)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(perm_axes),
-                       out_specs=P(perm_axes))
-    null = fn(perms)[:n_perm]
-    return perm_lib.PermutationResult(observed, null,
-                                      perm_lib.p_value(observed, null))
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=P(perm_axes),
+                   out_specs=P(perm_axes))
+    return fn(perms)
 
 
 def _plan_from_h(h, folds: Folds, with_train_block: bool) -> fastcv.CVPlan:
@@ -126,7 +146,7 @@ def searchlight_cv(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
     te_idx, tr_idx = folds.te_idx, folds.tr_idx
 
     def one_problem(x, y_):
-        dv, y_te = fastcv.binary_cv(x, y_, _FoldsView(te_idx, tr_idx),
+        dv, y_te = fastcv.binary_cv(x, y_, Folds.with_indices(te_idx, tr_idx),
                                     lam=lam, adjust_bias=adjust_bias)
         pred = jnp.where(dv >= 0, 1.0, -1.0)
         return jnp.mean(pred == jnp.sign(y_te))
@@ -134,16 +154,6 @@ def searchlight_cv(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
     def shard_fn(xs_shard):
         return jax.vmap(lambda x: one_problem(x, y))(xs_shard)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(axes),
-                       out_specs=P(axes))
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=P(axes),
+                   out_specs=P(axes))
     return fn(xs)
-
-
-class _FoldsView:
-    """Duck-typed Folds carrying traced index arrays into jitted regions."""
-
-    def __init__(self, te_idx, tr_idx):
-        self.te_idx = te_idx
-        self.tr_idx = tr_idx
-        self.n = None
-        self.k = te_idx.shape[0]

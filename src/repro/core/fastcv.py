@@ -31,11 +31,14 @@ TPU-adapted design decisions (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import weakref
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.scipy.linalg import cho_factor, cho_solve
 
 from repro.core.folds import Folds
@@ -49,6 +52,10 @@ __all__ = [
     "cv_errors",
     "binary_dvals",
     "binary_cv",
+    "fingerprint",
+    "plan_key",
+    "make_eval_binary",
+    "make_eval_cv",
 ]
 
 
@@ -150,10 +157,18 @@ class CVPlan:
     def k(self) -> int:
         return self.te_idx.shape[0]
 
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by the plan — the plan-cache accounting unit."""
+        leaves = [self.h, self.te_idx, self.tr_idx, self.chol_ih]
+        if self.h_tr_te is not None:
+            leaves.append(self.h_tr_te)
+        return int(sum(a.size * a.dtype.itemsize for a in leaves))
+
 
 @partial(jax.jit, static_argnames=("mode", "with_train_block", "lam"))
-def _prepare_jit(x, te_idx, tr_idx, lam, mode, with_train_block):
-    h = hat_matrix(x, lam, mode=mode)
+def _prepare_jit(x, te_idx, tr_idx, lam, mode, with_train_block, gram=None):
+    h = hat_matrix(x, lam, mode=mode, gram=gram)
     h_te = h[te_idx[:, :, None], te_idx[:, None, :]]           # (K, m, m)
     eye = jnp.eye(h_te.shape[-1], dtype=h.dtype)
     ih = eye[None] - h_te
@@ -165,11 +180,17 @@ def _prepare_jit(x, te_idx, tr_idx, lam, mode, with_train_block):
 
 
 def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
-            with_train_block: bool = True) -> CVPlan:
+            with_train_block: bool = True,
+            gram: Optional[jax.Array] = None) -> CVPlan:
     """Build a :class:`CVPlan`: hat matrix + per-fold factorisations.
 
     This is the one-time O(N²P + N³ + K·m³) setup; every subsequent label
     vector (CV run or permutation) costs only O(K·m²) per evaluation.
+
+    ``gram`` may carry a precomputed *centered* Gram G_c = X_c X_cᵀ (dual
+    mode only) — the serve engine feeds the Pallas ``gram`` kernel's or the
+    feature-sharded ``distributed_gram``'s output here, keeping the O(N²P)
+    hot path off the XLA default lowering.
     """
     n, p = x.shape
     if mode == "auto":
@@ -177,8 +198,11 @@ def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
     if mode == "dual" and lam <= 0.0:
         raise ValueError("analytical CV with P >= N requires lam > 0 "
                          "(unregularised interpolation makes I - H_Te singular)")
+    if gram is not None and mode != "dual":
+        raise ValueError("precomputed gram only applies to dual mode")
     h, chol, h_tr_te = _prepare_jit(
-        x, folds.te_idx, folds.tr_idx, float(lam), mode, with_train_block
+        x, folds.te_idx, folds.tr_idx, float(lam), mode, with_train_block,
+        gram
     )
     return CVPlan(h, folds.te_idx, folds.tr_idx, chol, h_tr_te)
 
@@ -255,3 +279,87 @@ def binary_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0,
     plan = prepare(x, folds, lam, mode=mode, with_train_block=adjust_bias)
     dvals = binary_dvals(plan, y, adjust_bias=adjust_bias)
     return dvals, y[folds.te_idx]
+
+
+# ---------------------------------------------------------------------------
+# Serving support: plan fingerprinting + jitted (donated-buffer) eval entry
+# points. The plan is label-invariant (§2.7), so a content fingerprint of
+# (X, folds, λ, mode) identifies it exactly — the repro.serve.PlanCache key.
+# ---------------------------------------------------------------------------
+
+_FINGERPRINT_SAMPLE_CAP = 1 << 20  # elements hashed exactly before sampling
+
+# id -> (weakref, digest). jax Arrays are immutable, so identity implies
+# content identity while the object is alive; the weakref callback evicts
+# the entry on GC so a recycled id can never alias a stale digest.
+_fingerprint_memo: dict = {}
+
+
+def fingerprint(x, *, sample_cap: int = _FINGERPRINT_SAMPLE_CAP) -> str:
+    """Stable content digest of an array (shape + dtype + values).
+
+    Arrays up to ``sample_cap`` elements are hashed exactly; larger ones by
+    a deterministic strided subsample plus a global f64 checksum — O(cap)
+    regardless of dataset size, with astronomically unlikely collisions for
+    real feature matrices. Digests of (immutable) jax arrays are memoised
+    by object identity, so steady-state serving never re-hashes a dataset.
+    """
+    memoable = isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
+    if memoable:
+        hit = _fingerprint_memo.get(id(x))
+        if hit is not None and hit[0]() is x:
+            return hit[1]
+    arr = np.asarray(jax.device_get(x))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((arr.shape, str(arr.dtype))).encode())
+    if arr.size <= sample_cap:
+        h.update(np.ascontiguousarray(arr).tobytes())
+    else:
+        flat = np.ascontiguousarray(arr).reshape(-1)
+        stride = -(-arr.size // sample_cap)
+        h.update(np.ascontiguousarray(flat[::stride]).tobytes())
+        h.update(np.float64(flat.sum(dtype=np.float64)).tobytes())
+    digest = h.hexdigest()
+    if memoable:
+        key_id = id(x)
+        ref = weakref.ref(x, lambda _, k=key_id: _fingerprint_memo.pop(k, None))
+        _fingerprint_memo[key_id] = (ref, digest)
+    return digest
+
+
+def plan_key(x, folds: Folds, lam: float, mode: str = "auto",
+             with_train_block: bool = True) -> tuple:
+    """Hashable identity of the :class:`CVPlan` that ``prepare`` would build.
+
+    Both index arrays are fingerprinted: tr_idx is not derivable from
+    te_idx in general (leftover samples, custom schemes), and the plan's
+    train blocks + bias adjustment depend on it.
+    """
+    n, p = x.shape
+    if mode == "auto":
+        mode = "dual" if p >= n else "primal"
+    return (fingerprint(x), fingerprint(folds.te_idx),
+            fingerprint(folds.tr_idx), float(lam), mode,
+            bool(with_train_block))
+
+
+def make_eval_binary(adjust_bias: bool = True, donate: bool = False):
+    """Fresh jitted evaluator ``(plan, y (N, B)) -> dvals (K, m, B)``.
+
+    ``donate=True`` donates the label-batch buffer (permutation chunks are
+    single-use) so XLA may alias it into the output — meaningful on
+    TPU/GPU; CPU backends ignore donation. Only donate buffers you own:
+    the donated array is invalidated for the caller. Each call returns an
+    independently-cached jit, so callers (the serve engine) can count
+    compiles via ``fn._cache_size()``.
+    """
+    kw = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(
+        lambda plan, y: binary_dvals(plan, y, adjust_bias=adjust_bias), **kw)
+
+
+def make_eval_cv(donate: bool = False):
+    """Fresh jitted evaluator ``(plan, y (N, B)) -> ẏ_Te (K, m, B)`` —
+    the ridge-regression serving path (Eq. 14 only, no bias adjust)."""
+    kw = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(lambda plan, y: cv_errors(plan, y)[0], **kw)

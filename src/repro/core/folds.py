@@ -52,6 +52,20 @@ class Folds:
     def train_size(self) -> int:
         return self.tr_idx.shape[1]
 
+    @classmethod
+    def with_indices(cls, te_idx, tr_idx, n: Optional[int] = None) -> "Folds":
+        """Folds from raw (possibly traced) index arrays.
+
+        Used wherever fold indices flow through jit/vmap/shard_map as traced
+        values (grid CV, searchlights, the serve batcher): shapes stay
+        static, so ``k``/``test_size``/``train_size`` remain Python ints.
+        ``n`` defaults to ``test_size + train_size``, which equals N whenever
+        K divides N (leftover samples are train-only and uncounted).
+        """
+        if n is None:
+            n = int(te_idx.shape[1] + tr_idx.shape[1])
+        return cls(te_idx, tr_idx, n)
+
     def tree_flatten(self):  # pragma: no cover - convenience
         return (self.te_idx, self.tr_idx), self.n
 

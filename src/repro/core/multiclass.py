@@ -41,6 +41,8 @@ __all__ = [
     "optimal_scoring_fit",
     "standard_cv_multiclass",
     "analytical_cv_multiclass",
+    "batch_predict",
+    "make_eval_multiclass",
 ]
 
 _EPS = 1e-10
@@ -201,3 +203,31 @@ def analytical_cv_multiclass(x: jax.Array, y: jax.Array, folds: Folds,
         y_dot_te, y_dot_tr, y1h_tr, plan.h.dtype
     )
     return preds, y[plan.te_idx]
+
+
+def batch_predict(plan: fastcv.CVPlan, y_batch: jax.Array,
+                  num_classes: int) -> jax.Array:
+    """Algorithm 2 for a batch of label vectors sharing one plan.
+
+    ``y_batch``: int (B, N) — e.g. permutations or many client requests.
+    Returns int predictions (B, K, m); step 1 reuses the plan's cached
+    factorisations, step 2's C×C eigh is vmapped over (B × K).
+    """
+    dtype = plan.h.dtype
+
+    def one(yb):
+        y1h = onehot(yb, num_classes, dtype=dtype)
+        y_dot_te, y_dot_tr = fastcv.cv_errors(plan, y1h)
+        y1h_tr = y1h[plan.tr_idx]
+        return jax.vmap(_fold_predict, in_axes=(0, 0, 0, None))(
+            y_dot_te, y_dot_tr, y1h_tr, dtype)
+
+    return jax.vmap(one)(y_batch)
+
+
+def make_eval_multiclass(num_classes: int, donate: bool = False):
+    """Fresh jitted evaluator ``(plan, y (B, N) int) -> preds (B, K, m)``
+    for the serve engine; ``donate`` aliases the label batch on TPU/GPU."""
+    kw = {"donate_argnums": (1,)} if donate else {}
+    return jax.jit(
+        lambda plan, y: batch_predict(plan, y, num_classes), **kw)

@@ -46,16 +46,12 @@ def cv_grid(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
 
     def one(x):
         dv, y_te = fastcv.binary_cv(
-            x, y, _View(te_idx, tr_idx), lam=lam, adjust_bias=adjust_bias)
+            x, y, Folds.with_indices(te_idx, tr_idx), lam=lam,
+            adjust_bias=adjust_bias)
         pred = jnp.where(dv >= 0, 1.0, -1.0)
         return jnp.mean(pred == jnp.sign(y_te))
 
     return jax.lax.map(one, xs)
-
-
-class _View:
-    def __init__(self, te_idx, tr_idx):
-        self.te_idx, self.tr_idx = te_idx, tr_idx
 
 
 def fold_weights(x: jax.Array, y: jax.Array, folds: Folds, lam: float):

@@ -46,9 +46,18 @@ def p_value(observed: jax.Array, null: jax.Array) -> jax.Array:
     return (1.0 + jnp.sum(null >= observed)) / (1.0 + t)
 
 
+@partial(jax.jit, static_argnames=("n", "n_perm"))
 def permutation_indices(key: jax.Array, n: int, n_perm: int) -> jax.Array:
-    """(T, N) independent label permutations."""
-    keys = jax.random.split(key, n_perm)
+    """(T, N) independent label permutations.
+
+    Jitted (the serve engine regenerates these per request, so dispatch
+    overhead matters) and *prefix-stable*: permutation t depends only on
+    (key, t) via ``fold_in``, so requesting a larger T — e.g. the engine
+    rounding T up to a shape bucket — yields the same leading rows as a
+    direct call. That keeps engine null distributions identical to the
+    library's for any shared key.
+    """
+    keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(jnp.arange(n_perm))
     return jax.vmap(lambda k: jax.random.permutation(k, n))(keys)
 
 

@@ -1,0 +1,161 @@
+"""Stand up the analytical-CV serving engine and measure throughput.
+
+    PYTHONPATH=src python -m repro.launch.serve_cv --requests 64
+    PYTHONPATH=src python -m repro.launch.serve_cv --data eeg --clients 4
+
+Builds a :class:`repro.serve.CVEngine`, synthesises a small fleet of
+datasets (synthetic hypersphere-classification or EEG-like windowed
+features), and plays a mixed request stream against it — binary-LDA CV,
+ridge CV, multi-class CV, permutation tests, and λ-tuning — first cold
+(plans built, evals compiled), then warm (everything cached). With
+``--clients > 1`` the same stream is replayed through the thread-backed
+:class:`~repro.serve.api.EngineServer` so concurrent submitters coalesce
+onto shared micro-batches. Reports requests/s and the engine's cache /
+compile statistics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import folds as foldlib
+from repro.data import eeg, synthetic
+from repro.serve import (CVEngine, CVRequest, DatasetSpec, EngineConfig,
+                         EngineServer, PermutationRequest, TuneRequest, serve)
+
+
+def build_requests(args):
+    """Alternating binary (C=2) and multi-class (C=3) datasets, mixed
+    request stream: CV (binary/ridge/multiclass), permutations, tuning."""
+    datasets = []
+    for d in range(args.datasets):
+        num_classes = 2 if d % 2 == 0 else 3
+        key = jax.random.PRNGKey(args.seed + d)
+        if args.data == "eeg":
+            ds = eeg.simulate_subject(key, n_trials=args.n,
+                                      num_classes=num_classes, dtype=jnp.float64)
+            x, y_int = eeg.windowed_features(ds, 200.0), ds.y
+        else:
+            x, y_int = synthetic.make_classification(
+                key, args.n, args.p, num_classes=num_classes, class_sep=2.0)
+        n = int(x.shape[0])
+        spec = DatasetSpec(x, foldlib.kfold(n, args.k, seed=d), args.lam)
+        y_bin = jnp.where(y_int % 2 == 0, -1.0, 1.0)
+        datasets.append((spec, y_bin, y_int, num_classes))
+
+    requests = []
+    for i in range(args.requests):
+        spec, y_bin, y_int, c = datasets[i % len(datasets)]
+        slot = i % 8
+        if slot == 7:
+            if c > 2:
+                requests.append(PermutationRequest(
+                    spec, y_int, args.perm, seed=i, task="multiclass",
+                    num_classes=c))
+            else:
+                requests.append(PermutationRequest(spec, y_bin, args.perm,
+                                                   seed=i))
+        elif slot == 6:
+            requests.append(TuneRequest(spec.x, y_bin))
+        elif slot in (4, 5) and c > 2:
+            requests.append(CVRequest(spec, y_int, task="multiclass",
+                                      num_classes=c))
+        elif slot == 3:
+            requests.append(CVRequest(spec, y_bin, task="ridge"))
+        else:
+            requests.append(CVRequest(spec, y_bin, task="binary"))
+    return requests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--data", default="synthetic", choices=("synthetic", "eeg"))
+    ap.add_argument("--datasets", type=int, default=3,
+                    help="distinct datasets cycled through the stream")
+    ap.add_argument("--n", type=int, default=96, help="samples per dataset")
+    ap.add_argument("--p", type=int, default=768,
+                    help="features (synthetic only; eeg fixes P=1900)")
+    ap.add_argument("--k", type=int, default=6, help="CV folds")
+    ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--perm", type=int, default=64,
+                    help="permutations per permutation request")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="if > 1, replay warm through this many threads")
+    ap.add_argument("--cache-mb", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
+    requests = build_requests(args)
+    print(f"[serve_cv] {len(requests)} requests over {args.datasets} datasets "
+          f"({args.data}), λ={args.lam}, K={args.k}, T={args.perm}")
+
+    t0 = time.perf_counter()
+    responses = serve(engine, requests)
+    jax.block_until_ready([r.values for r in responses
+                           if hasattr(r, "values")])
+    t_cold = time.perf_counter() - t0
+
+    compiles_after_cold = engine.compile_count()
+    t0 = time.perf_counter()
+    responses = serve(engine, requests)
+    jax.block_until_ready([r.values for r in responses
+                           if hasattr(r, "values")])
+    t_warm = time.perf_counter() - t0
+    warm_recompiles = engine.compile_count() - compiles_after_cold
+
+    print(f"[serve_cv] cold: {t_cold:.3f}s ({len(requests)/t_cold:.1f} req/s)"
+          f"   warm: {t_warm:.3f}s ({len(requests)/t_warm:.1f} req/s)"
+          f"   speedup {t_cold/t_warm:.1f}x, "
+          f"recompiles on warm replay: {warm_recompiles}")
+
+    if args.clients > 1:
+        import threading
+        per_client = -(-len(requests) // args.clients)
+        with EngineServer(engine, max_batch=per_client) as server:
+            results = [None] * len(requests)
+
+            def client(cid):
+                lo = cid * per_client
+                futs = [(j, server.submit(requests[j]))
+                        for j in range(lo, min(lo + per_client, len(requests)))]
+                for j, f in futs:
+                    results[j] = f.result(timeout=600)
+
+            t0 = time.perf_counter()
+            threads = [threading.Thread(target=client, args=(c,))
+                       for c in range(args.clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            t_threaded = time.perf_counter() - t0
+            print(f"[serve_cv] threaded ({args.clients} clients): "
+                  f"{t_threaded:.3f}s ({len(requests)/t_threaded:.1f} req/s) "
+                  f"in {server.batches_served} micro-batches")
+        assert all(r is not None for r in results)
+
+    stats = engine.stats()
+    print(f"[serve_cv] cache: {stats['hits']} hits / {stats['misses']} misses "
+          f"/ {stats['evictions']} evictions, "
+          f"{stats['bytes_in_use'] / 2**20:.1f} MiB in use "
+          f"(budget {stats['byte_budget'] / 2**20:.0f} MiB)")
+    print(f"[serve_cv] plans built: {stats['plans_built']}, "
+          f"labels evaluated: {stats['labels_evaluated']}, "
+          f"compiled programs: {stats['compiles']}")
+    scored = [float(r.score) for r in responses if hasattr(r, "score")]
+    if scored:
+        print(f"[serve_cv] mean CV score over {len(scored)} CV requests: "
+              f"{sum(scored)/len(scored):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""repro.serve — plan-cached analytical-CV serving engine.
+
+The paper's economics (§2.7: the hat matrix and fold factorisations depend
+on features only) have the exact shape of a serving workload — expensive
+label-invariant state, cheap per-request evaluation. This package
+productises that:
+
+  cache     PlanCache — LRU CVPlan store under a byte budget.
+  engine    CVEngine — cached plans + shape-bucketed jitted eval paths.
+  batching  MicroBatcher — coalesce ragged same-plan label queries.
+  api       Request/response types, sync driver, threaded queue server.
+
+Entry point: ``python -m repro.launch.serve_cv``.
+"""
+
+from repro.serve.api import (  # noqa: F401
+    CVRequest,
+    CVResponse,
+    DatasetSpec,
+    EngineServer,
+    PermutationRequest,
+    PermutationResponse,
+    TuneRequest,
+    TuneResponse,
+    serve,
+)
+from repro.serve.batching import MicroBatcher, bucket_size  # noqa: F401
+from repro.serve.cache import CacheStats, PlanCache  # noqa: F401
+from repro.serve.engine import CVEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,324 @@
+"""Request/response API for the serving engine, plus drivers.
+
+Clients speak in terms of datasets and label queries:
+
+  * :class:`CVRequest` — one cross-validation run (binary LDA, multi-class
+    LDA, or ridge regression) against a dataset.
+  * :class:`PermutationRequest` — a full permutation test (observed + null
+    + p-value); the expensive part is label-batched through the plan.
+  * :class:`TuneRequest` — ridge-λ selection, routed to the
+    eigendecomposition-based exact-LOO machinery (`tuning.tune_ridge`).
+
+:func:`serve` is the synchronous driver: it groups requests by plan
+identity, coalesces same-plan label queries through the
+:class:`~repro.serve.batching.MicroBatcher` (one padded jitted eval per
+group), and un-pads per-request results. :class:`EngineServer` wraps the
+same driver in a thread-backed queue so concurrent submitters get futures
+while their queries ride shared micro-batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics, tuning
+from repro.serve.batching import MicroBatcher, as_folds
+from repro.serve.engine import CVEngine
+
+__all__ = [
+    "DatasetSpec",
+    "CVRequest",
+    "PermutationRequest",
+    "TuneRequest",
+    "CVResponse",
+    "PermutationResponse",
+    "TuneResponse",
+    "serve",
+    "EngineServer",
+]
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DatasetSpec:
+    """The label-invariant half of a request: features, folds, λ.
+
+    ``folds`` is a :class:`~repro.core.folds.Folds` or a raw
+    ``(te_idx, tr_idx)`` index pair (normalised via ``Folds.with_indices``).
+    """
+
+    x: jax.Array
+    folds: object
+    lam: float
+    mode: str = "auto"
+
+
+@dataclasses.dataclass
+class CVRequest:
+    data: DatasetSpec
+    y: jax.Array                  # binary/ridge: (N,) or (N, B); mc: (N,)/(B, N)
+    task: str = "binary"          # "binary" | "multiclass" | "ridge"
+    num_classes: int = 0          # required for task="multiclass"
+    adjust_bias: bool = True      # binary only (paper §2.5)
+
+
+@dataclasses.dataclass
+class PermutationRequest:
+    data: DatasetSpec
+    y: jax.Array
+    n_perm: int
+    seed: int = 0
+    task: str = "binary"          # "binary" | "multiclass"
+    num_classes: int = 0
+    metric: str = "accuracy"      # binary only: "accuracy" | "auc"
+    adjust_bias: bool = True
+
+
+@dataclasses.dataclass
+class TuneRequest:
+    x: jax.Array
+    y: jax.Array
+    lambdas: Optional[jax.Array] = None
+    criterion: str = "mse"
+
+
+Request = Union[CVRequest, PermutationRequest, TuneRequest]
+
+
+# ---------------------------------------------------------------------------
+# Responses
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CVResponse:
+    task: str
+    values: jax.Array             # dvals / ẏ_Te (K, m[, B]) or preds
+    y_te: jax.Array               # matching test labels/responses
+    score: jax.Array              # accuracy (classification) or mse (ridge)
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class PermutationResponse:
+    observed: jax.Array
+    null: jax.Array
+    p: jax.Array
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class TuneResponse:
+    result: tuning.RidgeTuneResult
+
+
+# ---------------------------------------------------------------------------
+# Synchronous driver
+# ---------------------------------------------------------------------------
+
+
+def _score(task: str, values, y_te):
+    if task == "binary":
+        return metrics.binary_accuracy(values, y_te)
+    if task == "multiclass":
+        return metrics.multiclass_accuracy(values, y_te)
+    return metrics.mse(values, y_te)
+
+
+def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
+    """Serve a batch of requests; responses align with ``requests``.
+
+    Same-plan CV label queries are coalesced into one padded jitted eval
+    per (plan, task) group; plans are fetched once per distinct dataset
+    (fingerprints memoised per driver call, keyed by object identity).
+    """
+    responses: list = [None] * len(requests)
+    plan_memo: dict = {}
+
+    def plan_for(data: DatasetSpec, with_train_block: bool):
+        memo_key = (id(data.x), id(data.folds), float(data.lam), data.mode,
+                    with_train_block)
+        hit = plan_memo.get(memo_key)
+        if hit is None:
+            folds = as_folds(data.folds)
+            hit = engine.plan(data.x, folds, data.lam, mode=data.mode,
+                              with_train_block=with_train_block)
+            plan_memo[memo_key] = hit
+        return hit
+
+    # -- group CV requests by (plan, eval path) ----------------------------
+    groups: dict = {}
+    for i, req in enumerate(requests):
+        if isinstance(req, TuneRequest):
+            responses[i] = TuneResponse(engine.tune(
+                req.x, req.y, lambdas=req.lambdas, criterion=req.criterion))
+        elif isinstance(req, PermutationRequest):
+            needs_train = req.task == "multiclass" or req.adjust_bias
+            key, plan = plan_for(req.data, needs_train)
+            if req.task == "multiclass":
+                res = engine.permutation_multiclass(
+                    plan, jnp.asarray(req.y), req.n_perm,
+                    jax.random.PRNGKey(req.seed),
+                    num_classes=req.num_classes)
+            else:
+                res = engine.permutation_binary(
+                    plan, jnp.asarray(req.y), req.n_perm,
+                    jax.random.PRNGKey(req.seed), metric=req.metric,
+                    adjust_bias=req.adjust_bias)
+            responses[i] = PermutationResponse(res.observed, res.null, res.p,
+                                               key)
+        elif isinstance(req, CVRequest):
+            needs_train = req.task == "multiclass" or (
+                req.task == "binary" and req.adjust_bias)
+            key, plan = plan_for(req.data, needs_train)
+            gkey = (key, req.task, req.adjust_bias, req.num_classes)
+            groups.setdefault(gkey, (plan, []))[1].append((i, req))
+        else:
+            raise TypeError(f"unknown request type {type(req).__name__}")
+
+    # -- one coalesced eval per group --------------------------------------
+    batcher: MicroBatcher = engine.batcher
+    for (key, task, adjust_bias, num_classes), (plan, members) in groups.items():
+        ys = [jnp.asarray(req.y) for _, req in members]
+        if task == "binary":
+            outs = batcher.run_columns(
+                ys, lambda b: engine.eval_binary(plan, b, adjust_bias))
+        elif task == "ridge":
+            outs = batcher.run_columns(
+                ys, lambda b: engine.eval_ridge(plan, b))
+        elif task == "multiclass":
+            outs = batcher.run_rows(
+                ys, lambda b: engine.eval_multiclass(plan, b, num_classes))
+        else:
+            raise ValueError(f"unknown task {task!r}")
+        for (i, req), values in zip(members, outs):
+            y = jnp.asarray(req.y)
+            if task == "multiclass":
+                y_te = (y[plan.te_idx] if y.ndim == 1
+                        else y[:, plan.te_idx])
+            else:
+                y_te = y[plan.te_idx]      # (K, m[, B]) via trailing dims
+            responses[i] = CVResponse(task, values, y_te,
+                                      _score(task, values, y_te), key)
+    return responses
+
+
+# ---------------------------------------------------------------------------
+# Thread-backed queue for concurrent submitters
+# ---------------------------------------------------------------------------
+
+
+class EngineServer:
+    """Background worker that drains a request queue into micro-batches.
+
+    Submitters (any thread) get a Future per request; the worker collects
+    whatever is queued — up to ``max_batch`` requests, waiting at most
+    ``max_wait_ms`` after the first — and serves the whole batch through
+    :func:`serve`, so concurrent clients' queries coalesce onto shared
+    plans and shared padded evals.
+    """
+
+    def __init__(self, engine: CVEngine, max_batch: int = 64,
+                 max_wait_ms: float = 2.0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self._queue: "queue_mod.Queue" = queue_mod.Queue()
+        self._stop = threading.Event()
+        self._submit_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self.batches_served = 0
+        self.requests_served = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "EngineServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="cv-engine-server")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        # The lock orders every in-flight submit() before the stop flag:
+        # anything enqueued before the flag is visible to the worker's
+        # exit condition (stop AND queue-empty), so it gets served; any
+        # later submit raises instead of landing on a dead queue.
+        with self._submit_lock:
+            self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        while True:                       # belt-and-braces: never strand a future
+            try:
+                _, fut = self._queue.get_nowait()
+            except queue_mod.Empty:
+                break
+            fut.set_exception(RuntimeError("server stopped before serving"))
+
+    def __enter__(self) -> "EngineServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client side -------------------------------------------------------
+
+    def submit(self, request: Request) -> Future:
+        with self._submit_lock:
+            if self._stop.is_set() or self._thread is None:
+                raise RuntimeError("server is not running")
+            fut: Future = Future()
+            self._queue.put((request, fut))
+            return fut
+
+    # -- worker side -------------------------------------------------------
+
+    def _drain_batch(self):
+        try:
+            first = self._queue.get(timeout=0.05)
+        except queue_mod.Empty:
+            return []
+        batch = [first]
+        t_end = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = t_end - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._queue.get(timeout=remaining))
+            except queue_mod.Empty:
+                break
+        return batch
+
+    def _run(self) -> None:
+        while not (self._stop.is_set() and self._queue.empty()):
+            batch = self._drain_batch()
+            if not batch:
+                continue
+            requests = [req for req, _ in batch]
+            futures = [fut for _, fut in batch]
+            try:
+                responses = serve(self.engine, requests)
+            except Exception as e:          # noqa: BLE001 - fanned out
+                for fut in futures:
+                    fut.set_exception(e)
+                continue
+            for fut, resp in zip(futures, responses):
+                fut.set_result(resp)
+            self.batches_served += 1
+            self.requests_served += len(batch)

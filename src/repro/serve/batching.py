@@ -1,0 +1,137 @@
+"""Micro-batching: coalesce same-plan label queries into padded batches.
+
+Analytical-CV evaluation is label-batched for free — ``fastcv.cv_errors``
+broadcasts the cached fold solves over a trailing batch dimension — so the
+cheapest way to serve many small requests (permutation chunks from many
+clients, searchlight probes, RSA model RDMs) is to stack their label
+vectors into one (N, B) batch, pad B up to a *shape bucket*, and run a
+single jitted evaluation. Static bucket sizes bound the number of distinct
+compiled programs: after one warm-up per bucket no request ever recompiles.
+
+Two layouts, matching the engine's eval paths:
+  * columns  — binary / ridge: each query contributes (N,) or (N, b)
+               response columns; batch is (N, B).
+  * rows     — multi-class: each query contributes (N,) or (b, N) integer
+               label rows; batch is (B, N).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.folds import Folds
+
+__all__ = ["DEFAULT_BUCKETS", "bucket_size", "as_folds", "MicroBatcher"]
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def bucket_size(b: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= b; beyond the largest, the next multiple of it."""
+    if b <= 0:
+        raise ValueError(f"batch size must be positive, got {b}")
+    for s in buckets:
+        if b <= s:
+            return s
+    top = buckets[-1]
+    return -(-b // top) * top
+
+
+def as_folds(folds) -> Folds:
+    """Normalise a folds spec: a Folds, or a raw (te_idx, tr_idx) pair.
+
+    Requests may ship bare index arrays (e.g. sliced out of a grid of fold
+    assignments); :meth:`Folds.with_indices` rebuilds the static-shape view.
+    """
+    if isinstance(folds, Folds):
+        return folds
+    te_idx, tr_idx = folds
+    return Folds.with_indices(jnp.asarray(te_idx, jnp.int32),
+                              jnp.asarray(tr_idx, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class _Segment:
+    start: int          # first column/row of this query in the batch
+    stop: int
+    squeeze: bool       # query was a single vector, not a matrix
+
+
+class MicroBatcher:
+    """Coalesce ragged label queries; un-pad per-request on the way out."""
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.buckets = tuple(buckets)
+
+    # -- columns layout: binary / ridge ------------------------------------
+
+    def coalesce_columns(self, ys: Sequence[jax.Array]):
+        """Stack queries into (N, B_bucket); returns (batch, segments, B)."""
+        segments, cols, offset = [], [], 0
+        for y in ys:
+            y = jnp.asarray(y)
+            squeeze = y.ndim == 1
+            yc = y[:, None] if squeeze else y
+            segments.append(_Segment(offset, offset + yc.shape[1], squeeze))
+            cols.append(yc)
+            offset += yc.shape[1]
+        batch = jnp.concatenate(cols, axis=1)
+        padded = bucket_size(offset, self.buckets)
+        if padded > offset:
+            batch = jnp.pad(batch, ((0, 0), (0, padded - offset)))
+        return batch, segments, offset
+
+    def split_columns(self, out: jax.Array, segments: Sequence[_Segment]):
+        """Invert :meth:`coalesce_columns` on an output with trailing B."""
+        results = []
+        for seg in segments:
+            r = out[..., seg.start:seg.stop]
+            results.append(r[..., 0] if seg.squeeze else r)
+        return results
+
+    def run_columns(self, ys: Sequence[jax.Array],
+                    eval_fn: Callable[[jax.Array], jax.Array]):
+        """One padded eval for all queries; per-query unpadded outputs."""
+        batch, segments, _ = self.coalesce_columns(ys)
+        return self.split_columns(eval_fn(batch), segments)
+
+    # -- rows layout: multi-class ------------------------------------------
+
+    def coalesce_rows(self, ys: Sequence[jax.Array]):
+        """Stack queries into (B_bucket, N); returns (batch, segments, B).
+
+        Padding rows repeat the first label row (all-zero "labels" would
+        make the per-fold class-count matrix D_π singular in Algorithm 2's
+        eigensolve; a real label vector is always well-posed)."""
+        segments, rows, offset = [], [], 0
+        for y in ys:
+            y = jnp.asarray(y)
+            squeeze = y.ndim == 1
+            yr = y[None, :] if squeeze else y
+            segments.append(_Segment(offset, offset + yr.shape[0], squeeze))
+            rows.append(yr)
+            offset += yr.shape[0]
+        batch = jnp.concatenate(rows, axis=0)
+        padded = bucket_size(offset, self.buckets)
+        if padded > offset:
+            batch = jnp.concatenate(
+                [batch, jnp.broadcast_to(batch[:1],
+                                         (padded - offset,) + batch.shape[1:])],
+                axis=0)
+        return batch, segments, offset
+
+    def split_rows(self, out: jax.Array, segments: Sequence[_Segment]):
+        results = []
+        for seg in segments:
+            r = out[seg.start:seg.stop]
+            results.append(r[0] if seg.squeeze else r)
+        return results
+
+    def run_rows(self, ys: Sequence[jax.Array],
+                 eval_fn: Callable[[jax.Array], jax.Array]):
+        batch, segments, _ = self.coalesce_rows(ys)
+        return self.split_rows(eval_fn(batch), segments)

@@ -1,0 +1,116 @@
+"""LRU plan cache with a byte-budget eviction policy.
+
+The :class:`~repro.core.fastcv.CVPlan` is the expensive, label-invariant
+half of the paper's economics (§2.7): O(N²P + N³ + K·m³) to build, O(K·m²)
+to use. The cache keys plans by the content fingerprint of
+(X, folds, λ, mode, train-block) — see :func:`repro.core.fastcv.plan_key` —
+so any number of tenants asking about the same dataset share one build.
+
+Eviction is least-recently-used under a *byte* budget (plans from different
+datasets differ wildly in size: N=64 LOO vs N=4096 10-fold is a ~4000×
+spread, so an entry-count LRU would be meaningless). A single plan larger
+than the whole budget is still admitted (the engine must serve it) and
+simply evicts everything else; ``bytes_in_use`` then exceeds the budget
+until it is itself evicted.
+
+Thread safety: one coarse lock around all operations. ``get_or_build``
+holds it across the build, which doubles as single-flight semantics —
+concurrent requests for the same missing plan trigger exactly one build.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Hashable, Optional
+
+from repro.core.fastcv import CVPlan
+
+__all__ = ["CacheStats", "PlanCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_in_use: int = 0
+    byte_budget: int = 0
+
+    @property
+    def entries_alive(self) -> int:
+        return self.misses - self.evictions  # inserts minus removals
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """LRU ``plan_key -> CVPlan`` map bounded by device bytes."""
+
+    def __init__(self, byte_budget: int = 512 << 20):
+        if byte_budget <= 0:
+            raise ValueError("byte_budget must be positive")
+        self._lock = threading.RLock()
+        self._entries: "OrderedDict[Hashable, CVPlan]" = OrderedDict()
+        self.stats = CacheStats(byte_budget=byte_budget)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def get(self, key: Hashable) -> Optional[CVPlan]:
+        """Return the cached plan (refreshing recency) or None on miss.
+
+        Only ``get_or_build`` counts misses: a bare failed probe is not a
+        build, and counting it would let lookups double-count with the
+        subsequent ``put``.
+        """
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is None:
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return plan
+
+    def put(self, key: Hashable, plan: CVPlan) -> None:
+        """Insert (counted as a miss) and evict LRU entries over budget."""
+        with self._lock:
+            if key in self._entries:          # replace without re-counting
+                self.stats.bytes_in_use -= self._entries.pop(key).nbytes
+                self.stats.misses -= 1
+            self._entries[key] = plan
+            self.stats.misses += 1
+            self.stats.bytes_in_use += plan.nbytes
+            self._evict_over_budget()
+
+    def _evict_over_budget(self) -> None:
+        while (self.stats.bytes_in_use > self.stats.byte_budget
+               and len(self._entries) > 1):
+            _, evicted = self._entries.popitem(last=False)
+            self.stats.bytes_in_use -= evicted.nbytes
+            self.stats.evictions += 1
+
+    def get_or_build(self, key: Hashable,
+                     build: Callable[[], CVPlan]) -> tuple[CVPlan, bool]:
+        """Return ``(plan, was_hit)``; builds (single-flight) on miss."""
+        with self._lock:
+            plan = self.get(key)
+            if plan is not None:
+                return plan, True
+            plan = build()
+            self.put(key, plan)
+            return plan, False
+
+    def clear(self) -> None:
+        with self._lock:
+            for plan in self._entries.values():
+                self.stats.bytes_in_use -= plan.nbytes
+                self.stats.evictions += 1
+            self._entries.clear()

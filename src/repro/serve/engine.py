@@ -1,0 +1,308 @@
+"""CVEngine: plan-cached, shape-bucketed analytical-CV evaluation.
+
+The engine is the multi-tenant core of ``repro.serve``. It owns
+
+  * a :class:`~repro.serve.cache.PlanCache` — one
+    :class:`~repro.core.fastcv.CVPlan` per (dataset × folds × λ × mode),
+    LRU-evicted under a byte budget, so repeated requests against the same
+    features never re-factorise;
+  * a fixed family of *jitted evaluators* (binary LDA, multi-class LDA,
+    ridge regression, permutation-null metrics), created once per engine so
+    their jit caches — and hence compile counts — are observable;
+  * *shape buckets* for the label-batch dimension: every batch is padded up
+    to a static bucket size before hitting jit, so an engine serving ragged
+    traffic compiles at most ``len(buckets)`` programs per eval path and
+    zero after warm-up.
+
+Plan builds route the O(N²P) centered-Gram hot-spot through the Pallas
+``gram`` kernel on TPU (``gram_impl="auto"``/"pallas") or through
+``distributed_gram`` when a mesh is configured (``gram_impl="distributed"``,
+which also shards permutation batches over the mesh's data axes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastcv, metrics, multiclass, permutation as perm_lib
+from repro.core import tuning
+from repro.core.folds import Folds
+from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, bucket_size
+from repro.serve.cache import PlanCache
+
+__all__ = ["EngineConfig", "CVEngine"]
+
+_GRAM_IMPLS = ("auto", "xla", "pallas", "distributed")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine knobs.
+
+    cache_bytes: PlanCache byte budget.
+    gram_impl:   "auto" (Pallas kernel on TPU, plain XLA elsewhere),
+                 "xla", "pallas", or "distributed" (requires ``mesh``).
+    mesh:        optional jax Mesh; enables distributed plan builds and
+                 mesh-sharded permutation batches.
+    feature_axis / perm_axes: mesh axis names for the feature-sharded Gram
+                 reduction and the permutation fan-out respectively.
+    donate:      donate label-batch buffers to the jitted evals. Off by
+                 default (None/False): when a batch needs no padding or
+                 dtype cast, jax aliases the *caller's* array straight
+                 into the eval, and donating it would invalidate the
+                 caller's buffer. Set True only when every submitted
+                 label array is single-use (and on TPU/GPU, where
+                 donation is actually implemented).
+    buckets:     static label-batch sizes; ragged batches pad up to these.
+    """
+
+    cache_bytes: int = 512 << 20
+    gram_impl: str = "auto"
+    mesh: Optional[object] = None
+    feature_axis: str = "model"
+    perm_axes: tuple = ("data",)
+    donate: Optional[bool] = None
+    buckets: Sequence[int] = DEFAULT_BUCKETS
+
+    def __post_init__(self):
+        if self.gram_impl not in _GRAM_IMPLS:
+            raise ValueError(f"gram_impl must be one of {_GRAM_IMPLS}")
+        if self.gram_impl == "distributed" and self.mesh is None:
+            raise ValueError("gram_impl='distributed' requires a mesh")
+
+
+class CVEngine:
+    """Multi-tenant analytical-CV evaluation engine."""
+
+    def __init__(self, config: Optional[EngineConfig] = None):
+        self.config = config or EngineConfig()
+        self.cache = PlanCache(self.config.cache_bytes)
+        self.batcher = MicroBatcher(self.config.buckets)
+        self._donate = bool(self.config.donate)
+        # Eval paths are created lazily but exactly once per static
+        # signature and held forever: the dict entry IS the jit cache the
+        # no-recompile guarantee rests on.
+        self._eval_binary = {}      # adjust_bias -> jit[(plan, y(N,B)) -> (K,m,B)]
+        self._eval_ridge = fastcv.make_eval_cv(donate=self._donate)
+        self._eval_multiclass = {}  # num_classes -> jit[(plan, y(B,N)) -> (B,K,m)]
+        self._perm_binary = {}      # (metric, adjust_bias) -> jit -> (B,)
+        self._perm_multiclass = {}  # num_classes -> jit -> (B,)
+        self.plans_built = 0
+        self.labels_evaluated = 0
+
+    # ------------------------------------------------------------------
+    # Plans
+    # ------------------------------------------------------------------
+
+    def plan(self, x: jax.Array, folds: Folds, lam: float,
+             mode: str = "auto", with_train_block: bool = True):
+        """Fetch-or-build the plan for (x, folds, λ). Returns (key, plan).
+
+        A plan *with* the train block is a superset of the one without
+        (same H, same factors, extra H_{Tr,Te}), so a ridge request is
+        happily served from a cached bias-adjust plan."""
+        key = fastcv.plan_key(x, folds, lam, mode, with_train_block)
+        if not with_train_block:
+            superset = key[:-1] + (True,)
+            plan = self.cache.get(superset)
+            if plan is not None:
+                return superset, plan
+        plan, _ = self.cache.get_or_build(
+            key, lambda: self._build_plan(x, folds, lam, mode,
+                                          with_train_block))
+        return key, plan
+
+    def _build_plan(self, x, folds, lam, mode, with_train_block):
+        n, p = x.shape
+        resolved = ("dual" if p >= n else "primal") if mode == "auto" else mode
+        gram = self._build_gram(x) if resolved == "dual" else None
+        plan = fastcv.prepare(x, folds, lam, mode=resolved,
+                              with_train_block=with_train_block, gram=gram)
+        self.plans_built += 1
+        return plan
+
+    def _build_gram(self, x):
+        impl = self.config.gram_impl
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if impl == "xla":
+            return None                      # prepare() computes it inline
+        if impl == "pallas":
+            from repro.kernels.gram.ops import centered_gram
+            return centered_gram(x)
+        from repro.core.distributed import distributed_gram
+        return distributed_gram(x, self.config.mesh,
+                                feature_axis=self.config.feature_axis)
+
+    # ------------------------------------------------------------------
+    # Shape-bucketed jitted evaluation
+    # ------------------------------------------------------------------
+
+    def _pad_cols(self, y: jax.Array) -> tuple[jax.Array, int]:
+        b = y.shape[1]
+        padded = bucket_size(b, self.config.buckets)
+        if padded > b:
+            y = jnp.pad(y, ((0, 0), (0, padded - b)))
+        return y, b
+
+    def _pad_rows(self, y: jax.Array) -> tuple[jax.Array, int]:
+        b = y.shape[0]
+        padded = bucket_size(b, self.config.buckets)
+        if padded > b:
+            y = jnp.concatenate(
+                [y, jnp.broadcast_to(y[:1], (padded - b,) + y.shape[1:])], 0)
+        return y, b
+
+    def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array,
+                    adjust_bias: bool = True) -> jax.Array:
+        """Binary-LDA decision values. y: (N,) or (N, B) ±1 labels."""
+        squeeze = y.ndim == 1
+        yb = y[:, None] if squeeze else y
+        fn = self._eval_binary.get(adjust_bias)
+        if fn is None:
+            fn = self._eval_binary[adjust_bias] = fastcv.make_eval_binary(
+                adjust_bias=adjust_bias, donate=self._donate)
+        yb = yb.astype(plan.h.dtype)
+        padded, b = self._pad_cols(yb)
+        out = fn(plan, padded)[..., :b]
+        self.labels_evaluated += b
+        return out[..., 0] if squeeze else out
+
+    def eval_ridge(self, plan: fastcv.CVPlan, y: jax.Array) -> jax.Array:
+        """Exact CV ridge predictions ẏ_Te. y: (N,) or (N, B) responses."""
+        squeeze = y.ndim == 1
+        yb = (y[:, None] if squeeze else y).astype(plan.h.dtype)
+        padded, b = self._pad_cols(yb)
+        out = self._eval_ridge(plan, padded)[..., :b]
+        self.labels_evaluated += b
+        return out[..., 0] if squeeze else out
+
+    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array,
+                        num_classes: int) -> jax.Array:
+        """Multi-class LDA CV predictions. y: int (N,) or (B, N)."""
+        squeeze = y.ndim == 1
+        yb = y[None, :] if squeeze else y
+        fn = self._eval_multiclass.get(num_classes)
+        if fn is None:
+            fn = self._eval_multiclass[num_classes] = \
+                multiclass.make_eval_multiclass(num_classes,
+                                                donate=self._donate)
+        padded, b = self._pad_rows(yb)
+        out = fn(plan, padded)[:b]
+        self.labels_evaluated += b
+        return out[0] if squeeze else out
+
+    # ------------------------------------------------------------------
+    # Permutation serving (Algorithms 1 & 2 against a cached plan)
+    # ------------------------------------------------------------------
+
+    def _perm_binary_fn(self, metric: str, adjust_bias: bool):
+        """jit[(plan, y (N,), perms (B, N)) -> (B,) metrics].
+
+        The label gather lives *inside* the jit so the permuted (N, B)
+        label matrix is fused away rather than materialised per request."""
+        fn = self._perm_binary.get((metric, adjust_bias))
+        if fn is None:
+            def _eval(plan, y, perms):
+                yp = y[perms].T                            # (N, B)
+                dv = fastcv.binary_dvals(plan, yp, adjust_bias=adjust_bias)
+                return perm_lib._fold_metric_binary(dv, yp[plan.te_idx],
+                                                    metric)
+            fn = self._perm_binary[(metric, adjust_bias)] = jax.jit(_eval)
+        return fn
+
+    def _perm_multiclass_fn(self, num_classes: int):
+        fn = self._perm_multiclass.get(num_classes)
+        if fn is None:
+            def _eval(plan, y, perms):
+                y_rows = y[perms]                          # (B, N)
+                preds = multiclass.batch_predict(plan, y_rows, num_classes)
+                y_te = y_rows[:, plan.te_idx]              # (B, K, m)
+                return jax.vmap(metrics.multiclass_accuracy)(preds, y_te)
+            fn = self._perm_multiclass[num_classes] = jax.jit(_eval)
+        return fn
+
+    def permutation_binary(self, plan: fastcv.CVPlan, y: jax.Array,
+                           n_perm: int, key: jax.Array, *,
+                           metric: str = "accuracy",
+                           adjust_bias: bool = True) -> perm_lib.PermutationResult:
+        """Algorithm 1 against a cached plan: observed + null + p-value.
+
+        With a mesh configured, the permutation batch shards over the
+        mesh's ``perm_axes``; otherwise it runs through the bucketed local
+        eval path (padded to a static shape, so repeats never recompile).
+        """
+        y = y.astype(plan.h.dtype)
+        n = y.shape[0]
+        fn = self._perm_binary_fn(metric, adjust_bias)
+        identity = jnp.arange(n, dtype=jnp.int32)[None]    # unpermuted row
+        observed = fn(plan, y, self._pad_rows(identity)[0])[0]
+        # Generate directly at the bucket size: permutation_indices jits on
+        # static (n, T), so bucketing T here is what keeps arbitrary
+        # client-chosen n_perm from compiling a fresh generator each time.
+        t_gen = bucket_size(n_perm, self.config.buckets)
+        perms = perm_lib.permutation_indices(key, n, t_gen)
+        if self.config.mesh is not None:
+            from repro.core.distributed import sharded_null_from_plan
+            n_shards = 1
+            for a in self.config.perm_axes:
+                n_shards *= self.config.mesh.shape[a]
+            t_pad = -(-t_gen // n_shards) * n_shards
+            perms = jnp.pad(perms, ((0, t_pad - t_gen), (0, 0)), mode="edge")
+            null = sharded_null_from_plan(
+                plan, y, perms, self.config.mesh, metric=metric,
+                perm_axes=self.config.perm_axes,
+                adjust_bias=adjust_bias)[:n_perm]
+        else:
+            null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
+        self.labels_evaluated += n_perm
+        return perm_lib.PermutationResult(observed, null,
+                                          perm_lib.p_value(observed, null))
+
+    def permutation_multiclass(self, plan: fastcv.CVPlan, y: jax.Array,
+                               n_perm: int, key: jax.Array, *,
+                               num_classes: int) -> perm_lib.PermutationResult:
+        """Algorithm 2 under permutations against a cached plan."""
+        fn = self._perm_multiclass_fn(num_classes)
+        n = y.shape[0]
+        identity = jnp.arange(n, dtype=jnp.int32)[None]
+        observed = fn(plan, y, self._pad_rows(identity)[0])[0]
+        t_gen = bucket_size(n_perm, self.config.buckets)
+        perms = perm_lib.permutation_indices(key, n, t_gen)
+        null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
+        self.labels_evaluated += n_perm
+        return perm_lib.PermutationResult(observed, null,
+                                          perm_lib.p_value(observed, null))
+
+    # ------------------------------------------------------------------
+    # Tuning (routed to the eigendecomposition-based LOO machinery)
+    # ------------------------------------------------------------------
+
+    def tune(self, x: jax.Array, y: jax.Array, lambdas=None,
+             criterion: str = "mse") -> tuning.RidgeTuneResult:
+        return tuning.tune_ridge(x, y, lambdas=lambdas, criterion=criterion)
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def compile_count(self) -> int:
+        """Total jit cache entries across every eval path this engine owns.
+
+        Stable compile_count across requests == zero recompiles."""
+        fns = ([self._eval_ridge] + list(self._eval_binary.values())
+               + list(self._eval_multiclass.values())
+               + list(self._perm_binary.values())
+               + list(self._perm_multiclass.values()))
+        return int(sum(f._cache_size() for f in fns))
+
+    def stats(self) -> dict:
+        s = self.cache.stats.as_dict()
+        s.update(plans_built=self.plans_built,
+                 labels_evaluated=self.labels_evaluated,
+                 compiles=self.compile_count())
+        return s
