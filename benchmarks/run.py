@@ -1,7 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus a header comment per
-section). ``--fast`` runs a reduced sweep (CI-sized).
+section). ``--fast`` runs a reduced sweep (CI-sized); ``--json PATH``
+additionally writes the rows (tagged with their section) as a JSON
+artifact — CI's bench-smoke job uploads this so the benchmark trajectory
+is captured per PR.
 
   bench_complexity  — paper Table 1 (empirical scaling exponents)
   bench_cv          — paper Fig. 3a left  (binary CV rel. efficiency)
@@ -9,11 +12,14 @@ section). ``--fast`` runs a reduced sweep (CI-sized).
   bench_multiclass  — paper Fig. 3b       (multi-class CV + permutations)
   bench_eeg         — paper Fig. 4        (EEG/MEG-style permutation run)
   bench_kernels     — CV hot-spot kernels (XLA path GFLOP/s)
+  bench_serve       — serving engine cold/warm + batch throughput
+  bench_rsa         — RSA serving cold/warm + pairdist kernel
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -22,7 +28,7 @@ jax.config.update("jax_enable_x64", True)
 
 from benchmarks import (bench_complexity, bench_cv, bench_eeg,
                         bench_kernels, bench_multiclass, bench_perm,
-                        bench_serve)
+                        bench_rsa, bench_serve)
 from benchmarks.common import print_rows
 
 MODULES = [
@@ -33,6 +39,7 @@ MODULES = [
     ("eeg(Fig4)", bench_eeg),
     ("kernels", bench_kernels),
     ("serve(engine)", bench_serve),
+    ("rsa(serve+kernel)", bench_rsa),
 ]
 
 
@@ -41,8 +48,11 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="reduced CI sweep")
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on section names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
     args = ap.parse_args()
 
+    all_rows = []
     print("name,us_per_call,derived")
     for name, mod in MODULES:
         if args.only and not any(s in name for s in args.only.split(",")):
@@ -50,6 +60,14 @@ def main() -> None:
         print(f"# --- {name} ---", file=sys.stderr)
         rows = mod.run(fast=args.fast)
         print_rows(rows)
+        all_rows.extend(dict(section=name, **r) for r in rows)
+
+    if args.json:
+        meta = {"backend": jax.default_backend(), "fast": bool(args.fast),
+                "jax": jax.__version__}
+        with open(args.json, "w") as fh:
+            json.dump({"meta": meta, "rows": all_rows}, fh, indent=2)
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,16 @@
-"""Condition-rich RSA with classifier-based dissimilarities (paper §4.2).
+"""Condition-rich RSA served end-to-end by the analytical-CV engine.
 
-Builds a Representational Dissimilarity Matrix over C conditions using
-cross-validated LDA accuracy as the dissimilarity — C(C-1)/2 pairwise
-cross-validations, each served by the shared analytical machinery (the
-hat matrix is rebuilt per pair on the pair's samples; the fold solves are
-the cheap part, exactly the regime the paper targets).
+The paper's §4.2 application: a Representational Dissimilarity Matrix over
+C conditions. Where the old version of this example rebuilt a hat matrix
+per condition pair (C(C−1)/2 separate cross-validations), `repro.rsa`
+treats all pairwise contrasts as ONE label batch against ONE shared
+CVPlan — the engine builds the plan once, evaluates every contrast at
+O(K·m²) each, and scores candidate model RDMs with a condition-permutation
+null, all through `repro.serve`.
 
 Run:  PYTHONPATH=src python examples/rsa_probe.py
 """
 
-import itertools
 import time
 
 import jax
@@ -18,35 +19,55 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import fastcv, folds, metrics
+from repro import rsa
+from repro.core import folds
 from repro.data import synthetic
+from repro.serve import CVEngine, DatasetSpec, RSARequest, serve
 
-C = 8                 # conditions -> 28 pairwise CVs
+C = 8                 # conditions -> 28 pairwise contrasts, one batch
 N_PER_COND = 24
 P = 1500              # high-dimensional patterns (P >> N)
 
 key = jax.random.PRNGKey(0)
-x_all, y_all = synthetic.make_classification(key, C * N_PER_COND, P,
-                                             num_classes=C, class_sep=1.5)
-x_all = np.asarray(x_all)
-y_all = np.asarray(y_all)
+x, y_cond = synthetic.make_classification(key, C * N_PER_COND, P,
+                                          num_classes=C, class_sep=1.5)
+spec = DatasetSpec(x, folds.stratified_kfold(y_cond, 6, seed=0), lam=1.0)
 
-rdm = np.zeros((C, C))
-f = folds.kfold(2 * N_PER_COND, 6, seed=0)
+# candidate model RDMs: the condition-mean pattern geometry (via the Pallas
+# pairdist kernel path), a circular "ring" structure, and a random control
+mu = rsa.condition_means(x, y_cond, C)
+ring = rsa.ring_rdm(C)
+rng = np.random.default_rng(1)
+rnd = np.abs(rng.normal(size=(C, C)))
+rnd = rnd + rnd.T
+np.fill_diagonal(rnd, 0.0)
+models = jnp.stack([rsa.euclidean_rdm(mu), ring, jnp.asarray(rnd)])
+model_names = ["pattern-euclidean", "ring", "random"]
+
+engine = CVEngine()
+request = RSARequest(spec, y_cond, C, model_rdms=models, n_perm=500, seed=0)
+
 t0 = time.time()
-for a, b in itertools.combinations(range(C), 2):
-    sel = np.concatenate([np.flatnonzero(y_all == a)[:N_PER_COND],
-                          np.flatnonzero(y_all == b)[:N_PER_COND]])
-    x = jnp.asarray(x_all[sel])
-    y = jnp.asarray(np.where(y_all[sel] == a, -1.0, 1.0))
-    dv, y_te = fastcv.binary_cv(x, y, f, lam=1.0)
-    acc = float(metrics.binary_accuracy(dv, y_te))
-    rdm[a, b] = rdm[b, a] = acc
-elapsed = time.time() - t0
+(resp,) = serve(engine, [request])
+jax.block_until_ready(resp.rdm)
+t_cold = time.time() - t0
+t0 = time.time()
+(resp,) = serve(engine, [request])
+jax.block_until_ready(resp.rdm)
+t_warm = time.time() - t0
 
-print(f"{C*(C-1)//2} pairwise cross-validations at P={P} in {elapsed:.1f}s")
-print("RDM (CV-accuracy dissimilarity):")
+print(f"{C * (C - 1) // 2} pairwise contrasts at P={P} in one batched "
+      f"request: cold {t_cold:.2f}s, warm {t_warm:.3f}s "
+      f"({t_cold / t_warm:.0f}x)")
+print("cross-validated RDM (pairwise decodability):")
 with np.printoptions(precision=2, suppress=True):
-    print(rdm)
+    print(np.asarray(resp.rdm))
 print(f"mean off-diagonal decodability: "
-      f"{rdm[np.triu_indices(C, 1)].mean():.3f}")
+      f"{float(jnp.mean(rsa.upper_triangle(resp.rdm))):.3f}")
+print("model-RDM comparison (Spearman, 500-permutation null):")
+for name, s, p in zip(model_names, resp.model_scores, resp.p):
+    print(f"  {name:18s} rho={float(s):+.3f}  p={float(p):.4f}")
+
+stats = engine.stats()
+print(f"engine: {stats['plans_built']} plan build(s), "
+      f"{stats['hits']} cache hit(s), {stats['compiles']} compiled programs")

@@ -18,12 +18,9 @@ permutations, problems) is sharded.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import fastcv
 from repro.core.compat import shard_map
@@ -34,6 +31,7 @@ __all__ = [
     "distributed_hat_matrix",
     "distributed_permutation_binary",
     "sharded_null_from_plan",
+    "sharded_problems",
     "searchlight_cv",
 ]
 
@@ -133,6 +131,28 @@ def _plan_from_h(h, folds: Folds, with_train_block: bool) -> fastcv.CVPlan:
     return fastcv.CVPlan(h, folds.te_idx, folds.tr_idx, chol, h_tr_te)
 
 
+def sharded_problems(fn, xs: jax.Array, mesh: Mesh, *,
+                     problem_axes: tuple = ("pod", "data")) -> jax.Array:
+    """Map ``fn`` over the problem axis of ``xs`` (Q, ...), Q sharded over
+    the mesh's problem axes (those present in the mesh are used).
+
+    This is the generic problem-axis decomposition (paper §4.2:
+    searchlights, time points, RSA sweeps): every problem is a fully
+    independent CV computation, so the only collective is the final
+    all-gather of the P(axes)-sharded output. ``fn`` takes one problem's
+    leading-axis slice and may return any array (or pytree of arrays)
+    whose leading output dimension is the problem dimension after vmap.
+    """
+    axes = tuple(a for a in problem_axes if a in mesh.axis_names)
+
+    def shard_fn(xs_shard):
+        return jax.vmap(fn)(xs_shard)
+
+    mapped = shard_map(shard_fn, mesh=mesh, in_specs=P(axes),
+                       out_specs=P(axes))
+    return mapped(xs)
+
+
 def searchlight_cv(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
                    mesh: Mesh, *, problem_axes: tuple = ("pod", "data"),
                    adjust_bias: bool = True):
@@ -142,18 +162,12 @@ def searchlight_cv(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
     Each problem runs the full analytical CV locally — zero cross-problem
     communication. Returns per-problem accuracy (Q,).
     """
-    axes = tuple(a for a in problem_axes if a in mesh.axis_names)
     te_idx, tr_idx = folds.te_idx, folds.tr_idx
 
-    def one_problem(x, y_):
-        dv, y_te = fastcv.binary_cv(x, y_, Folds.with_indices(te_idx, tr_idx),
+    def one_problem(x):
+        dv, y_te = fastcv.binary_cv(x, y, Folds.with_indices(te_idx, tr_idx),
                                     lam=lam, adjust_bias=adjust_bias)
         pred = jnp.where(dv >= 0, 1.0, -1.0)
         return jnp.mean(pred == jnp.sign(y_te))
 
-    def shard_fn(xs_shard):
-        return jax.vmap(lambda x: one_problem(x, y))(xs_shard)
-
-    fn = shard_map(shard_fn, mesh=mesh, in_specs=P(axes),
-                   out_specs=P(axes))
-    return fn(xs)
+    return sharded_problems(one_problem, xs, mesh, problem_axes=problem_axes)

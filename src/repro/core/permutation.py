@@ -15,7 +15,7 @@ for the benchmark comparison (Fig. 3 right panels, Fig. 4).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

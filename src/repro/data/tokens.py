@@ -12,9 +12,8 @@ assignment: frontends are STUBS, only the backbone is modelled).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

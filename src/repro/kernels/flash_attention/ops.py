@@ -6,11 +6,9 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, pad_to
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-from repro.kernels.flash_attention.ref import attention_ref
 
 __all__ = ["flash_attention"]
 

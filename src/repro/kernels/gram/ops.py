@@ -8,9 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import cdiv, default_interpret, pad_to
+from repro.kernels.common import default_interpret, pad_to
 from repro.kernels.gram.gram import gram_pallas
-from repro.kernels.gram import ref
 
 __all__ = ["gram", "centered_gram"]
 

@@ -6,7 +6,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, pad_to
 from repro.kernels.hat_apply.hat_apply import hat_apply_pallas

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the pairdist kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(u: jax.Array) -> jax.Array:
+    if u.dtype in (jnp.bfloat16, jnp.float16):
+        u = u.astype(jnp.float32)
+    n = jnp.sum(u * u, axis=1)
+    d = n[:, None] + n[None, :] - 2.0 * (u @ u.T)
+    return jnp.maximum(d, 0.0)

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config, list_archs
 from repro.core import folds as foldlib, permutation
-from repro.models import layers as L
 from repro.models import model as M
 from repro.models import transformer as T
 

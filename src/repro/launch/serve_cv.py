@@ -2,16 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve_cv --requests 64
     PYTHONPATH=src python -m repro.launch.serve_cv --data eeg --clients 4
+    PYTHONPATH=src python -m repro.launch.serve_cv --rsa --conditions 8
 
 Builds a :class:`repro.serve.CVEngine`, synthesises a small fleet of
 datasets (synthetic hypersphere-classification or EEG-like windowed
 features), and plays a mixed request stream against it — binary-LDA CV,
 ridge CV, multi-class CV, permutation tests, and λ-tuning — first cold
 (plans built, evals compiled), then warm (everything cached). With
-``--clients > 1`` the same stream is replayed through the thread-backed
-:class:`~repro.serve.api.EngineServer` so concurrent submitters coalesce
-onto shared micro-batches. Reports requests/s and the engine's cache /
-compile statistics.
+``--rsa`` the stream becomes RSA traffic instead: cross-validated RDMs
+(pairwise-contrast and confusion), scored against model RDMs with
+condition-permutation nulls, all riding the same cached plans and
+coalesced label batches. With ``--clients > 1`` the same stream is
+replayed through the thread-backed :class:`~repro.serve.api.EngineServer`
+so concurrent submitters coalesce onto shared micro-batches. Reports
+requests/s and the engine's cache / compile statistics.
 """
 
 from __future__ import annotations
@@ -25,10 +29,12 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 
+from repro import rsa
 from repro.core import folds as foldlib
 from repro.data import eeg, synthetic
 from repro.serve import (CVEngine, CVRequest, DatasetSpec, EngineConfig,
-                         EngineServer, PermutationRequest, TuneRequest, serve)
+                         EngineServer, PermutationRequest, RSARequest,
+                         TuneRequest, serve)
 
 
 def build_requests(args):
@@ -74,6 +80,40 @@ def build_requests(args):
     return requests
 
 
+def build_rsa_requests(args):
+    """RSA stream: C-condition datasets, RDM requests alternating pairwise
+    dissimilarities and confusion contrasts, scored against model RDMs."""
+    c = args.conditions
+    datasets = []
+    for d in range(args.datasets):
+        key = jax.random.PRNGKey(args.seed + d)
+        x, y_cond = synthetic.make_classification(
+            key, args.n, args.p, num_classes=c, class_sep=2.0)
+        spec = DatasetSpec(x, foldlib.stratified_kfold(y_cond, args.k, seed=d),
+                           args.lam)
+        mu = rsa.condition_means(x, y_cond, c)
+        models = jnp.stack([rsa.euclidean_rdm(mu), rsa.ring_rdm(c)])
+        datasets.append((spec, y_cond, models))
+
+    requests = []
+    for i in range(args.requests):
+        spec, y_cond, models = datasets[i % len(datasets)]
+        slot = i % 4
+        if slot == 3:
+            requests.append(RSARequest(spec, y_cond, c,
+                                       contrast="multiclass",
+                                       model_rdms=models, n_perm=args.perm,
+                                       seed=i))
+        elif slot == 2:
+            requests.append(RSARequest(spec, y_cond, c,
+                                       dissimilarity="contrast",
+                                       adjust_bias=False))
+        else:
+            requests.append(RSARequest(spec, y_cond, c, model_rdms=models,
+                                       n_perm=args.perm, seed=i))
+    return requests
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -91,24 +131,37 @@ def main():
                     help="if > 1, replay warm through this many threads")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rsa", action="store_true",
+                    help="serve an RSA request stream instead of mixed CV")
+    ap.add_argument("--conditions", type=int, default=6,
+                    help="RSA conditions per dataset (with --rsa)")
     args = ap.parse_args()
 
     engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
-    requests = build_requests(args)
-    print(f"[serve_cv] {len(requests)} requests over {args.datasets} datasets "
-          f"({args.data}), λ={args.lam}, K={args.k}, T={args.perm}")
+    if args.rsa:
+        requests = build_rsa_requests(args)
+        print(f"[serve_cv] RSA mode: {len(requests)} requests over "
+              f"{args.datasets} datasets, C={args.conditions}, λ={args.lam}, "
+              f"K={args.k}, T={args.perm}")
+    else:
+        requests = build_requests(args)
+        print(f"[serve_cv] {len(requests)} requests over {args.datasets} "
+              f"datasets ({args.data}), λ={args.lam}, K={args.k}, "
+              f"T={args.perm}")
+
+    def ready(rs):
+        jax.block_until_ready([r.values for r in rs if hasattr(r, "values")]
+                              + [r.rdm for r in rs if hasattr(r, "rdm")])
 
     t0 = time.perf_counter()
     responses = serve(engine, requests)
-    jax.block_until_ready([r.values for r in responses
-                           if hasattr(r, "values")])
+    ready(responses)
     t_cold = time.perf_counter() - t0
 
     compiles_after_cold = engine.compile_count()
     t0 = time.perf_counter()
     responses = serve(engine, requests)
-    jax.block_until_ready([r.values for r in responses
-                           if hasattr(r, "values")])
+    ready(responses)
     t_warm = time.perf_counter() - t0
     warm_recompiles = engine.compile_count() - compiles_after_cold
 
@@ -155,6 +208,14 @@ def main():
     if scored:
         print(f"[serve_cv] mean CV score over {len(scored)} CV requests: "
               f"{sum(scored)/len(scored):.3f}")
+    rsa_scored = [r for r in responses
+                  if hasattr(r, "model_scores") and r.model_scores is not None]
+    if rsa_scored:
+        best = [float(jnp.max(r.model_scores)) for r in rsa_scored]
+        sig = [float(jnp.min(r.p)) for r in rsa_scored if r.p is not None]
+        print(f"[serve_cv] RSA: best-model score mean "
+              f"{sum(best)/len(best):.3f} over {len(rsa_scored)} scored "
+              f"requests" + (f", min p {min(sig):.4f}" if sig else ""))
 
 
 if __name__ == "__main__":

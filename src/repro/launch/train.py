@@ -19,7 +19,6 @@ import jax
 from repro.configs.base import apply_overrides, get_config, list_archs
 from repro.data.tokens import TokenStream, TokenStreamConfig
 from repro.launch import sharding as sh
-from repro.launch.mesh import make_host_mesh
 from repro.optim import optimizer as O
 from repro.train.trainer import Trainer, TrainerConfig
 

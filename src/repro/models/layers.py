@@ -11,7 +11,6 @@ smoke tests may run everything f32 via the config dtype fields.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

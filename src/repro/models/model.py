@@ -15,8 +15,6 @@ Cross-entropy is computed in the sharded-vocab-friendly masked-reduce form
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
-
 import jax
 import jax.numpy as jnp
 

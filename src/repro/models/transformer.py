@@ -15,9 +15,6 @@ residual MLP/MoE sub-block (xLSTM kinds are self-contained, cfg.d_ff == 0).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -26,7 +23,6 @@ from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import rglru as rg
 from repro.models import xlstm as xl
-from repro.launch.sharding import constrain
 
 ATTN_KINDS = ("attn", "local", "cross")
 

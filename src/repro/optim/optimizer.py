@@ -12,7 +12,6 @@ params' TP layout.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax

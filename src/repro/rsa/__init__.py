@@ -1,0 +1,40 @@
+"""repro.rsa — Representational Similarity Analysis as a first-class workload.
+
+The paper's §4.2 application family: cross-validated condition
+dissimilarities (pairwise-contrast or confusion RDMs) from shared
+:class:`~repro.core.fastcv.CVPlan` fold solves, model-RDM scoring with
+rank correlations and condition-permutation nulls, Pallas-kernelled
+pattern RDMs, and mesh-sharded searchlight sweeps.
+
+  rdm      empirical RDMs from CVPlan fold solves; searchlight sharding.
+  compare  Spearman/Kendall/Pearson/cosine model scoring + permutation nulls.
+
+Served end-to-end via ``repro.serve.RSARequest``.
+"""
+
+from repro.rsa.compare import (  # noqa: F401
+    compare_rdms,
+    cosine,
+    kendall,
+    make_compare,
+    make_compare_null,
+    pearson,
+    permutation_null,
+    rankdata,
+    spearman,
+    upper_triangle,
+)
+from repro.rsa.rdm import (  # noqa: F401
+    condition_means,
+    condition_pairs,
+    euclidean_rdm,
+    make_eval_pairs,
+    pair_contrast_columns,
+    pair_dissimilarities,
+    rdm_binary,
+    rdm_from_confusion,
+    rdm_from_pair_values,
+    rdm_multiclass,
+    ring_rdm,
+    searchlight_rdm,
+)

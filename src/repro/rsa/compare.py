@@ -1,0 +1,147 @@
+"""Model-RDM comparison: rank correlations, cosine, permutation nulls.
+
+RSA's second half: vectorise the empirical RDM's upper triangle, score it
+against each candidate model RDM, and calibrate with a condition-label
+permutation test — permuting condition identities (rows+columns of the
+empirical RDM jointly) is the standard exchangeable null for RDM
+correlations. Permutations come from
+:func:`repro.core.permutation.permutation_indices`, so engine-served nulls
+are prefix-stable under shape-bucket rounding exactly like the CV
+permutation path.
+
+Everything here is jit-friendly with static method dispatch; sizes are
+tiny (B = C(C−1)/2 pairs, M models, T permutations), so the O(B²) Kendall
+pairwise form is the right trade against a sort-based O(B log B) one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "upper_triangle",
+    "rankdata",
+    "pearson",
+    "spearman",
+    "kendall",
+    "cosine",
+    "compare_rdms",
+    "permutation_null",
+    "make_compare",
+    "make_compare_null",
+]
+
+_EPS = 1e-12
+
+
+def upper_triangle(rdm: jax.Array) -> jax.Array:
+    """Vectorise the strict upper triangle of (..., C, C) into (..., B)."""
+    c = rdm.shape[-1]
+    iu, ju = np.triu_indices(c, 1)
+    return rdm[..., iu, ju]
+
+
+def rankdata(v: jax.Array) -> jax.Array:
+    """Average ranks (1-based, ties get mid-ranks), jit-friendly."""
+    order = jnp.argsort(v)
+    sv = v[order]
+    first = jnp.searchsorted(sv, sv, side="left")
+    last = jnp.searchsorted(sv, sv, side="right")
+    mid = 0.5 * (first + last + 1).astype(v.dtype)
+    return jnp.zeros_like(v).at[order].set(mid)
+
+
+def pearson(a: jax.Array, b: jax.Array) -> jax.Array:
+    ac = a - jnp.mean(a)
+    bc = b - jnp.mean(b)
+    denom = jnp.sqrt(jnp.sum(ac * ac) * jnp.sum(bc * bc))
+    return jnp.sum(ac * bc) / jnp.maximum(denom, _EPS)
+
+
+def spearman(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Spearman ρ = Pearson correlation of average ranks."""
+    return pearson(rankdata(a), rankdata(b))
+
+
+def kendall(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Kendall τ-b (tie-corrected), via the O(B²) pairwise sign form."""
+    da = jnp.sign(a[:, None] - a[None, :])
+    db = jnp.sign(b[:, None] - b[None, :])
+    s = 0.5 * jnp.sum(da * db)  # concordant − discordant
+    n = a.shape[0]
+    n0 = 0.5 * n * (n - 1)
+    ties_a = 0.5 * (jnp.sum(da == 0) - n)  # tied pairs in a
+    ties_b = 0.5 * (jnp.sum(db == 0) - n)
+    denom = jnp.sqrt((n0 - ties_a) * (n0 - ties_b))
+    return s / jnp.maximum(denom, _EPS)
+
+
+def cosine(a: jax.Array, b: jax.Array) -> jax.Array:
+    denom = jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))
+    return jnp.sum(a * b) / jnp.maximum(denom, _EPS)
+
+
+_METHODS = {
+    "spearman": spearman,
+    "kendall": kendall,
+    "pearson": pearson,
+    "cosine": cosine,
+}
+
+
+def _method(name: str):
+    fn = _METHODS.get(name)
+    if fn is None:
+        raise ValueError(
+            f"unknown comparison {name!r}; expected one of {tuple(_METHODS)}"
+        )
+    return fn
+
+
+def compare_rdms(
+    empirical: jax.Array, model_rdms: jax.Array, method: str = "spearman"
+) -> jax.Array:
+    """Score (M, C, C) model RDMs against the (C, C) empirical RDM → (M,)."""
+    fn = _method(method)
+    ev = upper_triangle(empirical)
+    mv = upper_triangle(model_rdms)
+    return jax.vmap(lambda m: fn(ev, m))(mv)
+
+
+def permutation_null(
+    empirical: jax.Array,
+    model_rdms: jax.Array,
+    perms: jax.Array,
+    method: str = "spearman",
+) -> jax.Array:
+    """(M, T) null scores: condition labels permuted per perms (T, C).
+
+    Permuting the empirical RDM's rows and columns jointly (not the model
+    RDMs) yields one draw from the no-correspondence null per permutation.
+    """
+    fn = _method(method)
+    mv = upper_triangle(model_rdms)  # (M, B)
+
+    def one(pi):
+        ev = upper_triangle(empirical[pi][:, pi])
+        return jax.vmap(lambda m: fn(ev, m))(mv)  # (M,)
+
+    return jax.vmap(one)(perms).T  # (M, T)
+
+
+def make_compare(method: str = "spearman"):
+    """Fresh jitted ``(empirical (C,C), models (M,C,C)) -> (M,)`` scorer.
+
+    Independently cached per call (``fn._cache_size()``), matching the
+    serve engine's compile-count observability convention.
+    """
+    return jax.jit(functools.partial(compare_rdms, method=method))
+
+
+def make_compare_null(method: str = "spearman"):
+    """Fresh jitted ``(empirical, models, perms (T,C)) -> (M, T)`` null."""
+    return jax.jit(functools.partial(permutation_null, method=method))

@@ -5,8 +5,10 @@ on features only) have the exact shape of a serving workload — expensive
 label-invariant state, cheap per-request evaluation. This package
 productises that:
 
-  cache     PlanCache — LRU CVPlan store under a byte budget.
-  engine    CVEngine — cached plans + shape-bucketed jitted eval paths.
+  cache     PlanCache — LRU CVPlan store under a byte budget, with
+            admission control for plans larger than the whole budget.
+  engine    CVEngine — cached plans + shape-bucketed jitted eval paths
+            (CV, permutation, and RSA workload families).
   batching  MicroBatcher — coalesce ragged same-plan label queries.
   api       Request/response types, sync driver, threaded queue server.
 
@@ -20,6 +22,8 @@ from repro.serve.api import (  # noqa: F401
     EngineServer,
     PermutationRequest,
     PermutationResponse,
+    RSARequest,
+    RSAResponse,
     TuneRequest,
     TuneResponse,
     serve,

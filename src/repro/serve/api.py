@@ -6,6 +6,11 @@ Clients speak in terms of datasets and label queries:
     LDA, or ridge regression) against a dataset.
   * :class:`PermutationRequest` — a full permutation test (observed + null
     + p-value); the expensive part is label-batched through the plan.
+  * :class:`RSARequest` — a cross-validated RDM over conditions (pairwise
+    contrasts or multi-class confusion), optionally scored against model
+    RDMs with a condition-permutation null. Contrast columns are just
+    label columns, so RSA requests coalesce through the same
+    :class:`~repro.serve.batching.MicroBatcher` paths as CV requests.
   * :class:`TuneRequest` — ridge-λ selection, routed to the
     eigendecomposition-based exact-LOO machinery (`tuning.tune_ridge`).
 
@@ -30,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics, tuning
+from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import MicroBatcher, as_folds
 from repro.serve.engine import CVEngine
 
@@ -37,9 +43,11 @@ __all__ = [
     "DatasetSpec",
     "CVRequest",
     "PermutationRequest",
+    "RSARequest",
     "TuneRequest",
     "CVResponse",
     "PermutationResponse",
+    "RSAResponse",
     "TuneResponse",
     "serve",
     "EngineServer",
@@ -87,6 +95,32 @@ class PermutationRequest:
 
 
 @dataclasses.dataclass
+class RSARequest:
+    """Cross-validated RDM over conditions, optionally scored vs models.
+
+    ``y`` holds integer condition labels in [0, num_classes). With
+    ``contrast="binary"`` the RDM comes from C(C−1)/2 pairwise ±1/0
+    contrast columns through the plan's fold solves (dissimilarity
+    "accuracy" or "contrast"); with ``contrast="multiclass"`` it is the
+    symmetrised confusion dissimilarity of one Algorithm-2 CV run.
+    ``model_rdms`` (M, C, C), when given, are scored against the empirical
+    RDM (``comparison``: spearman/kendall/pearson/cosine) with an
+    ``n_perm``-draw condition-permutation null.
+    """
+
+    data: DatasetSpec
+    y: jax.Array                  # int (N,) condition labels
+    num_classes: int
+    contrast: str = "binary"      # "binary" | "multiclass"
+    dissimilarity: str = "accuracy"  # binary only: "accuracy" | "contrast"
+    adjust_bias: bool = True      # binary only (paper §2.5)
+    model_rdms: Optional[jax.Array] = None   # (M, C, C)
+    comparison: str = "spearman"
+    n_perm: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass
 class TuneRequest:
     x: jax.Array
     y: jax.Array
@@ -94,7 +128,7 @@ class TuneRequest:
     criterion: str = "mse"
 
 
-Request = Union[CVRequest, PermutationRequest, TuneRequest]
+Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest]
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +150,16 @@ class PermutationResponse:
     observed: jax.Array
     null: jax.Array
     p: jax.Array
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class RSAResponse:
+    rdm: jax.Array                # (C, C) empirical RDM
+    pair_values: Optional[jax.Array]   # (B,) pair dissimilarities (binary)
+    model_scores: Optional[jax.Array]  # (M,) or None
+    null: Optional[jax.Array]     # (M, n_perm) or None
+    p: Optional[jax.Array]        # (M,) or None
     plan_key: tuple
 
 
@@ -160,8 +204,20 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
 
     # -- group CV requests by (plan, eval path) ----------------------------
     groups: dict = {}
+    rsa_groups: dict = {}
     for i, req in enumerate(requests):
-        if isinstance(req, TuneRequest):
+        if isinstance(req, RSARequest):
+            if req.contrast not in ("binary", "multiclass"):
+                raise ValueError(f"unknown RSA contrast {req.contrast!r}")
+            needs_train = req.contrast == "multiclass" or req.adjust_bias
+            key, plan = plan_for(req.data, needs_train)
+            if req.contrast == "binary":
+                gkey = (key, "binary", req.dissimilarity, req.adjust_bias,
+                        req.num_classes)
+            else:
+                gkey = (key, "multiclass", None, None, req.num_classes)
+            rsa_groups.setdefault(gkey, (plan, []))[1].append((i, req))
+        elif isinstance(req, TuneRequest):
             responses[i] = TuneResponse(engine.tune(
                 req.x, req.y, lambdas=req.lambdas, criterion=req.criterion))
         elif isinstance(req, PermutationRequest):
@@ -212,6 +268,30 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
                 y_te = y[plan.te_idx]      # (K, m[, B]) via trailing dims
             responses[i] = CVResponse(task, values, y_te,
                                       _score(task, values, y_te), key)
+
+    # -- RSA: contrast columns ride the same coalesced label-batch path ----
+    for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
+        if contrast == "binary":
+            cols = [rsa_rdm.pair_contrast_columns(jnp.asarray(req.y), c,
+                                                  plan.h.dtype)
+                    for _, req in members]
+            outs = batcher.run_columns(
+                cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj))
+            rdms = [(rsa_rdm.rdm_from_pair_values(vals, c), vals)
+                    for vals in outs]
+        else:
+            ys = [jnp.asarray(req.y) for _, req in members]
+            preds = batcher.run_rows(
+                ys, lambda b: engine.eval_multiclass(plan, b, c))
+            rdms = [(rsa_rdm.rdm_from_confusion(pred, y[plan.te_idx], c), None)
+                    for pred, y in zip(preds, ys)]
+        for (i, req), (rdm, vals) in zip(members, rdms):
+            scores = null = p = None
+            if req.model_rdms is not None:
+                scores, null, p = engine.compare_rdms(
+                    rdm, jnp.asarray(req.model_rdms), req.comparison,
+                    req.n_perm, jax.random.PRNGKey(req.seed))
+            responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
     return responses
 
 

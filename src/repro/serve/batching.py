@@ -18,7 +18,7 @@ Two layouts, matching the engine's eval paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

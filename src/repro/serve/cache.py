@@ -8,10 +8,11 @@ so any number of tenants asking about the same dataset share one build.
 
 Eviction is least-recently-used under a *byte* budget (plans from different
 datasets differ wildly in size: N=64 LOO vs N=4096 10-fold is a ~4000×
-spread, so an entry-count LRU would be meaningless). A single plan larger
-than the whole budget is still admitted (the engine must serve it) and
-simply evicts everything else; ``bytes_in_use`` then exceeds the budget
-until it is itself evicted.
+spread, so an entry-count LRU would be meaningless). Admission control: a
+single plan larger than the whole budget is *not* admitted — it is served
+un-cached (``get_or_build`` still returns it) and counted in
+``stats.oversized``, rather than evicting every resident plan to make room
+for an entry that can never fit.
 
 Thread safety: one coarse lock around all operations. ``get_or_build``
 holds it across the build, which doubles as single-flight semantics —
@@ -33,14 +34,16 @@ __all__ = ["CacheStats", "PlanCache"]
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
-    misses: int = 0
+    misses: int = 0        # builds (cached inserts + oversized un-cached)
     evictions: int = 0
+    oversized: int = 0     # builds served un-cached (nbytes > byte_budget)
     bytes_in_use: int = 0
     byte_budget: int = 0
 
     @property
     def entries_alive(self) -> int:
-        return self.misses - self.evictions  # inserts minus removals
+        # inserts (misses minus un-cached builds) minus removals
+        return self.misses - self.oversized - self.evictions
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -79,9 +82,19 @@ class PlanCache:
             self.stats.hits += 1
             return plan
 
-    def put(self, key: Hashable, plan: CVPlan) -> None:
-        """Insert (counted as a miss) and evict LRU entries over budget."""
+    def put(self, key: Hashable, plan: CVPlan) -> bool:
+        """Insert (counted as a miss) and evict LRU entries over budget.
+
+        Admission control: a plan that could never fit (``nbytes`` above
+        the whole budget) is rejected — counted as a miss (it was a build)
+        *and* in ``stats.oversized``, resident entries untouched. Returns
+        whether the plan was admitted.
+        """
         with self._lock:
+            if plan.nbytes > self.stats.byte_budget:
+                self.stats.misses += 1
+                self.stats.oversized += 1
+                return False
             if key in self._entries:          # replace without re-counting
                 self.stats.bytes_in_use -= self._entries.pop(key).nbytes
                 self.stats.misses -= 1
@@ -89,6 +102,7 @@ class PlanCache:
             self.stats.misses += 1
             self.stats.bytes_in_use += plan.nbytes
             self._evict_over_budget()
+            return True
 
     def _evict_over_budget(self) -> None:
         while (self.stats.bytes_in_use > self.stats.byte_budget
@@ -99,7 +113,11 @@ class PlanCache:
 
     def get_or_build(self, key: Hashable,
                      build: Callable[[], CVPlan]) -> tuple[CVPlan, bool]:
-        """Return ``(plan, was_hit)``; builds (single-flight) on miss."""
+        """Return ``(plan, was_hit)``; builds (single-flight) on miss.
+
+        An oversized build is still returned to the caller — the engine
+        must serve it — it just never enters the cache (see ``put``).
+        """
         with self._lock:
             plan = self.get(key)
             if plan is not None:

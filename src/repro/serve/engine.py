@@ -7,7 +7,8 @@ The engine is the multi-tenant core of ``repro.serve``. It owns
     LRU-evicted under a byte budget, so repeated requests against the same
     features never re-factorise;
   * a fixed family of *jitted evaluators* (binary LDA, multi-class LDA,
-    ridge regression, permutation-null metrics), created once per engine so
+    ridge regression, permutation-null metrics, RSA pairwise-contrast
+    dissimilarities and model-RDM scoring), created once per engine so
     their jit caches — and hence compile counts — are observable;
   * *shape buckets* for the label-batch dimension: every batch is padded up
     to a static bucket size before hitting jit, so an engine serving ragged
@@ -31,6 +32,8 @@ import jax.numpy as jnp
 from repro.core import fastcv, metrics, multiclass, permutation as perm_lib
 from repro.core import tuning
 from repro.core.folds import Folds
+from repro.rsa import compare as rsa_compare
+from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, bucket_size
 from repro.serve.cache import PlanCache
 
@@ -91,6 +94,9 @@ class CVEngine:
         self._eval_multiclass = {}  # num_classes -> jit[(plan, y(B,N)) -> (B,K,m)]
         self._perm_binary = {}      # (metric, adjust_bias) -> jit -> (B,)
         self._perm_multiclass = {}  # num_classes -> jit -> (B,)
+        self._rsa_pairs = {}        # (dissimilarity, adjust_bias) -> jit -> (B,)
+        self._rsa_score = {}        # method -> jit[(emp, models) -> (M,)]
+        self._rsa_null = {}         # method -> jit[(emp, models, perms) -> (M,T)]
         self.plans_built = 0
         self.labels_evaluated = 0
 
@@ -142,6 +148,20 @@ class CVEngine:
     # Shape-bucketed jitted evaluation
     # ------------------------------------------------------------------
 
+    @staticmethod
+    def _strip_train(plan: fastcv.CVPlan) -> fastcv.CVPlan:
+        """Canonicalise a plan for train-block-free eval paths.
+
+        A no-train-block request may be served from the cached *superset*
+        plan (see :meth:`plan`), whose ``h_tr_te`` is an array instead of
+        None — a different pytree structure, which would retrace the jitted
+        eval and recompute the unused Eq. 15 train solves. Stripping the
+        block restores one structure (and one compiled program) per shape.
+        """
+        if plan.h_tr_te is None:
+            return plan
+        return dataclasses.replace(plan, h_tr_te=None)
+
     def _pad_cols(self, y: jax.Array) -> tuple[jax.Array, int]:
         b = y.shape[1]
         padded = bucket_size(b, self.config.buckets)
@@ -166,6 +186,8 @@ class CVEngine:
         if fn is None:
             fn = self._eval_binary[adjust_bias] = fastcv.make_eval_binary(
                 adjust_bias=adjust_bias, donate=self._donate)
+        if not adjust_bias:
+            plan = self._strip_train(plan)
         yb = yb.astype(plan.h.dtype)
         padded, b = self._pad_cols(yb)
         out = fn(plan, padded)[..., :b]
@@ -174,6 +196,7 @@ class CVEngine:
 
     def eval_ridge(self, plan: fastcv.CVPlan, y: jax.Array) -> jax.Array:
         """Exact CV ridge predictions ẏ_Te. y: (N,) or (N, B) responses."""
+        plan = self._strip_train(plan)
         squeeze = y.ndim == 1
         yb = (y[:, None] if squeeze else y).astype(plan.h.dtype)
         padded, b = self._pad_cols(yb)
@@ -195,6 +218,60 @@ class CVEngine:
         out = fn(plan, padded)[:b]
         self.labels_evaluated += b
         return out[0] if squeeze else out
+
+    # ------------------------------------------------------------------
+    # RSA serving (pairwise-contrast RDMs + model scoring, §4.2)
+    # ------------------------------------------------------------------
+
+    def eval_rsa_pairs(self, plan: fastcv.CVPlan, cols: jax.Array,
+                       dissimilarity: str = "accuracy",
+                       adjust_bias: bool = True) -> jax.Array:
+        """Pairwise-contrast dissimilarities. cols: (N, B) ±1/0 columns.
+
+        Contrast columns are just label columns, so they ride the same
+        bucketed column path as binary/ridge evals: padded (all-zero)
+        columns score to a harmless constant and are sliced away.
+        """
+        fn = self._rsa_pairs.get((dissimilarity, adjust_bias))
+        if fn is None:
+            fn = self._rsa_pairs[(dissimilarity, adjust_bias)] = \
+                rsa_rdm.make_eval_pairs(dissimilarity, adjust_bias,
+                                        donate=self._donate)
+        if not adjust_bias:
+            plan = self._strip_train(plan)
+        cols = cols.astype(plan.h.dtype)
+        padded, b = self._pad_cols(cols)
+        out = fn(plan, padded)[:b]
+        self.labels_evaluated += b
+        return out
+
+    def compare_rdms(self, empirical: jax.Array, model_rdms: jax.Array,
+                     method: str = "spearman", n_perm: int = 0,
+                     key: Optional[jax.Array] = None):
+        """Score model RDMs against an empirical RDM; optional null.
+
+        Returns (scores (M,), null (M, n_perm) | None, p (M,) | None).
+        Null permutations are generated at the bucketed size (like the CV
+        permutation path), so arbitrary client-chosen n_perm never
+        compiles a fresh program after one warm-up per shape bucket.
+        """
+        fn = self._rsa_score.get(method)
+        if fn is None:
+            fn = self._rsa_score[method] = rsa_compare.make_compare(method)
+        scores = fn(empirical, model_rdms)
+        if n_perm <= 0:
+            return scores, None, None
+        nfn = self._rsa_null.get(method)
+        if nfn is None:
+            nfn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
+        t_gen = bucket_size(n_perm, self.config.buckets)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        perms = perm_lib.permutation_indices(key, empirical.shape[0], t_gen)
+        null = nfn(empirical, model_rdms, perms)[:, :n_perm]
+        p = ((1.0 + jnp.sum(null >= scores[:, None], axis=1))
+             / (1.0 + n_perm))
+        return scores, null, p
 
     # ------------------------------------------------------------------
     # Permutation serving (Algorithms 1 & 2 against a cached plan)
@@ -236,6 +313,8 @@ class CVEngine:
         mesh's ``perm_axes``; otherwise it runs through the bucketed local
         eval path (padded to a static shape, so repeats never recompile).
         """
+        if not adjust_bias:
+            plan = self._strip_train(plan)
         y = y.astype(plan.h.dtype)
         n = y.shape[0]
         fn = self._perm_binary_fn(metric, adjust_bias)
@@ -297,7 +376,10 @@ class CVEngine:
         fns = ([self._eval_ridge] + list(self._eval_binary.values())
                + list(self._eval_multiclass.values())
                + list(self._perm_binary.values())
-               + list(self._perm_multiclass.values()))
+               + list(self._perm_multiclass.values())
+               + list(self._rsa_pairs.values())
+               + list(self._rsa_score.values())
+               + list(self._rsa_null.values()))
         return int(sum(f._cache_size() for f in fns))
 
     def stats(self) -> dict:

@@ -6,7 +6,6 @@ multi-pod dry-run lowers for every (arch × shape × mesh) cell.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

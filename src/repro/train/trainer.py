@@ -12,15 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.data.tokens import TokenStream
 from repro.optim import optimizer as O
 from repro.train import checkpoint as ckpt
 from repro.train import steps as steps_lib

@@ -18,6 +18,8 @@ from repro.kernels.foldsolve.ops import foldsolve
 from repro.kernels.foldsolve.ref import foldsolve_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pairdist.ops import pairwise_sq_dists
+from repro.kernels.pairdist.ref import pairwise_sq_dists_ref
 
 _TOL = {
     jnp.float64: dict(rtol=1e-9, atol=1e-9),
@@ -56,6 +58,34 @@ def test_gram_block_shapes():
     want = gram_ref(x)
     for bn, bp in [(32, 32), (48, 80), (96, 160)]:
         got = gram(x, block_n=bn, block_p=bp, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-9)
+
+
+# ------------------------------------------------------------ pairdist ----
+
+@pytest.mark.parametrize("c,p", [(5, 30), (8, 128), (33, 500), (17, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_pairdist_sweep(c, p, dtype):
+    u = jax.random.normal(_key(c * p), (c, p), dtype)
+    got = pairwise_sq_dists(u, interpret=True)
+    want = pairwise_sq_dists_ref(u)
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=_TOL[dtype]["rtol"],
+                               atol=_TOL[dtype]["atol"] * scale)
+    # the diagonal cancels ‖u‖² + ‖u‖² − 2u·u, so its absolute error scales
+    # with the distance magnitudes (visible in f32)
+    d = np.asarray(got)
+    assert np.all(d >= 0.0)
+    assert np.allclose(np.diag(d), 0.0, atol=_TOL[dtype]["atol"] * scale)
+
+
+def test_pairdist_block_shapes():
+    u = jax.random.normal(_key(6), (24, 160), jnp.float64)
+    want = pairwise_sq_dists_ref(u)
+    for bc, bp in [(8, 32), (24, 80), (24, 160)]:
+        got = pairwise_sq_dists(u, block_c=bc, block_p=bp, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-9, atol=1e-9)
 

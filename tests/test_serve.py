@@ -131,12 +131,35 @@ def test_cache_lru_order_respects_recency():
     assert cache.stats.hits == 1
 
 
-def test_cache_admits_oversized_plan():
+def test_cache_rejects_oversized_plan():
+    """Admission control: a plan that can never fit is served un-cached."""
     one = _dummy_plan().nbytes
     cache = PlanCache(byte_budget=one // 2)
-    cache.put("big", _dummy_plan())
-    assert "big" in cache                                # admitted anyway
-    assert cache.stats.bytes_in_use > cache.stats.byte_budget
+    admitted = cache.put("big", _dummy_plan())
+    assert not admitted
+    assert "big" not in cache
+    assert cache.stats.oversized == 1
+    assert cache.stats.bytes_in_use == 0
+
+
+def test_cache_oversized_plan_does_not_evict_residents():
+    """An oversized build must NOT flush the cache to make room it can
+    never use (ROADMAP admission-control item)."""
+    one = _dummy_plan().nbytes
+    cache = PlanCache(byte_budget=2 * one + one // 2)
+    cache.put("a", _dummy_plan())
+    cache.put("b", _dummy_plan())
+    big = _dummy_plan(n=96, k=4, m=24)                   # > whole budget
+    assert big.nbytes > cache.stats.byte_budget
+    plan, was_hit = cache.get_or_build("big", lambda: big)
+    assert plan is big and not was_hit                   # still served
+    assert "big" not in cache
+    assert "a" in cache and "b" in cache                 # residents survive
+    assert cache.stats.evictions == 0
+    assert cache.stats.oversized == 1
+    # the counter keeps counting on repeat builds (it never becomes a hit)
+    cache.get_or_build("big", lambda: big)
+    assert cache.stats.oversized == 2
 
 
 def test_engine_cache_eviction_end_to_end(problem):

@@ -1,13 +1,11 @@
 """Training infrastructure: checkpointing, restart, straggler, compression,
 schedules, end-to-end tiny training convergence."""
 
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.data.tokens import TokenStream, TokenStreamConfig
