@@ -27,16 +27,20 @@ def run(fast: bool = False):
     for p in ps:
         x, yc = synthetic.make_classification(jax.random.PRNGKey(p), N, p)
         y = jnp.where(yc == 0, -1.0, 1.0)
-        t_std.append(timeit(lambda: lda.standard_cv_binary(x, y, f, lam=1.0),
-                            repeats=2))
-        t_ana.append(timeit(lambda: fastcv.binary_cv(x, y, f, lam=1.0),
-                            repeats=2))
+        t_std.append(timeit(lambda: lda.standard_cv_binary(x, y, f, lam=1.0), repeats=2))
+        t_ana.append(timeit(lambda: fastcv.binary_cv(x, y, f, lam=1.0), repeats=2))
     lp = np.log(np.asarray(ps, float))
     slope_std = float(np.polyfit(lp, np.log(t_std), 1)[0])
     slope_ana = float(np.polyfit(lp, np.log(t_ana), 1)[0])
     return [
-        row("complexity/standard_scaling_vs_P", t_std[-1],
-            f"loglog_slope={slope_std:.2f} (theory 2..3, O(KNP^2+KP^3))"),
-        row("complexity/analytical_scaling_vs_P", t_ana[-1],
-            f"loglog_slope={slope_ana:.2f} (theory <=1, O(N^2 P) setup only)"),
+        row(
+            "complexity/standard_scaling_vs_P",
+            t_std[-1],
+            f"loglog_slope={slope_std:.2f} (theory 2..3, O(KNP^2+KP^3))",
+        ),
+        row(
+            "complexity/analytical_scaling_vs_P",
+            t_ana[-1],
+            f"loglog_slope={slope_ana:.2f} (theory <=1, O(N^2 P) setup only)",
+        ),
     ]

@@ -38,13 +38,14 @@ def run(fast: bool = False):
             y = jnp.where(yc == 0, -1.0, 1.0)
             lam = 1.0
 
-            t_std = timeit(lambda: lda.standard_cv_binary(x, y, f, lam=lam),
-                           repeats=2)
-            t_ana = timeit(lambda: fastcv.binary_cv(x, y, f, lam=lam),
-                           repeats=2)
+            t_std = timeit(lambda: lda.standard_cv_binary(x, y, f, lam=lam), repeats=2)
+            t_ana = timeit(lambda: fastcv.binary_cv(x, y, f, lam=lam), repeats=2)
             rel = relative_efficiency(t_std, t_ana)
-            rows.append(row(
-                f"cv_binary/n{n}_{kname}_p{p}", t_ana,
-                f"rel_eff={rel:.2f} t_std={t_std*1e3:.1f}ms "
-                f"t_ana={t_ana*1e3:.1f}ms"))
+            rows.append(
+                row(
+                    f"cv_binary/n{n}_{kname}_p{p}",
+                    t_ana,
+                    f"rel_eff={rel:.2f} t_std={t_std*1e3:.1f}ms t_ana={t_ana*1e3:.1f}ms",
+                )
+            )
     return rows

@@ -22,59 +22,77 @@ from repro.core import folds as foldlib, permutation
 from repro.data import eeg
 from benchmarks.common import relative_efficiency, row, timeit
 
-N_TRIALS = 256      # paper: ~787/subject; reduced for the 1-core container
-T_FULL = 100        # paper's permutation count
+N_TRIALS = 256  # paper: ~787/subject; reduced for the 1-core container
+T_FULL = 100  # paper's permutation count
 T_MEAS = 2
 
 
 def run(fast: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
-    ds2 = eeg.simulate_subject(jax.random.PRNGKey(1), n_trials=N_TRIALS,
-                               num_classes=2)
-    ds3 = eeg.simulate_subject(jax.random.PRNGKey(2), n_trials=N_TRIALS,
-                               num_classes=3)
+    ds2 = eeg.simulate_subject(jax.random.PRNGKey(1), n_trials=N_TRIALS, num_classes=2)
+    ds3 = eeg.simulate_subject(jax.random.PRNGKey(2), n_trials=N_TRIALS, num_classes=3)
     f = foldlib.kfold(N_TRIALS, 10, seed=0)
     lam = 1.0
 
-    cases = [("binary_p380", ds2,
-              eeg.timepoint_features(ds2, t_index=135), 2)]
+    cases = [("binary_p380", ds2, eeg.timepoint_features(ds2, t_index=135), 2)]
     if not fast:
-        cases += [("binary_p3800", ds2, eeg.windowed_features(ds2, 100.0), 2),
-                  ("multiclass_p1900", ds3, eeg.windowed_features(ds3, 200.0), 3)]
+        cases += [
+            ("binary_p3800", ds2, eeg.windowed_features(ds2, 100.0), 2),
+            ("multiclass_p1900", ds3, eeg.windowed_features(ds3, 200.0), 3),
+        ]
 
     for name, ds, feats, c in cases:
         x = feats.astype(jnp.float64)
         if c == 2:
             y = jnp.where(ds.y == 0, -1.0, 1.0)
-            t_ana = timeit(lambda: permutation.analytical_permutation_binary(
-                x, y, f, lam, n_perm=T_FULL, key=key, chunk=50), repeats=1)
-            t_std_m = timeit(lambda: permutation.standard_permutation_binary(
-                x, y, f, lam, n_perm=T_MEAS, key=key), repeats=1)
+            t_ana = timeit(
+                lambda: permutation.analytical_permutation_binary(
+                    x, y, f, lam, n_perm=T_FULL, key=key, chunk=50
+                ),
+                repeats=1,
+            )
+            t_std_m = timeit(
+                lambda: permutation.standard_permutation_binary(
+                    x, y, f, lam, n_perm=T_MEAS, key=key
+                ),
+                repeats=1,
+            )
         else:
             t_ana = timeit(
                 lambda: permutation.analytical_permutation_multiclass(
-                    x, ds.y, f, c, lam, n_perm=T_FULL, key=key, chunk=10),
-                repeats=1)
+                    x, ds.y, f, c, lam, n_perm=T_FULL, key=key, chunk=10
+                ),
+                repeats=1,
+            )
             t_std_m = timeit(
                 lambda: permutation.standard_permutation_multiclass(
-                    x, ds.y, f, c, lam, n_perm=T_MEAS, key=key), repeats=1)
+                    x, ds.y, f, c, lam, n_perm=T_MEAS, key=key
+                ),
+                repeats=1,
+            )
         t_std = t_std_m * (T_FULL / T_MEAS)
         rel = relative_efficiency(t_std, t_ana)
-        rows.append(row(
-            f"eeg/{name}_T{T_FULL}", t_ana,
-            f"rel_eff={rel:.2f} t_std_scaled={t_std:.1f}s t_ana={t_ana:.2f}s"))
+        rows.append(
+            row(
+                f"eeg/{name}_T{T_FULL}",
+                t_ana,
+                f"rel_eff={rel:.2f} t_std_scaled={t_std:.1f}s t_ana={t_ana:.2f}s",
+            )
+        )
 
     # sanity: the evoked signal is actually decodable (observed > chance).
     # Windowed features average the mixed noise over 20 samples — the same
     # SNR gain the paper's windowed analysis exploits.
-    ds_hi = eeg.simulate_subject(jax.random.PRNGKey(9), n_trials=N_TRIALS,
-                                 num_classes=2, snr=2.0)
+    ds_hi = eeg.simulate_subject(jax.random.PRNGKey(9), n_trials=N_TRIALS, num_classes=2, snr=2.0)
     x_win = eeg.windowed_features(ds_hi, 100.0).astype(jnp.float64)
     y = jnp.where(ds_hi.y == 0, -1.0, 1.0)
-    res = permutation.analytical_permutation_binary(
-        x_win, y, f, lam, n_perm=50, key=key)
-    rows.append(row("eeg/decodability_check", 0.0,
-                    f"observed_acc={float(res.observed):.3f} "
-                    f"p={float(res.p):.3f}"))
+    res = permutation.analytical_permutation_binary(x_win, y, f, lam, n_perm=50, key=key)
+    rows.append(
+        row(
+            "eeg/decodability_check",
+            0.0,
+            f"observed_acc={float(res.observed):.3f} p={float(res.p):.3f}",
+        )
+    )
     return rows

@@ -31,11 +31,15 @@ def run(fast: bool = False):
     ha = jax.jit(hat_apply_ref)
     t2 = timeit(ha, h, yb, repeats=3)
     gflops2 = 2 * n * n * 256 / t2 / 1e9
-    rows.append(row(f"kernel/hat_apply_xla_n{n}_b256", t2,
-                    f"{gflops2:.1f}GFLOP/s"))
+    rows.append(row(f"kernel/hat_apply_xla_n{n}_b256", t2, f"{gflops2:.1f}GFLOP/s"))
     # TPU projection: fusing the subtraction saves one (N,B) round-trip of
     # 3 (write ŷ, read ŷ, write ê -> write ê): at 819GB/s HBM that is
     bytes_saved = 2 * n * 256 * 4
-    rows.append(row("kernel/hat_apply_pallas_fusion_saving", 0.0,
-                    f"{bytes_saved/1e6:.2f}MB/chunk HBM traffic avoided on TPU"))
+    rows.append(
+        row(
+            "kernel/hat_apply_pallas_fusion_saving",
+            0.0,
+            f"{bytes_saved/1e6:.2f}MB/chunk HBM traffic avoided on TPU",
+        )
+    )
     return rows

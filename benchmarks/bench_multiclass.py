@@ -34,28 +34,41 @@ def run(fast: bool = False):
         x, y = synthetic.make_classification(jax.random.PRNGKey(p), n, p, c)
         f = foldlib.stratified_kfold(np.asarray(y), 10, seed=0)
         lam = 1.0
-        t_std = timeit(lambda: multiclass.standard_cv_multiclass(
-            x, y, f, c, lam), repeats=2)
-        t_ana = timeit(lambda: multiclass.analytical_cv_multiclass(
-            x, y, f, c, lam), repeats=2)
+        t_std = timeit(lambda: multiclass.standard_cv_multiclass(x, y, f, c, lam), repeats=2)
+        t_ana = timeit(lambda: multiclass.analytical_cv_multiclass(x, y, f, c, lam), repeats=2)
         rel = relative_efficiency(t_std, t_ana)
-        rows.append(row(
-            f"cv_multiclass/n{n}_p{p}_c{c}", t_ana,
-            f"rel_eff={rel:.2f} t_std={t_std*1e3:.1f}ms t_ana={t_ana*1e3:.1f}ms"))
+        rows.append(
+            row(
+                f"cv_multiclass/n{n}_p{p}_c{c}",
+                t_ana,
+                f"rel_eff={rel:.2f} t_std={t_std*1e3:.1f}ms t_ana={t_ana*1e3:.1f}ms",
+            )
+        )
 
     key = jax.random.PRNGKey(1)
     for n, p, c, t_full, t_meas in () if fast else PERM_CASES:
         x, y = synthetic.make_classification(jax.random.PRNGKey(7), n, p, c)
         f = foldlib.stratified_kfold(np.asarray(y), 10, seed=1)
         lam = 1.0
-        t_ana = timeit(lambda: permutation.analytical_permutation_multiclass(
-            x, y, f, c, lam, n_perm=t_full, key=key, chunk=10), repeats=2)
+        t_ana = timeit(
+            lambda: permutation.analytical_permutation_multiclass(
+                x, y, f, c, lam, n_perm=t_full, key=key, chunk=10
+            ),
+            repeats=2,
+        )
         t_std_meas = timeit(
             lambda: permutation.standard_permutation_multiclass(
-                x, y, f, c, lam, n_perm=t_meas, key=key), repeats=2)
+                x, y, f, c, lam, n_perm=t_meas, key=key
+            ),
+            repeats=2,
+        )
         t_std = t_std_meas * (t_full / t_meas)
         rel = relative_efficiency(t_std, t_ana)
-        rows.append(row(
-            f"perm_multiclass/n{n}_p{p}_c{c}_T{t_full}", t_ana,
-            f"rel_eff={rel:.2f} t_std_scaled={t_std:.2f}s t_ana={t_ana:.3f}s"))
+        rows.append(
+            row(
+                f"perm_multiclass/n{n}_p{p}_c{c}_T{t_full}",
+                t_ana,
+                f"rel_eff={rel:.2f} t_std_scaled={t_std:.2f}s t_ana={t_ana:.3f}s",
+            )
+        )
     return rows

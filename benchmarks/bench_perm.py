@@ -33,15 +33,23 @@ def run(fast: bool = False):
         f = foldlib.kfold(n, 10, seed=0)
         lam = 1.0
 
-        t_ana = timeit(lambda: permutation.analytical_permutation_binary(
-            x, y, f, lam, n_perm=t_full, key=key, chunk=min(t_full, 64)),
-            repeats=2)
-        t_std_meas = timeit(lambda: permutation.standard_permutation_binary(
-            x, y, f, lam, n_perm=t_meas, key=key), repeats=2)
-        t_std = t_std_meas * (t_full / t_meas)   # per-perm cost scales linearly
+        t_ana = timeit(
+            lambda: permutation.analytical_permutation_binary(
+                x, y, f, lam, n_perm=t_full, key=key, chunk=min(t_full, 64)
+            ),
+            repeats=2,
+        )
+        t_std_meas = timeit(
+            lambda: permutation.standard_permutation_binary(x, y, f, lam, n_perm=t_meas, key=key),
+            repeats=2,
+        )
+        t_std = t_std_meas * (t_full / t_meas)  # per-perm cost scales linearly
         rel = relative_efficiency(t_std, t_ana)
-        rows.append(row(
-            f"perm_binary/n{n}_p{p}_T{t_full}", t_ana,
-            f"rel_eff={rel:.2f} t_std_scaled={t_std:.2f}s "
-            f"t_ana={t_ana:.3f}s"))
+        rows.append(
+            row(
+                f"perm_binary/n{n}_p{p}_T{t_full}",
+                t_ana,
+                f"rel_eff={rel:.2f} t_std_scaled={t_std:.2f}s t_ana={t_ana:.3f}s",
+            )
+        )
     return rows

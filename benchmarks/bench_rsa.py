@@ -28,22 +28,23 @@ def run(fast: bool = False):
     k = 6
     lam = 1.0
 
-    x, y_cond = synthetic.make_classification(jax.random.PRNGKey(0), n, p,
-                                              num_classes=c, class_sep=2.0)
+    x, y_cond = synthetic.make_classification(
+        jax.random.PRNGKey(0), n, p, num_classes=c, class_sep=2.0
+    )
     f = foldlib.stratified_kfold(y_cond, k, seed=0)
     spec = DatasetSpec(x, f, lam)
     mu = rsa.condition_means(x, y_cond, c)
     models = jnp.stack([rsa.euclidean_rdm(mu), rsa.ring_rdm(c)])
-    req = RSARequest(spec, y_cond, c, model_rdms=models, n_perm=t_perm,
-                     seed=0)
+    req = RSARequest(spec, y_cond, c, model_rdms=models, n_perm=t_perm, seed=0)
 
     # -- cold: fresh engine; plan build + compile + eval -------------------
     engine = CVEngine()
     t0 = time.perf_counter()
     jax.block_until_ready(serve(engine, [req])[0].rdm)
     t_cold = time.perf_counter() - t0
-    rows.append(row(f"bench_rsa_cold_N{n}_P{p}_C{c}", t_cold,
-                    "plan build + compile + RDM + model scoring"))
+    rows.append(
+        row(f"bench_rsa_cold_N{n}_P{p}_C{c}", t_cold, "plan build + compile + RDM + model scoring")
+    )
 
     # -- warm: cached plan, compiled programs ------------------------------
     compiles_warm = engine.compile_count()
@@ -53,30 +54,38 @@ def run(fast: bool = False):
 
     t_warm = timeit(warm_once, warmup=1, repeats=5)
     recompiles = engine.compile_count() - compiles_warm
-    rows.append(row(f"bench_rsa_warm_N{n}_P{p}_C{c}", t_warm,
-                    f"speedup={t_cold / t_warm:.0f}x recompiles={recompiles}"))
+    rows.append(
+        row(
+            f"bench_rsa_warm_N{n}_P{p}_C{c}",
+            t_warm,
+            f"speedup={t_cold / t_warm:.0f}x recompiles={recompiles}",
+        )
+    )
 
     # -- coalesced RSA batches: requests/s vs batch size -------------------
     for bs in (1, 4, 16):
-        reqs = [RSARequest(spec, y_cond, c, model_rdms=models,
-                           n_perm=t_perm, seed=s) for s in range(bs)]
+        reqs = [
+            RSARequest(spec, y_cond, c, model_rdms=models, n_perm=t_perm, seed=s)
+            for s in range(bs)
+        ]
 
         def rsa_batch():
             return [r.rdm for r in serve(engine, reqs)]
 
         secs = timeit(rsa_batch, warmup=1, repeats=5)
-        rows.append(row(f"bench_rsa_batch{bs}_N{n}_P{p}_C{c}", secs,
-                        f"{bs / secs:.0f} req/s"))
+        rows.append(row(f"bench_rsa_warm_batch{bs}_N{n}_P{p}_C{c}", secs, f"{bs / secs:.0f} req/s"))
 
     # -- pairdist kernel (interpret off-TPU) vs the XLA oracle -------------
     cc = 32 if fast else 64
     patterns = jax.random.normal(jax.random.PRNGKey(1), (cc, p), jnp.float64)
-    t_xla = timeit(lambda: rsa.euclidean_rdm(patterns, impl="xla"),
-                   warmup=1, repeats=5)
-    rows.append(row(f"bench_rsa_pairdist_xla_C{cc}_P{p}", t_xla,
-                    "jnp oracle"))
-    t_pal = timeit(lambda: rsa.euclidean_rdm(patterns, impl="pallas"),
-                   warmup=1, repeats=3)
-    rows.append(row(f"bench_rsa_pairdist_pallas_C{cc}_P{p}", t_pal,
-                    "interpret-mode off-TPU; compiled on real TPUs"))
+    t_xla = timeit(lambda: rsa.euclidean_rdm(patterns, impl="xla"), warmup=1, repeats=5)
+    rows.append(row(f"bench_rsa_pairdist_xla_C{cc}_P{p}", t_xla, "jnp oracle"))
+    t_pal = timeit(lambda: rsa.euclidean_rdm(patterns, impl="pallas"), warmup=1, repeats=3)
+    rows.append(
+        row(
+            f"bench_rsa_pairdist_pallas_C{cc}_P{p}",
+            t_pal,
+            "interpret-mode off-TPU; compiled on real TPUs",
+        )
+    )
     return rows

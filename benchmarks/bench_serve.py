@@ -19,8 +19,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, timeit
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import (CVEngine, CVRequest, DatasetSpec,
-                         PermutationRequest, serve)
+from repro.serve import CVEngine, CVRequest, DatasetSpec, PermutationRequest, serve
 
 
 def run(fast: bool = False):
@@ -29,8 +28,7 @@ def run(fast: bool = False):
     k = 8
     lam = 1.0
 
-    x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n, p,
-                                          class_sep=2.0)
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n, p, class_sep=2.0)
     y = jnp.where(yc == 0, -1.0, 1.0)
     spec = DatasetSpec(x, foldlib.kfold(n, k, seed=0), lam)
     perm_req = PermutationRequest(spec, y, t_perm, seed=0)
@@ -40,8 +38,7 @@ def run(fast: bool = False):
     t0 = time.perf_counter()
     jax.block_until_ready(serve(engine, [perm_req])[0].null)
     t_cold = time.perf_counter() - t0
-    rows.append(row(f"serve_perm_cold_N{n}_P{p}_T{t_perm}", t_cold,
-                    "plan build + compile + eval"))
+    rows.append(row(f"serve_perm_cold_N{n}_P{p}_T{t_perm}", t_cold, "plan build + compile + eval"))
 
     # -- warm: cached plan, compiled program -------------------------------
     compiles_warm = engine.compile_count()
@@ -51,18 +48,21 @@ def run(fast: bool = False):
 
     t_warm = timeit(warm_once, warmup=1, repeats=5)
     recompiles = engine.compile_count() - compiles_warm
-    rows.append(row(f"serve_perm_warm_N{n}_P{p}_T{t_perm}", t_warm,
-                    f"speedup={t_cold / t_warm:.0f}x recompiles={recompiles}"))
+    rows.append(
+        row(
+            f"serve_perm_warm_N{n}_P{p}_T{t_perm}",
+            t_warm,
+            f"speedup={t_cold / t_warm:.0f}x recompiles={recompiles}",
+        )
+    )
 
     # -- requests/s vs coalesced batch size --------------------------------
     for bs in (1, 8, 32):
-        reqs = [CVRequest(spec, jnp.roll(y, i), task="binary")
-                for i in range(bs)]
+        reqs = [CVRequest(spec, jnp.roll(y, i), task="binary") for i in range(bs)]
 
         def cv_batch():
             return [r.values for r in serve(engine, reqs)]
 
         secs = timeit(cv_batch, warmup=1, repeats=5)
-        rows.append(row(f"serve_cv_batch{bs}_N{n}_P{p}", secs,
-                        f"{bs / secs:.0f} req/s"))
+        rows.append(row(f"serve_cv_warm_batch{bs}_N{n}_P{p}", secs, f"{bs / secs:.0f} req/s"))
     return rows

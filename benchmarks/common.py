@@ -25,6 +25,12 @@ def relative_efficiency(t_standard: float, t_analytical: float) -> float:
     return float(np.log10(t_standard / t_analytical))
 
 
+def percentiles(samples, qs=(50, 95, 99)) -> dict:
+    """{"p50": ..., ...} wall-second percentiles over a latency sample."""
+    arr = np.asarray(samples, dtype=float)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
 def row(name: str, seconds: float, derived: str = "") -> dict:
     return {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
 

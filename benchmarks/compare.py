@@ -1,0 +1,151 @@
+"""Gate CI on benchmark regressions against a committed baseline.
+
+    python benchmarks/compare.py benchmarks/baseline.json fresh.json
+
+Both files are ``run.py --json`` artifacts. Rows are matched by
+(section, name); only *warm* rows (name contains ``--gate-substring``,
+default "warm") gate — cold rows time plan builds **and** jit compiles,
+which are too noisy to diff across CI runners.
+
+CI runners and the machine that produced the committed baseline differ in
+absolute speed, so raw per-row ratios would gate on hardware, not code.
+With ≥ ``--min-rows`` matched rows the gate normalises: each row's ratio
+``fresh/baseline`` is divided by the *median* ratio across all gated rows
+(the machine-speed factor, clamped at ≥1 so a PR that speeds most rows up
+never flags the untouched ones), and a row regresses when its normalised
+ratio exceeds ``--tolerance``. Any *single* benchmark regressing (the common
+case: one eval path lost its no-recompile guarantee, one batch stopped
+coalescing) stands out sharply. Normalisation has a blind spot — a
+*correlated* slowdown of half the rows shifts the median and masks
+itself — so the median is itself gated by ``--max-median`` (default 4x,
+loose enough for honest runner-speed spread): a broad regression fails
+the gate even though no individual row does. Below ``--min-rows`` matches
+the median is meaningless and raw ratios gate directly.
+
+Exit status: 0 clean, 1 regression(s), 2 usage/structure errors. Rows
+missing from either side are reported but do not fail the gate (bench
+sets legitimately grow, and full-size sweeps use different row names).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    """{(section, name): us_per_call} from a run.py --json artifact."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    out = {}
+    for r in rows:
+        out[(r.get("section", ""), r["name"])] = float(r["us_per_call"])
+    return out
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    tolerance: float = 1.5,
+    gate_substring: str = "warm",
+    min_rows: int = 3,
+    max_median: float = 4.0,
+):
+    """Return (regressions, checked, missing, median_ratio).
+
+    regressions: [(key, base_us, fresh_us, normalised_ratio), ...] — a
+                 median above ``max_median`` adds a synthetic
+                 ("<all>", "median") entry (correlated-slowdown backstop)
+    checked:     number of gated rows matched in both artifacts
+    missing:     gated keys present in exactly one artifact
+    """
+    gated_base = {k: v for k, v in baseline.items() if gate_substring in k[1]}
+    gated_fresh = {k: v for k, v in fresh.items() if gate_substring in k[1]}
+    shared = sorted(gated_base.keys() & gated_fresh.keys())
+    missing = sorted(gated_base.keys() ^ gated_fresh.keys())
+    ratios = {k: gated_fresh[k] / max(gated_base[k], 1e-9) for k in shared}
+    if len(shared) >= min_rows:
+        median = statistics.median(ratios.values())
+    else:
+        median = 1.0  # too few rows to estimate machine speed; gate raw ratios
+    # Normalise by the median only when it shows a SLOWER machine. A median
+    # below 1 means most rows sped up — dividing by it would flag untouched
+    # rows as "regressions" for failing to improve, blocking the very PR
+    # that made things faster. (Cost: a runner genuinely faster than the
+    # baseline host loses some sensitivity until the baseline is refreshed.)
+    norm = max(median, 1.0)
+    regressions = []
+    for k in shared:
+        normalised = ratios[k] / norm
+        if normalised > tolerance:
+            regressions.append((k, gated_base[k], gated_fresh[k], normalised))
+    if len(shared) >= min_rows and median > max_median:
+        # Correlated-slowdown backstop: enough rows regressed together to
+        # drag the median itself past any honest runner-speed spread.
+        regressions.append((("<all gated rows>", "median-ratio"), 1.0, median, median))
+    return regressions, len(shared), missing, median
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline artifact (run.py --json)")
+    ap.add_argument("fresh", help="freshly measured artifact to gate")
+    ap.add_argument("--tolerance", type=float, default=1.5, help="max normalised slowdown per row")
+    ap.add_argument("--gate-substring", default="warm", help="gate rows whose name contains this")
+    ap.add_argument("--min-rows", type=int, default=3, help="min matches for median normalisation")
+    ap.add_argument(
+        "--max-median",
+        type=float,
+        default=4.0,
+        help="fail when the median ratio itself exceeds this (correlated slowdown)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_rows(args.baseline)
+        fresh = load_rows(args.fresh)
+    except (OSError, KeyError, ValueError, TypeError) as e:
+        print(f"[compare] cannot load artifacts: {e!r}", file=sys.stderr)
+        return 2
+
+    regressions, checked, missing, median = compare(
+        baseline, fresh, args.tolerance, args.gate_substring, args.min_rows, args.max_median
+    )
+    if checked == 0:
+        # A gate with nothing to gate is a broken gate, not a green one —
+        # renamed rows or a bench module that stopped emitting must be loud.
+        print(
+            f"[compare] no '{args.gate_substring}' rows shared between the artifacts; "
+            "the gate would be vacuous — refresh benchmarks/baseline.json",
+            file=sys.stderr,
+        )
+        return 2
+    print(
+        f"[compare] {checked} warm rows gated at {args.tolerance:.2f}x "
+        f"(machine-speed median {median:.2f}x)"
+    )
+    if median < 1.0 / args.tolerance:
+        print(
+            "[compare] note: most rows are much faster than the baseline — "
+            "consider refreshing benchmarks/baseline.json to regain gate sensitivity"
+        )
+    for key in missing:
+        print(f"[compare] warning: row {key} present in only one artifact (not gated)")
+    if not regressions:
+        print("[compare] OK — no warm-latency regressions")
+        return 0
+    for (section, name), base_us, fresh_us, ratio in regressions:
+        print(
+            f"[compare] REGRESSION {section} :: {name}: "
+            f"{base_us:.1f}us -> {fresh_us:.1f}us ({ratio:.2f}x normalised)",
+            file=sys.stderr,
+        )
+    print(f"[compare] FAIL — {len(regressions)} row(s) regressed", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

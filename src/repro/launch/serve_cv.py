@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve_cv --requests 64
     PYTHONPATH=src python -m repro.launch.serve_cv --data eeg --clients 4
     PYTHONPATH=src python -m repro.launch.serve_cv --rsa --conditions 8
+    PYTHONPATH=src python -m repro.launch.serve_cv --warmup --pin --async 8
 
 Builds a :class:`repro.serve.CVEngine`, synthesises a small fleet of
 datasets (synthetic hypersphere-classification or EEG-like windowed
@@ -14,13 +15,21 @@ ridge CV, multi-class CV, permutation tests, and λ-tuning — first cold
 condition-permutation nulls, all riding the same cached plans and
 coalesced label batches. With ``--clients > 1`` the same stream is
 replayed through the thread-backed :class:`~repro.serve.api.EngineServer`
-so concurrent submitters coalesce onto shared micro-batches. Reports
-requests/s and the engine's cache / compile statistics.
+so concurrent submitters coalesce onto shared micro-batches; with
+``--async N`` it is replayed through the asyncio
+:class:`~repro.serve.aio.AsyncEngineServer` instead (N coroutine
+clients), followed by a streamed permutation request printing its null
+chunks as they land. ``--warmup`` pre-builds every plan and pre-compiles
+the bucketed eval family before the first timed pass (``--pin``
+additionally pins the warmed plans against eviction), so the "cold" pass
+measures pure serving, not compilation. Reports requests/s and the
+engine's cache / compile statistics.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -32,14 +41,24 @@ import jax.numpy as jnp
 from repro import rsa
 from repro.core import folds as foldlib
 from repro.data import eeg, synthetic
-from repro.serve import (CVEngine, CVRequest, DatasetSpec, EngineConfig,
-                         EngineServer, PermutationRequest, RSARequest,
-                         TuneRequest, serve)
+from repro.serve import (
+    AsyncEngineServer,
+    CVEngine,
+    CVRequest,
+    DatasetSpec,
+    EngineConfig,
+    EngineServer,
+    PermutationRequest,
+    RSARequest,
+    TuneRequest,
+    serve,
+)
 
 
 def build_requests(args):
     """Alternating binary (C=2) and multi-class (C=3) datasets, mixed
-    request stream: CV (binary/ridge/multiclass), permutations, tuning."""
+    request stream: CV (binary/ridge/multiclass), permutations, tuning.
+    Returns (requests, datasets) so ``--warmup`` can pre-build the plans."""
     datasets = []
     for d in range(args.datasets):
         num_classes = 2 if d % 2 == 0 else 3
@@ -77,7 +96,7 @@ def build_requests(args):
             requests.append(CVRequest(spec, y_bin, task="ridge"))
         else:
             requests.append(CVRequest(spec, y_bin, task="binary"))
-    return requests
+    return requests, datasets
 
 
 def build_rsa_requests(args):
@@ -111,7 +130,69 @@ def build_rsa_requests(args):
         else:
             requests.append(RSARequest(spec, y_cond, c, model_rdms=models,
                                        n_perm=args.perm, seed=i))
-    return requests
+    return requests, datasets
+
+
+def warmup_engine(engine, args, datasets):
+    """Pre-build (and optionally pin) every plan; pre-compile eval buckets."""
+    t0 = time.perf_counter()
+    small = (1, 2, 4, 8, 16)
+    for entry in datasets:
+        spec = entry[0]
+        if args.rsa:
+            c = args.conditions
+            n_pairs = c * (c - 1) // 2
+            # same-plan RSA requests coalesce: cover up to two requests'
+            # worth of contrast columns in one padded batch
+            engine.warmup(spec, tasks=("rsa", "multiclass"),
+                          buckets=small + (n_pairs, 2 * n_pairs, args.perm),
+                          num_classes=c, num_model_rdms=2, pin=args.pin)
+            # the stream's slot-2 variant: continuous contrast, no bias adjust
+            engine.warmup(spec, tasks=("rsa",), buckets=(n_pairs,),
+                          num_classes=c, dissimilarity="contrast",
+                          adjust_bias=False)
+        else:
+            c = entry[3]
+            tasks = ("binary", "ridge", "permutation")
+            if c > 2:
+                tasks = tasks + ("multiclass",)
+            engine.warmup(spec, tasks, buckets=small + (args.perm,),
+                          num_classes=c, pin=args.pin)
+    t_warm = time.perf_counter() - t0
+    s = engine.stats()
+    print(f"[serve_cv] warmup: {t_warm:.3f}s, {s['plans_built']} plans built"
+          f" ({s['pinned']} pinned), {s['compiles']} programs compiled")
+
+
+async def replay_async(engine, requests, n_clients, perm_demo=None):
+    """Replay the stream through AsyncEngineServer with N coroutine
+    clients, then stream one permutation request chunk by chunk."""
+    per_client = -(-len(requests) // n_clients)
+    results = [None] * len(requests)
+    async with AsyncEngineServer(engine, max_batch=per_client) as server:
+
+        async def client(cid):
+            lo = cid * per_client
+            for j in range(lo, min(lo + per_client, len(requests))):
+                results[j] = await server.submit(requests[j])
+
+        t0 = time.perf_counter()
+        await asyncio.gather(*(client(c) for c in range(n_clients)))
+        t_async = time.perf_counter() - t0
+        print(f"[serve_cv] async ({n_clients} clients): {t_async:.3f}s "
+              f"({len(requests) / t_async:.1f} req/s) in "
+              f"{server.batches_served} micro-batches")
+
+        if perm_demo is not None:
+            t0 = time.perf_counter()
+            async for ev in server.stream(perm_demo):
+                if ev.kind == "null":
+                    print(f"[serve_cv]   stream: {ev.done}/{ev.total} null "
+                          f"draws at {time.perf_counter() - t0:.3f}s")
+                elif ev.kind == "done":
+                    print(f"[serve_cv]   stream: done, p = "
+                          f"{float(ev.payload.p):.4f}")
+    assert all(r is not None for r in results)
 
 
 def main():
@@ -129,6 +210,15 @@ def main():
                     help="permutations per permutation request")
     ap.add_argument("--clients", type=int, default=0,
                     help="if > 1, replay warm through this many threads")
+    ap.add_argument("--async", type=int, default=0, dest="async_clients",
+                    metavar="N", help="if > 1, replay warm through the "
+                    "asyncio server with N coroutine clients + stream demo")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-build plans + pre-compile eval buckets "
+                    "before the first timed pass")
+    ap.add_argument("--pin", action="store_true",
+                    help="with --warmup: pin the warmed plans (never "
+                    "LRU-evicted)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rsa", action="store_true",
@@ -139,15 +229,18 @@ def main():
 
     engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
     if args.rsa:
-        requests = build_rsa_requests(args)
+        requests, datasets = build_rsa_requests(args)
         print(f"[serve_cv] RSA mode: {len(requests)} requests over "
               f"{args.datasets} datasets, C={args.conditions}, λ={args.lam}, "
               f"K={args.k}, T={args.perm}")
     else:
-        requests = build_requests(args)
+        requests, datasets = build_requests(args)
         print(f"[serve_cv] {len(requests)} requests over {args.datasets} "
               f"datasets ({args.data}), λ={args.lam}, K={args.k}, "
               f"T={args.perm}")
+
+    if args.warmup:
+        warmup_engine(engine, args, datasets)
 
     def ready(rs):
         jax.block_until_ready([r.values for r in rs if hasattr(r, "values")]
@@ -196,9 +289,17 @@ def main():
                   f"in {server.batches_served} micro-batches")
         assert all(r is not None for r in results)
 
+    if args.async_clients > 1:
+        demo = None
+        if not args.rsa:
+            spec, y_bin = datasets[0][0], datasets[0][1]
+            demo = PermutationRequest(spec, y_bin, 4 * args.perm, seed=99)
+        asyncio.run(replay_async(engine, requests, args.async_clients,
+                                 perm_demo=demo))
+
     stats = engine.stats()
     print(f"[serve_cv] cache: {stats['hits']} hits / {stats['misses']} misses "
-          f"/ {stats['evictions']} evictions, "
+          f"/ {stats['evictions']} evictions / {stats['pinned']} pinned, "
           f"{stats['bytes_in_use'] / 2**20:.1f} MiB in use "
           f"(budget {stats['byte_budget'] / 2**20:.0f} MiB)")
     print(f"[serve_cv] plans built: {stats['plans_built']}, "

@@ -69,22 +69,24 @@ def condition_pairs(num_classes: int) -> np.ndarray:
     return np.stack([a, b], axis=1).astype(np.int32)
 
 
-def pair_contrast_columns(y_cond: jax.Array, num_classes: int,
-                          dtype=jnp.float64) -> jax.Array:
+def pair_contrast_columns(y_cond: jax.Array, num_classes: int, dtype=jnp.float64) -> jax.Array:
     """(N, B) matrix of ±1/0 pairwise contrast columns.
 
     Column j encodes pair (a, b) = ``condition_pairs(C)[j]``: +1 on
     samples of condition a, −1 on b, 0 elsewhere. These are exactly the
     label batch the serving engine's column path consumes.
     """
-    oh = jax.nn.one_hot(y_cond, num_classes, dtype=dtype)      # (N, C)
+    oh = jax.nn.one_hot(y_cond, num_classes, dtype=dtype)  # (N, C)
     pairs = condition_pairs(num_classes)
-    return oh[:, pairs[:, 0]] - oh[:, pairs[:, 1]]             # (N, B)
+    return oh[:, pairs[:, 0]] - oh[:, pairs[:, 1]]  # (N, B)
 
 
-def pair_dissimilarities(plan: fastcv.CVPlan, cols: jax.Array,
-                         dissimilarity: str = "accuracy",
-                         adjust_bias: bool = True) -> jax.Array:
+def pair_dissimilarities(
+    plan: fastcv.CVPlan,
+    cols: jax.Array,
+    dissimilarity: str = "accuracy",
+    adjust_bias: bool = True,
+) -> jax.Array:
     """Per-column dissimilarity from one batched fold solve. cols: (N, B).
 
     The contrast columns double as test/train masks: ``cols[te_idx]`` is
@@ -100,32 +102,27 @@ def pair_dissimilarities(plan: fastcv.CVPlan, cols: jax.Array,
     if dissimilarity not in _DISSIMILARITIES:
         raise ValueError(f"dissimilarity must be one of {_DISSIMILARITIES}")
     cols = cols.astype(plan.h.dtype)
-    y_dot_te, y_dot_tr = fastcv.cv_errors(plan, cols)          # (K, m, B)
-    te_lab = cols[plan.te_idx]                                 # (K, m, B)
+    y_dot_te, y_dot_tr = fastcv.cv_errors(plan, cols)  # (K, m, B)
+    te_lab = cols[plan.te_idx]  # (K, m, B)
     dv = y_dot_te
     if adjust_bias:
         if y_dot_tr is None:
             raise ValueError("plan must be prepared with with_train_block=True")
-        tr_lab = cols[plan.tr_idx]                             # (K, N-m, B)
+        tr_lab = cols[plan.tr_idx]  # (K, N-m, B)
         pos = (tr_lab > 0).astype(cols.dtype)
         neg = (tr_lab < 0).astype(cols.dtype)
-        mu1 = (jnp.sum(y_dot_tr * pos, axis=1)
-               / jnp.maximum(jnp.sum(pos, axis=1), 1.0))       # (K, B)
-        mu2 = (jnp.sum(y_dot_tr * neg, axis=1)
-               / jnp.maximum(jnp.sum(neg, axis=1), 1.0))
+        mu1 = jnp.sum(y_dot_tr * pos, axis=1) / jnp.maximum(jnp.sum(pos, axis=1), 1.0)  # (K, B)
+        mu2 = jnp.sum(y_dot_tr * neg, axis=1) / jnp.maximum(jnp.sum(neg, axis=1), 1.0)
         dv = dv - 0.5 * (mu1 + mu2)[:, None, :]
     if dissimilarity == "accuracy":
         mask = (jnp.abs(te_lab) > 0).astype(cols.dtype)
         pred = jnp.where(dv >= 0, 1.0, -1.0).astype(cols.dtype)
         hit = jnp.where(mask > 0, (pred == te_lab).astype(cols.dtype), 0.0)
-        return (jnp.sum(hit, axis=(0, 1))
-                / jnp.maximum(jnp.sum(mask, axis=(0, 1)), 1.0))
+        return jnp.sum(hit, axis=(0, 1)) / jnp.maximum(jnp.sum(mask, axis=(0, 1)), 1.0)
     pos = (te_lab > 0).astype(cols.dtype)
     neg = (te_lab < 0).astype(cols.dtype)
-    m_pos = (jnp.sum(dv * pos, axis=(0, 1))
-             / jnp.maximum(jnp.sum(pos, axis=(0, 1)), 1.0))
-    m_neg = (jnp.sum(dv * neg, axis=(0, 1))
-             / jnp.maximum(jnp.sum(neg, axis=(0, 1)), 1.0))
+    m_pos = jnp.sum(dv * pos, axis=(0, 1)) / jnp.maximum(jnp.sum(pos, axis=(0, 1)), 1.0)
+    m_neg = jnp.sum(dv * neg, axis=(0, 1)) / jnp.maximum(jnp.sum(neg, axis=(0, 1)), 1.0)
     return m_pos - m_neg
 
 
@@ -137,11 +134,18 @@ def rdm_from_pair_values(values: jax.Array, num_classes: int) -> jax.Array:
     return rdm + rdm.T
 
 
-def rdm_binary(x: jax.Array, y_cond: jax.Array, folds: Folds,
-               num_classes: int, lam: float = 1.0, *,
-               dissimilarity: str = "accuracy", adjust_bias: bool = True,
-               mode: str = "auto",
-               plan: Optional[fastcv.CVPlan] = None) -> jax.Array:
+def rdm_binary(
+    x: jax.Array,
+    y_cond: jax.Array,
+    folds: Folds,
+    num_classes: int,
+    lam: float = 1.0,
+    *,
+    dissimilarity: str = "accuracy",
+    adjust_bias: bool = True,
+    mode: str = "auto",
+    plan: Optional[fastcv.CVPlan] = None,
+) -> jax.Array:
     """One-shot cross-validated pairwise-contrast RDM. Returns (C, C).
 
     Builds (or reuses) a single plan over all N samples and evaluates all
@@ -149,11 +153,9 @@ def rdm_binary(x: jax.Array, y_cond: jax.Array, folds: Folds,
     same thing through its cached-plan, shape-bucketed path.
     """
     if plan is None:
-        plan = fastcv.prepare(x, folds, lam, mode=mode,
-                              with_train_block=adjust_bias)
+        plan = fastcv.prepare(x, folds, lam, mode=mode, with_train_block=adjust_bias)
     cols = pair_contrast_columns(y_cond, num_classes, plan.h.dtype)
-    vals = pair_dissimilarities(plan, cols, dissimilarity=dissimilarity,
-                                adjust_bias=adjust_bias)
+    vals = pair_dissimilarities(plan, cols, dissimilarity=dissimilarity, adjust_bias=adjust_bias)
     return rdm_from_pair_values(vals, num_classes)
 
 
@@ -162,24 +164,23 @@ def rdm_binary(x: jax.Array, y_cond: jax.Array, folds: Folds,
 # ---------------------------------------------------------------------------
 
 
-def rdm_from_confusion(preds: jax.Array, y_te: jax.Array,
-                       num_classes: int) -> jax.Array:
+def rdm_from_confusion(preds: jax.Array, y_te: jax.Array, num_classes: int) -> jax.Array:
     """Symmetrised confusion-dissimilarity RDM from CV predictions.
 
     d(a, b) = 1 − (p(pred=b | true=a) + p(pred=a | true=b)) / 2 for a ≠ b,
     0 on the diagonal. Conditions the classifier confuses often are
     representationally close.
     """
-    conf = metrics.confusion_matrix(preds.reshape(-1), y_te.reshape(-1),
-                                    num_classes).astype(jnp.float64)
+    conf = metrics.confusion_matrix(preds.reshape(-1), y_te.reshape(-1), num_classes).astype(
+        jnp.float64
+    )
     rates = conf / jnp.maximum(jnp.sum(conf, axis=1, keepdims=True), 1.0)
     sim = 0.5 * (rates + rates.T)
     eye = jnp.eye(num_classes, dtype=bool)
     return jnp.where(eye, 0.0, 1.0 - sim)
 
 
-def rdm_multiclass(plan: fastcv.CVPlan, y_cond: jax.Array,
-                   num_classes: int) -> jax.Array:
+def rdm_multiclass(plan: fastcv.CVPlan, y_cond: jax.Array, num_classes: int) -> jax.Array:
     """Confusion RDM from one Algorithm-2 multi-class CV run on the plan."""
     preds = multiclass.batch_predict(plan, y_cond[None, :], num_classes)[0]
     return rdm_from_confusion(preds, y_cond[plan.te_idx], num_classes)
@@ -190,10 +191,9 @@ def rdm_multiclass(plan: fastcv.CVPlan, y_cond: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def condition_means(x: jax.Array, y_cond: jax.Array,
-                    num_classes: int) -> jax.Array:
+def condition_means(x: jax.Array, y_cond: jax.Array, num_classes: int) -> jax.Array:
     """(C, P) mean feature pattern per condition."""
-    oh = jax.nn.one_hot(y_cond, num_classes, dtype=x.dtype)    # (N, C)
+    oh = jax.nn.one_hot(y_cond, num_classes, dtype=x.dtype)  # (N, C)
     counts = jnp.maximum(jnp.sum(oh, axis=0), 1.0)
     return (oh.T @ x) / counts[:, None]
 
@@ -221,8 +221,10 @@ def euclidean_rdm(patterns: jax.Array, impl: str = "auto") -> jax.Array:
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "pallas":
         from repro.kernels.pairdist.ops import pairwise_sq_dists
+
         return pairwise_sq_dists(patterns)
     from repro.kernels.pairdist.ref import pairwise_sq_dists_ref
+
     return pairwise_sq_dists_ref(patterns)
 
 
@@ -231,11 +233,19 @@ def euclidean_rdm(patterns: jax.Array, impl: str = "auto") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def searchlight_rdm(xs: jax.Array, y_cond: jax.Array, folds: Folds,
-                    lam: float, mesh, *, num_classes: int,
-                    dissimilarity: str = "accuracy",
-                    adjust_bias: bool = True, mode: str = "auto",
-                    problem_axes: tuple = ("pod", "data")) -> jax.Array:
+def searchlight_rdm(
+    xs: jax.Array,
+    y_cond: jax.Array,
+    folds: Folds,
+    lam: float,
+    mesh,
+    *,
+    num_classes: int,
+    dissimilarity: str = "accuracy",
+    adjust_bias: bool = True,
+    mode: str = "auto",
+    problem_axes: tuple = ("pod", "data"),
+) -> jax.Array:
     """Per-searchlight RDMs: xs (Q, N, P_local) → (Q, C, C).
 
     Each problem builds its own plan and scores all pairwise contrasts
@@ -248,9 +258,16 @@ def searchlight_rdm(xs: jax.Array, y_cond: jax.Array, folds: Folds,
     te_idx, tr_idx = folds.te_idx, folds.tr_idx
 
     def one_problem(x):
-        return rdm_binary(x, y_cond, Folds.with_indices(te_idx, tr_idx),
-                          num_classes, lam, dissimilarity=dissimilarity,
-                          adjust_bias=adjust_bias, mode=mode)
+        return rdm_binary(
+            x,
+            y_cond,
+            Folds.with_indices(te_idx, tr_idx),
+            num_classes,
+            lam,
+            dissimilarity=dissimilarity,
+            adjust_bias=adjust_bias,
+            mode=mode,
+        )
 
     return sharded_problems(one_problem, xs, mesh, problem_axes=problem_axes)
 
@@ -260,8 +277,9 @@ def searchlight_rdm(xs: jax.Array, y_cond: jax.Array, folds: Folds,
 # ---------------------------------------------------------------------------
 
 
-def make_eval_pairs(dissimilarity: str = "accuracy",
-                    adjust_bias: bool = True, donate: bool = False):
+def make_eval_pairs(
+    dissimilarity: str = "accuracy", adjust_bias: bool = True, donate: bool = False
+):
     """Fresh jitted evaluator ``(plan, cols (N, B)) -> (B,) dissimilarities``.
 
     Mirrors ``fastcv.make_eval_binary``: each call returns an
@@ -270,5 +288,8 @@ def make_eval_pairs(dissimilarity: str = "accuracy",
     """
     kw = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(
-        functools.partial(pair_dissimilarities, dissimilarity=dissimilarity,
-                          adjust_bias=adjust_bias), **kw)
+        functools.partial(
+            pair_dissimilarities, dissimilarity=dissimilarity, adjust_bias=adjust_bias
+        ),
+        **kw,
+    )

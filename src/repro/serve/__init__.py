@@ -6,15 +6,20 @@ label-invariant state, cheap per-request evaluation. This package
 productises that:
 
   cache     PlanCache — LRU CVPlan store under a byte budget, with
-            admission control for plans larger than the whole budget.
+            admission control for plans larger than the whole budget and
+            pin/unpin for warm, never-evicted plans.
   engine    CVEngine — cached plans + shape-bucketed jitted eval paths
-            (CV, permutation, and RSA workload families).
+            (CV, permutation, and RSA workload families), plus an
+            explicit warmup() readiness API.
   batching  MicroBatcher — coalesce ragged same-plan label queries.
   api       Request/response types, sync driver, threaded queue server.
+  aio       AsyncEngineServer — asyncio front-end with gather-window
+            micro-batching and streamed permutation/RSA responses.
 
 Entry point: ``python -m repro.launch.serve_cv``.
 """
 
+from repro.serve.aio import AsyncEngineServer, ProgressEvent  # noqa: F401
 from repro.serve.api import (  # noqa: F401
     CVRequest,
     CVResponse,

@@ -1,0 +1,380 @@
+"""repro.serve.aio — asyncio front-end over the CV engine.
+
+The sync drivers in :mod:`repro.serve.api` make one of two trades: the
+blocking :func:`~repro.serve.api.serve` wants the whole batch up front,
+and the thread-queue :class:`~repro.serve.api.EngineServer` gives each
+submitter a `concurrent.futures.Future` but keeps long work monolithic —
+one slow permutation request head-of-line-blocks every cheap binary query
+behind it. This module turns the engine into a traffic-shaped service:
+
+* :class:`AsyncEngineServer` — submitters ``await server.submit(req)``
+  from any coroutine; the worker gathers whatever arrives inside a
+  deadline-bounded window (``gather_window_ms`` after the first request,
+  up to ``max_batch``) and serves the whole group through the sync
+  driver, so same-plan traffic still coalesces through the engine's
+  :class:`~repro.serve.batching.MicroBatcher` into one padded jitted
+  eval per flush group. Engine compute runs on a single executor thread;
+  the event loop never blocks on XLA.
+* **Streaming** — ``server.stream(req)`` returns an async iterator of
+  :class:`ProgressEvent`\\ s for long-running work: permutation requests
+  emit their null distribution in prefix-stable chunks (running p-values
+  for free), RSA requests emit the empirical RDM, then model scores,
+  then permutation-null chunks. Because chunks run through the engine's
+  bucketed ``null_*`` paths at a fixed chunk size, a stream interleaves
+  with batch traffic at chunk granularity and never recompiles after
+  warm-up.
+
+The streamed permutations are the same draws the monolithic path uses
+(``permutation_indices`` is prefix-stable under bucket rounding), so a
+stream's final ``done`` payload matches the one-shot response up to
+padded-shape rounding.
+
+Known limitation: streamed nulls always run the *local* bucketed chunk
+path (``engine.null_binary`` / ``null_multiclass``). On a mesh-configured
+engine, ``submit()`` shards permutation nulls over ``perm_axes`` while
+``stream()`` does not (and compiles the unsharded program) — mesh-sharded
+streaming is a ROADMAP item, not a silent behaviour of this class.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import functools
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permutation as perm_lib
+from repro.rsa import rdm as rsa_rdm
+from repro.serve.api import (
+    PermutationRequest,
+    PermutationResponse,
+    Request,
+    RSARequest,
+    RSAResponse,
+    serve,
+)
+from repro.serve.batching import as_folds, bucket_size
+from repro.serve.engine import CVEngine
+
+__all__ = ["ProgressEvent", "AsyncEngineServer"]
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class ProgressEvent:
+    """One step of a streamed request.
+
+    kind:    "plan" (payload: plan key), "observed" (payload: observed
+             metric), "rdm" (payload: empirical RDM), "scores" (payload:
+             model scores), "null" (payload: the new null chunk), or
+             "done" (payload: the final response object).
+    done:    permutations finished so far (0 for pre-null events).
+    total:   total permutations the stream will produce.
+    payload: kind-specific value; always the full response on "done".
+    """
+
+    kind: str
+    done: int
+    total: int
+    payload: object
+
+
+class AsyncEngineServer:
+    """Asyncio server: gather-window micro-batching + streaming requests.
+
+    Submitters get one coroutine per request (``await submit(req)``);
+    concurrent submissions landing within ``gather_window_ms`` of each
+    other coalesce onto shared plans and shared padded evals exactly like
+    the sync driver. ``stream(req)`` yields :class:`ProgressEvent`\\ s for
+    permutation/RSA requests instead of one monolithic response, chunked
+    by ``stream_chunk`` (canonicalised to an engine shape bucket).
+    """
+
+    def __init__(
+        self,
+        engine: CVEngine,
+        max_batch: int = 64,
+        gather_window_ms: float = 2.0,
+        stream_chunk: int = 64,
+    ):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.gather_window_s = gather_window_ms / 1e3
+        self.stream_chunk = stream_chunk
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._queue: Optional[asyncio.Queue] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._worker_task: Optional[asyncio.Task] = None
+        self._stopping = False
+        self.batches_served = 0
+        self.requests_served = 0
+        self.streams_served = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    async def start(self) -> "AsyncEngineServer":
+        if self._worker_task is not None:
+            raise RuntimeError("server already started")
+        self._loop = asyncio.get_running_loop()
+        self._queue = asyncio.Queue()
+        # One engine thread: jax compute never blocks the event loop, and
+        # batch evals / stream chunks interleave fairly at task granularity.
+        self._executor = ThreadPoolExecutor(max_workers=1, thread_name_prefix="cv-engine-aio")
+        self._stopping = False
+        self._worker_task = self._loop.create_task(self._worker())
+        return self
+
+    async def stop(self) -> None:
+        if self._worker_task is None:
+            return
+        self._stopping = True
+        self._queue.put_nowait(_STOP)
+        await self._worker_task
+        self._worker_task = None
+        while not self._queue.empty():  # belt-and-braces: never strand a future
+            item = self._queue.get_nowait()
+            if item is not _STOP:
+                _, fut = item
+                if not fut.done():
+                    fut.set_exception(RuntimeError("server stopped before serving"))
+        self._executor.shutdown(wait=True)
+        self._executor = None
+
+    async def __aenter__(self) -> "AsyncEngineServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def _check_running(self) -> None:
+        if self._worker_task is None or self._stopping:
+            raise RuntimeError("server is not running")
+
+    def _run(self, fn, *args, **kw):
+        """Run one engine call on the executor thread; await the result.
+
+        Guarded so a stream outliving :meth:`stop` fails fast instead of
+        silently falling back to the loop's default (multi-thread)
+        executor — which would break the single-engine-thread invariant.
+        """
+        if self._executor is None:
+            raise RuntimeError("server is not running")
+        return self._loop.run_in_executor(self._executor, functools.partial(fn, *args, **kw))
+
+    # -- client side -------------------------------------------------------
+
+    async def submit(self, request: Request):
+        """Submit one request; awaits (and returns) its response."""
+        self._check_running()
+        fut = self._loop.create_future()
+        await self._queue.put((request, fut))
+        return await fut
+
+    async def stream(self, request: Request) -> AsyncIterator[ProgressEvent]:
+        """Async iterator of :class:`ProgressEvent`\\ s for one request.
+
+        Permutation and RSA requests stream incrementally; any other
+        request type degenerates to a single "done" event wrapping the
+        batched response (counted in ``streams_served`` either way —
+        streams count when they start, so abandoned iterators count too).
+        """
+        self._check_running()
+        self.streams_served += 1
+        if isinstance(request, PermutationRequest):
+            agen = self._stream_permutation(request)
+        elif isinstance(request, RSARequest):
+            agen = self._stream_rsa(request)
+        else:
+            yield ProgressEvent("done", 1, 1, await self.submit(request))
+            return
+        async for event in agen:
+            yield event
+
+    # -- worker side -------------------------------------------------------
+
+    async def _worker(self) -> None:
+        while True:
+            item = await self._queue.get()
+            if item is _STOP:
+                # Serve anything that raced in behind the sentinel, then exit.
+                leftovers = []
+                while not self._queue.empty():
+                    nxt = self._queue.get_nowait()
+                    if nxt is not _STOP:
+                        leftovers.append(nxt)
+                if leftovers:
+                    await self._serve_batch(leftovers)
+                return
+            batch = [item]
+            deadline = self._loop.time() + self.gather_window_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - self._loop.time()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(self._queue.get(), remaining)
+                except asyncio.TimeoutError:
+                    break
+                if nxt is _STOP:
+                    self._queue.put_nowait(_STOP)  # re-post; exit after this batch
+                    break
+                batch.append(nxt)
+            await self._serve_batch(batch)
+
+    async def _serve_batch(self, batch) -> None:
+        requests = [req for req, _ in batch]
+        futures = [fut for _, fut in batch]
+        try:
+            responses = await self._run(serve, self.engine, requests)
+        except Exception as e:  # noqa: BLE001 - fanned out to submitters
+            for fut in futures:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        for fut, resp in zip(futures, responses):
+            if not fut.done():
+                fut.set_result(resp)
+        self.batches_served += 1
+        self.requests_served += len(batch)
+
+    # -- streaming ---------------------------------------------------------
+
+    async def _plan_for(self, data, needs_train: bool):
+        folds = as_folds(data.folds)
+        return await self._run(self.engine.plan, data.x, folds, data.lam, data.mode, needs_train)
+
+    def _chunking(self, total: int) -> tuple[int, int]:
+        buckets = self.engine.config.buckets
+        t_gen = bucket_size(total, buckets)
+        return t_gen, min(bucket_size(self.stream_chunk, buckets), t_gen)
+
+    async def _null_chunks(self, total: int, n_items: int, seed: int, eval_chunk):
+        """Shared streaming loop: yield (done, null_block) chunk by chunk.
+
+        Permutations of ``n_items`` are generated once at the bucketed
+        ``t_gen`` — rounded up to a whole number of chunks, so every slice
+        is a full chunk with one static shape even under non-nested custom
+        buckets — and evaluated ``chunk`` rows at a time; repeats never
+        recompile, and the rounding preserves the prefix
+        (``permutation_indices`` is prefix-stable), so the stream's first
+        ``total`` draws match the monolithic path exactly.
+        ``eval_chunk(block, keep)`` trims its own output to ``keep``.
+        """
+        t_gen, chunk = self._chunking(total)
+        t_gen = -(-t_gen // chunk) * chunk  # whole chunks, same prefix
+        perms = await self._run(
+            perm_lib.permutation_indices, jax.random.PRNGKey(seed), n_items, t_gen
+        )
+        for lo in range(0, total, chunk):
+            hi = min(lo + chunk, total)
+            block = perms[lo : min(lo + chunk, t_gen)]
+            yield hi, await eval_chunk(block, hi - lo)
+
+    async def _stream_permutation(self, req: PermutationRequest):
+        if req.n_perm <= 0:
+            raise ValueError("streaming a permutation request needs n_perm > 0")
+        engine = self.engine
+        total = req.n_perm
+        needs_train = req.task == "multiclass" or req.adjust_bias
+        key, plan = await self._plan_for(req.data, needs_train)
+        yield ProgressEvent("plan", 0, total, key)
+        y = jnp.asarray(req.y)
+        if req.task == "multiclass":
+            observed = await self._run(
+                engine.observed_multiclass, plan, y, num_classes=req.num_classes
+            )
+        else:
+            observed = await self._run(
+                engine.observed_binary, plan, y, metric=req.metric, adjust_bias=req.adjust_bias
+            )
+        yield ProgressEvent("observed", 0, total, observed)
+
+        if req.task == "multiclass":
+
+            async def eval_chunk(block, keep):
+                out = await self._run(
+                    engine.null_multiclass, plan, y, block, num_classes=req.num_classes
+                )
+                return out[:keep]
+
+        else:
+
+            async def eval_chunk(block, keep):
+                out = await self._run(
+                    engine.null_binary,
+                    plan,
+                    y,
+                    block,
+                    metric=req.metric,
+                    adjust_bias=req.adjust_bias,
+                )
+                return out[:keep]
+
+        chunks = []
+        async for hi, null_block in self._null_chunks(total, int(y.shape[0]), req.seed, eval_chunk):
+            chunks.append(null_block)
+            yield ProgressEvent("null", hi, total, null_block)
+
+        def finish():  # keep even the cheap eager tail off the loop thread
+            null = jnp.concatenate(chunks)
+            return null, perm_lib.p_value(observed, null)
+
+        null, p = await self._run(finish)
+        yield ProgressEvent("done", total, total, PermutationResponse(observed, null, p, key))
+
+    async def _stream_rsa(self, req: RSARequest):
+        if req.contrast not in ("binary", "multiclass"):
+            raise ValueError(f"unknown RSA contrast {req.contrast!r}")
+        engine = self.engine
+        c = req.num_classes
+        total = req.n_perm if req.model_rdms is not None else 0
+        needs_train = req.contrast == "multiclass" or req.adjust_bias
+        key, plan = await self._plan_for(req.data, needs_train)
+        yield ProgressEvent("plan", 0, total, key)
+        y = jnp.asarray(req.y)
+        if req.contrast == "binary":
+
+            def build_rdm():  # contrast columns + eval + scatter, one engine-thread hop
+                cols = rsa_rdm.pair_contrast_columns(y, c, plan.h.dtype)
+                vals = engine.eval_rsa_pairs(plan, cols, req.dissimilarity, req.adjust_bias)
+                return rsa_rdm.rdm_from_pair_values(vals, c), vals
+
+        else:
+
+            def build_rdm():
+                preds = engine.eval_multiclass(plan, y, c)
+                return rsa_rdm.rdm_from_confusion(preds, y[plan.te_idx], c), None
+
+        rdm, vals = await self._run(build_rdm)
+        yield ProgressEvent("rdm", 0, total, rdm)
+        if req.model_rdms is None:
+            yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, None, None, None, key))
+            return
+        models = jnp.asarray(req.model_rdms)
+        scores = await self._run(engine.score_rdms, rdm, models, req.comparison)
+        yield ProgressEvent("scores", 0, total, scores)
+        if total <= 0:
+            yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, scores, None, None, key))
+            return
+
+        async def eval_chunk(block, keep):
+            out = await self._run(engine.null_rdm_scores, rdm, models, block, req.comparison)
+            return out[:, :keep]
+
+        chunks = []
+        async for hi, null_block in self._null_chunks(total, c, req.seed, eval_chunk):
+            chunks.append(null_block)
+            yield ProgressEvent("null", hi, total, null_block)
+
+        def finish():
+            null = jnp.concatenate(chunks, axis=1)
+            p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
+            return null, p
+
+        null, p = await self._run(finish)
+        yield ProgressEvent("done", total, total, RSAResponse(rdm, vals, scores, null, p, key))

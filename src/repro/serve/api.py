@@ -19,7 +19,8 @@ identity, coalesces same-plan label queries through the
 :class:`~repro.serve.batching.MicroBatcher` (one padded jitted eval per
 group), and un-pads per-request results. :class:`EngineServer` wraps the
 same driver in a thread-backed queue so concurrent submitters get futures
-while their queries ride shared micro-batches.
+while their queries ride shared micro-batches; the asyncio counterpart
+(with streamed responses) lives in :mod:`repro.serve.aio`.
 """
 
 from __future__ import annotations
@@ -45,6 +46,7 @@ __all__ = [
     "PermutationRequest",
     "RSARequest",
     "TuneRequest",
+    "Request",
     "CVResponse",
     "PermutationResponse",
     "RSAResponse",
@@ -76,10 +78,10 @@ class DatasetSpec:
 @dataclasses.dataclass
 class CVRequest:
     data: DatasetSpec
-    y: jax.Array                  # binary/ridge: (N,) or (N, B); mc: (N,)/(B, N)
-    task: str = "binary"          # "binary" | "multiclass" | "ridge"
-    num_classes: int = 0          # required for task="multiclass"
-    adjust_bias: bool = True      # binary only (paper §2.5)
+    y: jax.Array  # binary/ridge: (N,) or (N, B); mc: (N,)/(B, N)
+    task: str = "binary"  # "binary" | "multiclass" | "ridge"
+    num_classes: int = 0  # required for task="multiclass"
+    adjust_bias: bool = True  # binary only (paper §2.5)
 
 
 @dataclasses.dataclass
@@ -88,9 +90,9 @@ class PermutationRequest:
     y: jax.Array
     n_perm: int
     seed: int = 0
-    task: str = "binary"          # "binary" | "multiclass"
+    task: str = "binary"  # "binary" | "multiclass"
     num_classes: int = 0
-    metric: str = "accuracy"      # binary only: "accuracy" | "auc"
+    metric: str = "accuracy"  # binary only: "accuracy" | "auc"
     adjust_bias: bool = True
 
 
@@ -109,12 +111,12 @@ class RSARequest:
     """
 
     data: DatasetSpec
-    y: jax.Array                  # int (N,) condition labels
+    y: jax.Array  # int (N,) condition labels
     num_classes: int
-    contrast: str = "binary"      # "binary" | "multiclass"
+    contrast: str = "binary"  # "binary" | "multiclass"
     dissimilarity: str = "accuracy"  # binary only: "accuracy" | "contrast"
-    adjust_bias: bool = True      # binary only (paper §2.5)
-    model_rdms: Optional[jax.Array] = None   # (M, C, C)
+    adjust_bias: bool = True  # binary only (paper §2.5)
+    model_rdms: Optional[jax.Array] = None  # (M, C, C)
     comparison: str = "spearman"
     n_perm: int = 0
     seed: int = 0
@@ -139,9 +141,11 @@ Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest]
 @dataclasses.dataclass
 class CVResponse:
     task: str
-    values: jax.Array             # dvals / ẏ_Te (K, m[, B]) or preds
-    y_te: jax.Array               # matching test labels/responses
-    score: jax.Array              # accuracy (classification) or mse (ridge)
+    values: object  # dvals / ẏ_Te (K, m[, B]) or preds — host np.ndarray
+    #                 from the batched driver (MicroBatcher un-pads on the
+    #                 host), jax.Array from direct engine calls
+    y_te: jax.Array  # matching test labels/responses
+    score: jax.Array  # accuracy (classification) or mse (ridge)
     plan_key: tuple
 
 
@@ -155,11 +159,12 @@ class PermutationResponse:
 
 @dataclasses.dataclass
 class RSAResponse:
-    rdm: jax.Array                # (C, C) empirical RDM
-    pair_values: Optional[jax.Array]   # (B,) pair dissimilarities (binary)
+    rdm: jax.Array  # (C, C) empirical RDM
+    pair_values: Optional[object]  # (B,) pair dissimilarities (binary);
+    #                                np.ndarray from the batched driver
     model_scores: Optional[jax.Array]  # (M,) or None
-    null: Optional[jax.Array]     # (M, n_perm) or None
-    p: Optional[jax.Array]        # (M,) or None
+    null: Optional[jax.Array]  # (M, n_perm) or None
+    p: Optional[jax.Array]  # (M,) or None
     plan_key: tuple
 
 
@@ -192,13 +197,13 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
     plan_memo: dict = {}
 
     def plan_for(data: DatasetSpec, with_train_block: bool):
-        memo_key = (id(data.x), id(data.folds), float(data.lam), data.mode,
-                    with_train_block)
+        memo_key = (id(data.x), id(data.folds), float(data.lam), data.mode, with_train_block)
         hit = plan_memo.get(memo_key)
         if hit is None:
             folds = as_folds(data.folds)
-            hit = engine.plan(data.x, folds, data.lam, mode=data.mode,
-                              with_train_block=with_train_block)
+            hit = engine.plan(
+                data.x, folds, data.lam, mode=data.mode, with_train_block=with_train_block
+            )
             plan_memo[memo_key] = hit
         return hit
 
@@ -212,32 +217,37 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
             needs_train = req.contrast == "multiclass" or req.adjust_bias
             key, plan = plan_for(req.data, needs_train)
             if req.contrast == "binary":
-                gkey = (key, "binary", req.dissimilarity, req.adjust_bias,
-                        req.num_classes)
+                gkey = (key, "binary", req.dissimilarity, req.adjust_bias, req.num_classes)
             else:
                 gkey = (key, "multiclass", None, None, req.num_classes)
             rsa_groups.setdefault(gkey, (plan, []))[1].append((i, req))
         elif isinstance(req, TuneRequest):
-            responses[i] = TuneResponse(engine.tune(
-                req.x, req.y, lambdas=req.lambdas, criterion=req.criterion))
+            responses[i] = TuneResponse(
+                engine.tune(req.x, req.y, lambdas=req.lambdas, criterion=req.criterion)
+            )
         elif isinstance(req, PermutationRequest):
             needs_train = req.task == "multiclass" or req.adjust_bias
             key, plan = plan_for(req.data, needs_train)
             if req.task == "multiclass":
                 res = engine.permutation_multiclass(
-                    plan, jnp.asarray(req.y), req.n_perm,
+                    plan,
+                    jnp.asarray(req.y),
+                    req.n_perm,
                     jax.random.PRNGKey(req.seed),
-                    num_classes=req.num_classes)
+                    num_classes=req.num_classes,
+                )
             else:
                 res = engine.permutation_binary(
-                    plan, jnp.asarray(req.y), req.n_perm,
-                    jax.random.PRNGKey(req.seed), metric=req.metric,
-                    adjust_bias=req.adjust_bias)
-            responses[i] = PermutationResponse(res.observed, res.null, res.p,
-                                               key)
+                    plan,
+                    jnp.asarray(req.y),
+                    req.n_perm,
+                    jax.random.PRNGKey(req.seed),
+                    metric=req.metric,
+                    adjust_bias=req.adjust_bias,
+                )
+            responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
         elif isinstance(req, CVRequest):
-            needs_train = req.task == "multiclass" or (
-                req.task == "binary" and req.adjust_bias)
+            needs_train = req.task == "multiclass" or (req.task == "binary" and req.adjust_bias)
             key, plan = plan_for(req.data, needs_train)
             gkey = (key, req.task, req.adjust_bias, req.num_classes)
             groups.setdefault(gkey, (plan, []))[1].append((i, req))
@@ -249,48 +259,47 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
     for (key, task, adjust_bias, num_classes), (plan, members) in groups.items():
         ys = [jnp.asarray(req.y) for _, req in members]
         if task == "binary":
-            outs = batcher.run_columns(
-                ys, lambda b: engine.eval_binary(plan, b, adjust_bias))
+            outs = batcher.run_columns(ys, lambda b: engine.eval_binary(plan, b, adjust_bias))
         elif task == "ridge":
-            outs = batcher.run_columns(
-                ys, lambda b: engine.eval_ridge(plan, b))
+            outs = batcher.run_columns(ys, lambda b: engine.eval_ridge(plan, b))
         elif task == "multiclass":
-            outs = batcher.run_rows(
-                ys, lambda b: engine.eval_multiclass(plan, b, num_classes))
+            outs = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, num_classes))
         else:
             raise ValueError(f"unknown task {task!r}")
         for (i, req), values in zip(members, outs):
             y = jnp.asarray(req.y)
             if task == "multiclass":
-                y_te = (y[plan.te_idx] if y.ndim == 1
-                        else y[:, plan.te_idx])
+                y_te = y[plan.te_idx] if y.ndim == 1 else y[:, plan.te_idx]
             else:
-                y_te = y[plan.te_idx]      # (K, m[, B]) via trailing dims
-            responses[i] = CVResponse(task, values, y_te,
-                                      _score(task, values, y_te), key)
+                y_te = y[plan.te_idx]  # (K, m[, B]) via trailing dims
+            responses[i] = CVResponse(task, values, y_te, _score(task, values, y_te), key)
 
     # -- RSA: contrast columns ride the same coalesced label-batch path ----
     for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
         if contrast == "binary":
-            cols = [rsa_rdm.pair_contrast_columns(jnp.asarray(req.y), c,
-                                                  plan.h.dtype)
-                    for _, req in members]
-            outs = batcher.run_columns(
-                cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj))
-            rdms = [(rsa_rdm.rdm_from_pair_values(vals, c), vals)
-                    for vals in outs]
+            cols = [
+                rsa_rdm.pair_contrast_columns(jnp.asarray(req.y), c, plan.h.dtype)
+                for _, req in members
+            ]
+            outs = batcher.run_columns(cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj))
+            rdms = [(rsa_rdm.rdm_from_pair_values(vals, c), vals) for vals in outs]
         else:
             ys = [jnp.asarray(req.y) for _, req in members]
-            preds = batcher.run_rows(
-                ys, lambda b: engine.eval_multiclass(plan, b, c))
-            rdms = [(rsa_rdm.rdm_from_confusion(pred, y[plan.te_idx], c), None)
-                    for pred, y in zip(preds, ys)]
+            preds = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, c))
+            rdms = [
+                (rsa_rdm.rdm_from_confusion(pred, y[plan.te_idx], c), None)
+                for pred, y in zip(preds, ys)
+            ]
         for (i, req), (rdm, vals) in zip(members, rdms):
             scores = null = p = None
             if req.model_rdms is not None:
                 scores, null, p = engine.compare_rdms(
-                    rdm, jnp.asarray(req.model_rdms), req.comparison,
-                    req.n_perm, jax.random.PRNGKey(req.seed))
+                    rdm,
+                    jnp.asarray(req.model_rdms),
+                    req.comparison,
+                    req.n_perm,
+                    jax.random.PRNGKey(req.seed),
+                )
             responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
     return responses
 
@@ -310,8 +319,7 @@ class EngineServer:
     plans and shared padded evals.
     """
 
-    def __init__(self, engine: CVEngine, max_batch: int = 64,
-                 max_wait_ms: float = 2.0):
+    def __init__(self, engine: CVEngine, max_batch: int = 64, max_wait_ms: float = 2.0):
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
@@ -328,8 +336,7 @@ class EngineServer:
         if self._thread is not None:
             raise RuntimeError("server already started")
         self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="cv-engine-server")
+        self._thread = threading.Thread(target=self._run, daemon=True, name="cv-engine-server")
         self._thread.start()
         return self
 
@@ -343,7 +350,7 @@ class EngineServer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        while True:                       # belt-and-braces: never strand a future
+        while True:  # belt-and-braces: never strand a future
             try:
                 _, fut = self._queue.get_nowait()
             except queue_mod.Empty:
@@ -394,7 +401,7 @@ class EngineServer:
             futures = [fut for _, fut in batch]
             try:
                 responses = serve(self.engine, requests)
-            except Exception as e:          # noqa: BLE001 - fanned out
+            except Exception as e:  # noqa: BLE001 - fanned out
                 for fut in futures:
                     fut.set_exception(e)
                 continue

@@ -13,6 +13,16 @@ Two layouts, matching the engine's eval paths:
                response columns; batch is (N, B).
   * rows     — multi-class: each query contributes (N,) or (b, N) integer
                label rows; batch is (B, N).
+
+Coalescing and un-padding run in HOST numpy, not jnp, on purpose: jax
+compiles even eager ops per (primitive, shapes) signature, so stacking a
+*novel* combination of query widths with ``jnp.concatenate`` + ``jnp.pad``
++ per-request output slices costs a fresh flock of tiny XLA compiles
+(~tens of ms each on CPU) every time traffic composition shifts — which
+under a gather-window server is nearly every batch. Host-side assembly
+makes batch composition free; the single bucketed jitted eval is the only
+XLA entry point, so the engine's no-recompile guarantee extends to ragged,
+never-repeating traffic mixes.
 """
 
 from __future__ import annotations
@@ -22,6 +32,7 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.folds import Folds
 
@@ -50,15 +61,14 @@ def as_folds(folds) -> Folds:
     if isinstance(folds, Folds):
         return folds
     te_idx, tr_idx = folds
-    return Folds.with_indices(jnp.asarray(te_idx, jnp.int32),
-                              jnp.asarray(tr_idx, jnp.int32))
+    return Folds.with_indices(jnp.asarray(te_idx, jnp.int32), jnp.asarray(tr_idx, jnp.int32))
 
 
 @dataclasses.dataclass(frozen=True)
 class _Segment:
-    start: int          # first column/row of this query in the batch
+    start: int  # first column/row of this query in the batch
     stop: int
-    squeeze: bool       # query was a single vector, not a matrix
+    squeeze: bool  # query was a single vector, not a matrix
 
 
 class MicroBatcher:
@@ -73,28 +83,28 @@ class MicroBatcher:
         """Stack queries into (N, B_bucket); returns (batch, segments, B)."""
         segments, cols, offset = [], [], 0
         for y in ys:
-            y = jnp.asarray(y)
-            squeeze = y.ndim == 1
-            yc = y[:, None] if squeeze else y
+            arr = np.asarray(y)
+            squeeze = arr.ndim == 1
+            yc = arr[:, None] if squeeze else arr
             segments.append(_Segment(offset, offset + yc.shape[1], squeeze))
             cols.append(yc)
             offset += yc.shape[1]
-        batch = jnp.concatenate(cols, axis=1)
+        batch = np.concatenate(cols, axis=1)
         padded = bucket_size(offset, self.buckets)
         if padded > offset:
-            batch = jnp.pad(batch, ((0, 0), (0, padded - offset)))
-        return batch, segments, offset
+            batch = np.pad(batch, ((0, 0), (0, padded - offset)))
+        return jnp.asarray(batch), segments, offset
 
     def split_columns(self, out: jax.Array, segments: Sequence[_Segment]):
         """Invert :meth:`coalesce_columns` on an output with trailing B."""
+        out = np.asarray(out)  # one host sync; per-request slices are free
         results = []
         for seg in segments:
-            r = out[..., seg.start:seg.stop]
+            r = out[..., seg.start : seg.stop]
             results.append(r[..., 0] if seg.squeeze else r)
         return results
 
-    def run_columns(self, ys: Sequence[jax.Array],
-                    eval_fn: Callable[[jax.Array], jax.Array]):
+    def run_columns(self, ys: Sequence[jax.Array], eval_fn: Callable[[jax.Array], jax.Array]):
         """One padded eval for all queries; per-query unpadded outputs."""
         batch, segments, _ = self.coalesce_columns(ys)
         return self.split_columns(eval_fn(batch), segments)
@@ -109,29 +119,29 @@ class MicroBatcher:
         eigensolve; a real label vector is always well-posed)."""
         segments, rows, offset = [], [], 0
         for y in ys:
-            y = jnp.asarray(y)
-            squeeze = y.ndim == 1
-            yr = y[None, :] if squeeze else y
+            arr = np.asarray(y)
+            squeeze = arr.ndim == 1
+            yr = arr[None, :] if squeeze else arr
             segments.append(_Segment(offset, offset + yr.shape[0], squeeze))
             rows.append(yr)
             offset += yr.shape[0]
-        batch = jnp.concatenate(rows, axis=0)
+        batch = np.concatenate(rows, axis=0)
         padded = bucket_size(offset, self.buckets)
         if padded > offset:
-            batch = jnp.concatenate(
-                [batch, jnp.broadcast_to(batch[:1],
-                                         (padded - offset,) + batch.shape[1:])],
-                axis=0)
-        return batch, segments, offset
+            batch = np.concatenate(
+                [batch, np.broadcast_to(batch[:1], (padded - offset,) + batch.shape[1:])],
+                axis=0,
+            )
+        return jnp.asarray(batch), segments, offset
 
     def split_rows(self, out: jax.Array, segments: Sequence[_Segment]):
+        out = np.asarray(out)  # one host sync; per-request slices are free
         results = []
         for seg in segments:
-            r = out[seg.start:seg.stop]
+            r = out[seg.start : seg.stop]
             results.append(r[0] if seg.squeeze else r)
         return results
 
-    def run_rows(self, ys: Sequence[jax.Array],
-                 eval_fn: Callable[[jax.Array], jax.Array]):
+    def run_rows(self, ys: Sequence[jax.Array], eval_fn: Callable[[jax.Array], jax.Array]):
         batch, segments, _ = self.coalesce_rows(ys)
         return self.split_rows(eval_fn(batch), segments)

@@ -1,4 +1,4 @@
-"""LRU plan cache with a byte-budget eviction policy.
+"""LRU plan cache with a byte-budget eviction policy and pinning.
 
 The :class:`~repro.core.fastcv.CVPlan` is the expensive, label-invariant
 half of the paper's economics (§2.7): O(N²P + N³ + K·m³) to build, O(K·m²)
@@ -13,6 +13,14 @@ single plan larger than the whole budget is *not* admitted — it is served
 un-cached (``get_or_build`` still returns it) and counted in
 ``stats.oversized``, rather than evicting every resident plan to make room
 for an entry that can never fit.
+
+Pinning: :meth:`PlanCache.pin` marks a resident plan as a first-class,
+pre-warmed resource (the warm-up workflow of the serving engine). Pinned
+plans are never LRU-evicted and their bytes are *excluded* from the
+byte-budget pressure calculation — pinning is an operator statement that
+the plan's memory is budgeted elsewhere — with counts in ``stats.pinned``
+/ ``stats.pinned_bytes``. :meth:`PlanCache.unpin` re-subjects the entry to
+ordinary LRU pressure.
 
 Thread safety: one coarse lock around all operations. ``get_or_build``
 holds it across the build, which doubles as single-flight semantics —
@@ -34,9 +42,11 @@ __all__ = ["CacheStats", "PlanCache"]
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
-    misses: int = 0        # builds (cached inserts + oversized un-cached)
+    misses: int = 0  # builds (cached inserts + oversized un-cached)
     evictions: int = 0
-    oversized: int = 0     # builds served un-cached (nbytes > byte_budget)
+    oversized: int = 0  # builds served un-cached (nbytes > byte_budget)
+    pinned: int = 0  # entries currently pinned (never evicted)
+    pinned_bytes: int = 0  # bytes held by pinned entries (outside pressure)
     bytes_in_use: int = 0
     byte_budget: int = 0
 
@@ -57,6 +67,7 @@ class PlanCache:
             raise ValueError("byte_budget must be positive")
         self._lock = threading.RLock()
         self._entries: "OrderedDict[Hashable, CVPlan]" = OrderedDict()
+        self._pinned: set = set()
         self.stats = CacheStats(byte_budget=byte_budget)
 
     def __len__(self) -> int:
@@ -95,24 +106,69 @@ class PlanCache:
                 self.stats.misses += 1
                 self.stats.oversized += 1
                 return False
-            if key in self._entries:          # replace without re-counting
-                self.stats.bytes_in_use -= self._entries.pop(key).nbytes
+            if key in self._entries:  # replace without re-counting
+                old = self._entries.pop(key)
+                self.stats.bytes_in_use -= old.nbytes
                 self.stats.misses -= 1
+                if key in self._pinned:
+                    self.stats.pinned_bytes += plan.nbytes - old.nbytes
             self._entries[key] = plan
             self.stats.misses += 1
             self.stats.bytes_in_use += plan.nbytes
             self._evict_over_budget()
             return True
 
+    # -- pinning -----------------------------------------------------------
+
+    def pin(self, key: Hashable) -> bool:
+        """Exempt a resident plan from LRU eviction and budget pressure.
+
+        Returns False (no-op) when the key is absent; idempotent when it
+        is already pinned.
+        """
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is None:
+                return False
+            if key not in self._pinned:
+                self._pinned.add(key)
+                self.stats.pinned += 1
+                self.stats.pinned_bytes += plan.nbytes
+            return True
+
+    def unpin(self, key: Hashable) -> bool:
+        """Re-subject a pinned plan to ordinary LRU pressure.
+
+        The entry stays resident (freshly most-recent) but its bytes count
+        against the budget again, so eviction may immediately reclaim
+        colder entries. Returns False when the key was not pinned.
+        """
+        with self._lock:
+            if key not in self._pinned:
+                return False
+            self._pinned.discard(key)
+            self.stats.pinned -= 1
+            self.stats.pinned_bytes -= self._entries[key].nbytes
+            self._entries.move_to_end(key)
+            self._evict_over_budget()
+            return True
+
+    def pinned_keys(self) -> tuple:
+        with self._lock:
+            return tuple(self._pinned)
+
     def _evict_over_budget(self) -> None:
-        while (self.stats.bytes_in_use > self.stats.byte_budget
-               and len(self._entries) > 1):
-            _, evicted = self._entries.popitem(last=False)
+        # Pressure counts unpinned bytes only; victims are the LRU
+        # *unpinned* entries (pinned plans are exempt by contract).
+        while self.stats.bytes_in_use - self.stats.pinned_bytes > self.stats.byte_budget:
+            victim = next((k for k in self._entries if k not in self._pinned), None)
+            if victim is None:
+                break
+            evicted = self._entries.pop(victim)
             self.stats.bytes_in_use -= evicted.nbytes
             self.stats.evictions += 1
 
-    def get_or_build(self, key: Hashable,
-                     build: Callable[[], CVPlan]) -> tuple[CVPlan, bool]:
+    def get_or_build(self, key: Hashable, build: Callable[[], CVPlan]) -> tuple[CVPlan, bool]:
         """Return ``(plan, was_hit)``; builds (single-flight) on miss.
 
         An oversized build is still returned to the caller — the engine
@@ -127,8 +183,12 @@ class PlanCache:
             return plan, False
 
     def clear(self) -> None:
+        """Drop every entry, pinned ones included (counted as evictions)."""
         with self._lock:
             for plan in self._entries.values():
                 self.stats.bytes_in_use -= plan.nbytes
                 self.stats.evictions += 1
             self._entries.clear()
+            self._pinned.clear()
+            self.stats.pinned = 0
+            self.stats.pinned_bytes = 0

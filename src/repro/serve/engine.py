@@ -19,6 +19,14 @@ Plan builds route the O(N²P) centered-Gram hot-spot through the Pallas
 ``gram`` kernel on TPU (``gram_impl="auto"``/"pallas") or through
 ``distributed_gram`` when a mesh is configured (``gram_impl="distributed"``,
 which also shards permutation batches over the mesh's data axes).
+
+:meth:`CVEngine.warmup` turns the lazy caches into an explicit readiness
+API: it pre-builds (and optionally pins) the plan for a dataset spec and
+pre-compiles the bucketed eval family for a set of tasks, so first real
+traffic hits zero plan builds and zero compiles. The chunk-level
+``observed_*`` / ``null_*`` methods expose the permutation machinery at
+sub-request granularity — the streaming front-end
+(:mod:`repro.serve.aio`) drives them to emit incremental null chunks.
 """
 
 from __future__ import annotations
@@ -29,17 +37,18 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import fastcv, metrics, multiclass, permutation as perm_lib
-from repro.core import tuning
+from repro.core import fastcv, metrics, multiclass, tuning
+from repro.core import permutation as perm_lib
 from repro.core.folds import Folds
 from repro.rsa import compare as rsa_compare
 from repro.rsa import rdm as rsa_rdm
-from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, bucket_size
+from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
 from repro.serve.cache import PlanCache
 
 __all__ = ["EngineConfig", "CVEngine"]
 
 _GRAM_IMPLS = ("auto", "xla", "pallas", "distributed")
+_WARMUP_TASKS = ("binary", "ridge", "multiclass", "permutation", "rsa")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,14 +98,14 @@ class CVEngine:
         # Eval paths are created lazily but exactly once per static
         # signature and held forever: the dict entry IS the jit cache the
         # no-recompile guarantee rests on.
-        self._eval_binary = {}      # adjust_bias -> jit[(plan, y(N,B)) -> (K,m,B)]
+        self._eval_binary = {}  # adjust_bias -> jit[(plan, y(N,B)) -> (K,m,B)]
         self._eval_ridge = fastcv.make_eval_cv(donate=self._donate)
         self._eval_multiclass = {}  # num_classes -> jit[(plan, y(B,N)) -> (B,K,m)]
-        self._perm_binary = {}      # (metric, adjust_bias) -> jit -> (B,)
+        self._perm_binary = {}  # (metric, adjust_bias) -> jit -> (B,)
         self._perm_multiclass = {}  # num_classes -> jit -> (B,)
-        self._rsa_pairs = {}        # (dissimilarity, adjust_bias) -> jit -> (B,)
-        self._rsa_score = {}        # method -> jit[(emp, models) -> (M,)]
-        self._rsa_null = {}         # method -> jit[(emp, models, perms) -> (M,T)]
+        self._rsa_pairs = {}  # (dissimilarity, adjust_bias) -> jit -> (B,)
+        self._rsa_score = {}  # method -> jit[(emp, models) -> (M,)]
+        self._rsa_null = {}  # method -> jit[(emp, models, perms) -> (M,T)]
         self.plans_built = 0
         self.labels_evaluated = 0
 
@@ -104,8 +113,14 @@ class CVEngine:
     # Plans
     # ------------------------------------------------------------------
 
-    def plan(self, x: jax.Array, folds: Folds, lam: float,
-             mode: str = "auto", with_train_block: bool = True):
+    def plan(
+        self,
+        x: jax.Array,
+        folds: Folds,
+        lam: float,
+        mode: str = "auto",
+        with_train_block: bool = True,
+    ):
         """Fetch-or-build the plan for (x, folds, λ). Returns (key, plan).
 
         A plan *with* the train block is a superset of the one without
@@ -118,16 +133,17 @@ class CVEngine:
             if plan is not None:
                 return superset, plan
         plan, _ = self.cache.get_or_build(
-            key, lambda: self._build_plan(x, folds, lam, mode,
-                                          with_train_block))
+            key, lambda: self._build_plan(x, folds, lam, mode, with_train_block)
+        )
         return key, plan
 
     def _build_plan(self, x, folds, lam, mode, with_train_block):
         n, p = x.shape
         resolved = ("dual" if p >= n else "primal") if mode == "auto" else mode
         gram = self._build_gram(x) if resolved == "dual" else None
-        plan = fastcv.prepare(x, folds, lam, mode=resolved,
-                              with_train_block=with_train_block, gram=gram)
+        plan = fastcv.prepare(
+            x, folds, lam, mode=resolved, with_train_block=with_train_block, gram=gram
+        )
         self.plans_built += 1
         return plan
 
@@ -136,13 +152,119 @@ class CVEngine:
         if impl == "auto":
             impl = "pallas" if jax.default_backend() == "tpu" else "xla"
         if impl == "xla":
-            return None                      # prepare() computes it inline
+            return None  # prepare() computes it inline
         if impl == "pallas":
             from repro.kernels.gram.ops import centered_gram
+
             return centered_gram(x)
         from repro.core.distributed import distributed_gram
-        return distributed_gram(x, self.config.mesh,
-                                feature_axis=self.config.feature_axis)
+
+        return distributed_gram(x, self.config.mesh, feature_axis=self.config.feature_axis)
+
+    # -- pinning (PlanCache passthrough) -------------------------------
+
+    def pin(self, key) -> bool:
+        """Exempt a cached plan from eviction; see :meth:`PlanCache.pin`."""
+        return self.cache.pin(key)
+
+    def unpin(self, key) -> bool:
+        return self.cache.unpin(key)
+
+    # ------------------------------------------------------------------
+    # Warm-up: pre-build plans, pre-compile the bucketed eval family
+    # ------------------------------------------------------------------
+
+    def warmup(
+        self,
+        spec,
+        tasks: Sequence[str] = ("binary",),
+        buckets: Optional[Sequence[int]] = None,
+        *,
+        num_classes: int = 0,
+        metric: str = "accuracy",
+        adjust_bias: bool = True,
+        dissimilarity: str = "accuracy",
+        comparison: str = "spearman",
+        num_model_rdms: int = 0,
+        pin: bool = False,
+    ) -> dict:
+        """Pre-build the plan for ``spec`` and pre-compile eval programs.
+
+        ``spec`` is anything with ``x`` / ``folds`` / ``lam`` (and
+        optionally ``mode``) attributes — e.g. :class:`repro.serve.api
+        .DatasetSpec`. ``tasks`` selects eval families from
+        {"binary", "ridge", "multiclass", "permutation", "rsa"};
+        ``buckets`` the label-batch sizes to compile (default: every
+        configured bucket; values are canonicalised via ``bucket_size``).
+        After a warm-up covering the shapes traffic will hit,
+        ``compile_count()`` stays flat — first real requests pay only the
+        O(K·m²) fold solves.
+
+        The "rsa" task compiles the pairwise-contrast path for
+        (``dissimilarity``, ``adjust_bias``); with ``num_model_rdms`` > 0
+        it also compiles the model-scoring + permutation-null programs for
+        ``comparison`` at every null bucket (the model count M is a static
+        shape, so pass the M real traffic will carry).
+
+        With ``pin=True`` the built plan is pinned in the cache (never
+        LRU-evicted, excluded from budget pressure) until ``unpin``.
+        Returns a summary dict (plan_key, buckets, compiles, pinned).
+        """
+        unknown = [t for t in tasks if t not in _WARMUP_TASKS]
+        if unknown:
+            raise ValueError(f"unknown warmup tasks {unknown}; expected {_WARMUP_TASKS}")
+        if "multiclass" in tasks and num_classes < 2:
+            raise ValueError("warmup of 'multiclass' needs num_classes >= 2")
+        folds = as_folds(spec.folds)
+        mode = getattr(spec, "mode", "auto")
+        key, plan = self.plan(spec.x, folds, spec.lam, mode=mode, with_train_block=True)
+        wanted = sorted(
+            {bucket_size(b, self.config.buckets) for b in (buckets or self.config.buckets)}
+        )
+        n = int(spec.x.shape[0])
+        y_bin = jnp.where(jnp.arange(n) % 2 == 0, -1.0, 1.0).astype(plan.h.dtype)
+        y_mc = (jnp.arange(n, dtype=jnp.int32) % max(num_classes, 2)).astype(jnp.int32)
+        outs = []
+        if "permutation" in tasks:
+            outs.append(self.observed_binary(plan, y_bin, metric=metric, adjust_bias=adjust_bias))
+            if num_classes >= 2:
+                outs.append(self.observed_multiclass(plan, y_mc, num_classes=num_classes))
+        for b in wanted:
+            if "binary" in tasks:
+                cols = jnp.tile(y_bin[:, None], (1, b))
+                outs.append(self.eval_binary(plan, cols, adjust_bias))
+            if "ridge" in tasks:
+                outs.append(self.eval_ridge(plan, jnp.tile(y_bin[:, None], (1, b))))
+            if "multiclass" in tasks:
+                rows = jnp.tile(y_mc[None, :], (b, 1))
+                outs.append(self.eval_multiclass(plan, rows, num_classes))
+            if "permutation" in tasks:
+                perms = perm_lib.permutation_indices(jax.random.PRNGKey(0), n, b)
+                outs.append(
+                    self.null_binary(plan, y_bin, perms, metric=metric, adjust_bias=adjust_bias)
+                )
+                if num_classes >= 2:  # mirrors the observed_multiclass gate above
+                    outs.append(self.null_multiclass(plan, y_mc, perms, num_classes=num_classes))
+            if "rsa" in tasks:
+                cols = jnp.tile(y_bin[:, None], (1, b))
+                outs.append(self.eval_rsa_pairs(plan, cols, dissimilarity, adjust_bias))
+        if "rsa" in tasks and num_model_rdms > 0:
+            if num_classes < 2:
+                raise ValueError("rsa model-scoring warmup needs num_classes >= 2")
+            rdm0 = jnp.zeros((num_classes, num_classes), plan.h.dtype)
+            models0 = jnp.zeros((num_model_rdms,) + rdm0.shape, plan.h.dtype)
+            outs.append(self.score_rdms(rdm0, models0, comparison))
+            for b in wanted:
+                perms0 = perm_lib.permutation_indices(jax.random.PRNGKey(0), num_classes, b)
+                outs.append(self.null_rdm_scores(rdm0, models0, perms0, comparison))
+        jax.block_until_ready(outs)
+        pinned = self.cache.pin(key) if pin else False
+        return {
+            "plan_key": key,
+            "buckets": tuple(wanted),
+            "compiles": self.compile_count(),
+            "pinned": pinned,
+        }
 
     # ------------------------------------------------------------------
     # Shape-bucketed jitted evaluation
@@ -173,19 +295,18 @@ class CVEngine:
         b = y.shape[0]
         padded = bucket_size(b, self.config.buckets)
         if padded > b:
-            y = jnp.concatenate(
-                [y, jnp.broadcast_to(y[:1], (padded - b,) + y.shape[1:])], 0)
+            y = jnp.concatenate([y, jnp.broadcast_to(y[:1], (padded - b,) + y.shape[1:])], 0)
         return y, b
 
-    def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array,
-                    adjust_bias: bool = True) -> jax.Array:
+    def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array, adjust_bias: bool = True) -> jax.Array:
         """Binary-LDA decision values. y: (N,) or (N, B) ±1 labels."""
         squeeze = y.ndim == 1
         yb = y[:, None] if squeeze else y
         fn = self._eval_binary.get(adjust_bias)
         if fn is None:
             fn = self._eval_binary[adjust_bias] = fastcv.make_eval_binary(
-                adjust_bias=adjust_bias, donate=self._donate)
+                adjust_bias=adjust_bias, donate=self._donate
+            )
         if not adjust_bias:
             plan = self._strip_train(plan)
         yb = yb.astype(plan.h.dtype)
@@ -204,16 +325,15 @@ class CVEngine:
         self.labels_evaluated += b
         return out[..., 0] if squeeze else out
 
-    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array,
-                        num_classes: int) -> jax.Array:
+    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array, num_classes: int) -> jax.Array:
         """Multi-class LDA CV predictions. y: int (N,) or (B, N)."""
         squeeze = y.ndim == 1
         yb = y[None, :] if squeeze else y
         fn = self._eval_multiclass.get(num_classes)
         if fn is None:
-            fn = self._eval_multiclass[num_classes] = \
-                multiclass.make_eval_multiclass(num_classes,
-                                                donate=self._donate)
+            fn = self._eval_multiclass[num_classes] = multiclass.make_eval_multiclass(
+                num_classes, donate=self._donate
+            )
         padded, b = self._pad_rows(yb)
         out = fn(plan, padded)[:b]
         self.labels_evaluated += b
@@ -223,9 +343,13 @@ class CVEngine:
     # RSA serving (pairwise-contrast RDMs + model scoring, §4.2)
     # ------------------------------------------------------------------
 
-    def eval_rsa_pairs(self, plan: fastcv.CVPlan, cols: jax.Array,
-                       dissimilarity: str = "accuracy",
-                       adjust_bias: bool = True) -> jax.Array:
+    def eval_rsa_pairs(
+        self,
+        plan: fastcv.CVPlan,
+        cols: jax.Array,
+        dissimilarity: str = "accuracy",
+        adjust_bias: bool = True,
+    ) -> jax.Array:
         """Pairwise-contrast dissimilarities. cols: (N, B) ±1/0 columns.
 
         Contrast columns are just label columns, so they ride the same
@@ -234,9 +358,9 @@ class CVEngine:
         """
         fn = self._rsa_pairs.get((dissimilarity, adjust_bias))
         if fn is None:
-            fn = self._rsa_pairs[(dissimilarity, adjust_bias)] = \
-                rsa_rdm.make_eval_pairs(dissimilarity, adjust_bias,
-                                        donate=self._donate)
+            fn = self._rsa_pairs[(dissimilarity, adjust_bias)] = rsa_rdm.make_eval_pairs(
+                dissimilarity, adjust_bias, donate=self._donate
+            )
         if not adjust_bias:
             plan = self._strip_train(plan)
         cols = cols.astype(plan.h.dtype)
@@ -245,9 +369,42 @@ class CVEngine:
         self.labels_evaluated += b
         return out
 
-    def compare_rdms(self, empirical: jax.Array, model_rdms: jax.Array,
-                     method: str = "spearman", n_perm: int = 0,
-                     key: Optional[jax.Array] = None):
+    def score_rdms(
+        self, empirical: jax.Array, model_rdms: jax.Array, method: str = "spearman"
+    ) -> jax.Array:
+        """(M,) model-RDM scores through the engine's jitted scorer."""
+        fn = self._rsa_score.get(method)
+        if fn is None:
+            fn = self._rsa_score[method] = rsa_compare.make_compare(method)
+        return fn(empirical, model_rdms)
+
+    def null_rdm_scores(
+        self,
+        empirical: jax.Array,
+        model_rdms: jax.Array,
+        perms: jax.Array,
+        method: str = "spearman",
+    ) -> jax.Array:
+        """(M, B) null scores for explicit condition permutations (B, C).
+
+        The permutation batch pads up to a shape bucket like every other
+        batched path, so chunked (streaming) nulls never recompile after
+        one warm-up per chunk bucket.
+        """
+        fn = self._rsa_null.get(method)
+        if fn is None:
+            fn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
+        padded, b = self._pad_rows(perms)
+        return fn(empirical, model_rdms, padded)[:, :b]
+
+    def compare_rdms(
+        self,
+        empirical: jax.Array,
+        model_rdms: jax.Array,
+        method: str = "spearman",
+        n_perm: int = 0,
+        key: Optional[jax.Array] = None,
+    ):
         """Score model RDMs against an empirical RDM; optional null.
 
         Returns (scores (M,), null (M, n_perm) | None, p (M,) | None).
@@ -255,22 +412,15 @@ class CVEngine:
         permutation path), so arbitrary client-chosen n_perm never
         compiles a fresh program after one warm-up per shape bucket.
         """
-        fn = self._rsa_score.get(method)
-        if fn is None:
-            fn = self._rsa_score[method] = rsa_compare.make_compare(method)
-        scores = fn(empirical, model_rdms)
+        scores = self.score_rdms(empirical, model_rdms, method)
         if n_perm <= 0:
             return scores, None, None
-        nfn = self._rsa_null.get(method)
-        if nfn is None:
-            nfn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
         t_gen = bucket_size(n_perm, self.config.buckets)
         if key is None:
             key = jax.random.PRNGKey(0)
         perms = perm_lib.permutation_indices(key, empirical.shape[0], t_gen)
-        null = nfn(empirical, model_rdms, perms)[:, :n_perm]
-        p = ((1.0 + jnp.sum(null >= scores[:, None], axis=1))
-             / (1.0 + n_perm))
+        null = self.null_rdm_scores(empirical, model_rdms, perms, method)[:, :n_perm]
+        p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + n_perm)
         return scores, null, p
 
     # ------------------------------------------------------------------
@@ -284,29 +434,96 @@ class CVEngine:
         label matrix is fused away rather than materialised per request."""
         fn = self._perm_binary.get((metric, adjust_bias))
         if fn is None:
+
             def _eval(plan, y, perms):
-                yp = y[perms].T                            # (N, B)
+                yp = y[perms].T  # (N, B)
                 dv = fastcv.binary_dvals(plan, yp, adjust_bias=adjust_bias)
-                return perm_lib._fold_metric_binary(dv, yp[plan.te_idx],
-                                                    metric)
+                return perm_lib._fold_metric_binary(dv, yp[plan.te_idx], metric)
+
             fn = self._perm_binary[(metric, adjust_bias)] = jax.jit(_eval)
         return fn
 
     def _perm_multiclass_fn(self, num_classes: int):
         fn = self._perm_multiclass.get(num_classes)
         if fn is None:
+
             def _eval(plan, y, perms):
-                y_rows = y[perms]                          # (B, N)
+                y_rows = y[perms]  # (B, N)
                 preds = multiclass.batch_predict(plan, y_rows, num_classes)
-                y_te = y_rows[:, plan.te_idx]              # (B, K, m)
+                y_te = y_rows[:, plan.te_idx]  # (B, K, m)
                 return jax.vmap(metrics.multiclass_accuracy)(preds, y_te)
+
             fn = self._perm_multiclass[num_classes] = jax.jit(_eval)
         return fn
 
-    def permutation_binary(self, plan: fastcv.CVPlan, y: jax.Array,
-                           n_perm: int, key: jax.Array, *,
-                           metric: str = "accuracy",
-                           adjust_bias: bool = True) -> perm_lib.PermutationResult:
+    def observed_binary(
+        self,
+        plan: fastcv.CVPlan,
+        y: jax.Array,
+        *,
+        metric: str = "accuracy",
+        adjust_bias: bool = True,
+    ) -> jax.Array:
+        """Observed (unpermuted) binary metric through the permutation path."""
+        if not adjust_bias:
+            plan = self._strip_train(plan)
+        y = y.astype(plan.h.dtype)
+        fn = self._perm_binary_fn(metric, adjust_bias)
+        identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
+        return fn(plan, y, self._pad_rows(identity)[0])[0]
+
+    def null_binary(
+        self,
+        plan: fastcv.CVPlan,
+        y: jax.Array,
+        perms: jax.Array,
+        *,
+        metric: str = "accuracy",
+        adjust_bias: bool = True,
+    ) -> jax.Array:
+        """Null metrics for an explicit (B, N) permutation batch → (B,).
+
+        The chunk-level building block under both :meth:`permutation_binary`
+        and the streaming front-end: callers choose the permutation rows
+        (e.g. prefix-stable chunks of ``permutation_indices``), the batch
+        pads up to a shape bucket, and repeats never recompile.
+        """
+        if not adjust_bias:
+            plan = self._strip_train(plan)
+        y = y.astype(plan.h.dtype)
+        fn = self._perm_binary_fn(metric, adjust_bias)
+        padded, b = self._pad_rows(perms)
+        out = fn(plan, y, padded)[:b]
+        self.labels_evaluated += b
+        return out
+
+    def observed_multiclass(
+        self, plan: fastcv.CVPlan, y: jax.Array, *, num_classes: int
+    ) -> jax.Array:
+        fn = self._perm_multiclass_fn(num_classes)
+        identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
+        return fn(plan, y, self._pad_rows(identity)[0])[0]
+
+    def null_multiclass(
+        self, plan: fastcv.CVPlan, y: jax.Array, perms: jax.Array, *, num_classes: int
+    ) -> jax.Array:
+        """Multi-class analogue of :meth:`null_binary` → (B,) accuracies."""
+        fn = self._perm_multiclass_fn(num_classes)
+        padded, b = self._pad_rows(perms)
+        out = fn(plan, y, padded)[:b]
+        self.labels_evaluated += b
+        return out
+
+    def permutation_binary(
+        self,
+        plan: fastcv.CVPlan,
+        y: jax.Array,
+        n_perm: int,
+        key: jax.Array,
+        *,
+        metric: str = "accuracy",
+        adjust_bias: bool = True,
+    ) -> perm_lib.PermutationResult:
         """Algorithm 1 against a cached plan: observed + null + p-value.
 
         With a mesh configured, the permutation batch shards over the
@@ -317,9 +534,7 @@ class CVEngine:
             plan = self._strip_train(plan)
         y = y.astype(plan.h.dtype)
         n = y.shape[0]
-        fn = self._perm_binary_fn(metric, adjust_bias)
-        identity = jnp.arange(n, dtype=jnp.int32)[None]    # unpermuted row
-        observed = fn(plan, y, self._pad_rows(identity)[0])[0]
+        observed = self.observed_binary(plan, y, metric=metric, adjust_bias=adjust_bias)
         # Generate directly at the bucket size: permutation_indices jits on
         # static (n, T), so bucketing T here is what keeps arbitrary
         # client-chosen n_perm from compiling a fresh generator each time.
@@ -327,42 +542,52 @@ class CVEngine:
         perms = perm_lib.permutation_indices(key, n, t_gen)
         if self.config.mesh is not None:
             from repro.core.distributed import sharded_null_from_plan
+
             n_shards = 1
             for a in self.config.perm_axes:
                 n_shards *= self.config.mesh.shape[a]
             t_pad = -(-t_gen // n_shards) * n_shards
             perms = jnp.pad(perms, ((0, t_pad - t_gen), (0, 0)), mode="edge")
             null = sharded_null_from_plan(
-                plan, y, perms, self.config.mesh, metric=metric,
+                plan,
+                y,
+                perms,
+                self.config.mesh,
+                metric=metric,
                 perm_axes=self.config.perm_axes,
-                adjust_bias=adjust_bias)[:n_perm]
+                adjust_bias=adjust_bias,
+            )[:n_perm]
+            self.labels_evaluated += n_perm
         else:
+            fn = self._perm_binary_fn(metric, adjust_bias)
             null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
-        self.labels_evaluated += n_perm
-        return perm_lib.PermutationResult(observed, null,
-                                          perm_lib.p_value(observed, null))
+            self.labels_evaluated += n_perm
+        return perm_lib.PermutationResult(observed, null, perm_lib.p_value(observed, null))
 
-    def permutation_multiclass(self, plan: fastcv.CVPlan, y: jax.Array,
-                               n_perm: int, key: jax.Array, *,
-                               num_classes: int) -> perm_lib.PermutationResult:
+    def permutation_multiclass(
+        self,
+        plan: fastcv.CVPlan,
+        y: jax.Array,
+        n_perm: int,
+        key: jax.Array,
+        *,
+        num_classes: int,
+    ) -> perm_lib.PermutationResult:
         """Algorithm 2 under permutations against a cached plan."""
         fn = self._perm_multiclass_fn(num_classes)
         n = y.shape[0]
-        identity = jnp.arange(n, dtype=jnp.int32)[None]
-        observed = fn(plan, y, self._pad_rows(identity)[0])[0]
+        observed = self.observed_multiclass(plan, y, num_classes=num_classes)
         t_gen = bucket_size(n_perm, self.config.buckets)
         perms = perm_lib.permutation_indices(key, n, t_gen)
         null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
         self.labels_evaluated += n_perm
-        return perm_lib.PermutationResult(observed, null,
-                                          perm_lib.p_value(observed, null))
+        return perm_lib.PermutationResult(observed, null, perm_lib.p_value(observed, null))
 
     # ------------------------------------------------------------------
     # Tuning (routed to the eigendecomposition-based LOO machinery)
     # ------------------------------------------------------------------
 
-    def tune(self, x: jax.Array, y: jax.Array, lambdas=None,
-             criterion: str = "mse") -> tuning.RidgeTuneResult:
+    def tune(self, x: jax.Array, y: jax.Array, lambdas=None, criterion: str = "mse"):
         return tuning.tune_ridge(x, y, lambdas=lambdas, criterion=criterion)
 
     # ------------------------------------------------------------------
@@ -373,18 +598,23 @@ class CVEngine:
         """Total jit cache entries across every eval path this engine owns.
 
         Stable compile_count across requests == zero recompiles."""
-        fns = ([self._eval_ridge] + list(self._eval_binary.values())
-               + list(self._eval_multiclass.values())
-               + list(self._perm_binary.values())
-               + list(self._perm_multiclass.values())
-               + list(self._rsa_pairs.values())
-               + list(self._rsa_score.values())
-               + list(self._rsa_null.values()))
+        fns = (
+            [self._eval_ridge]
+            + list(self._eval_binary.values())
+            + list(self._eval_multiclass.values())
+            + list(self._perm_binary.values())
+            + list(self._perm_multiclass.values())
+            + list(self._rsa_pairs.values())
+            + list(self._rsa_score.values())
+            + list(self._rsa_null.values())
+        )
         return int(sum(f._cache_size() for f in fns))
 
     def stats(self) -> dict:
         s = self.cache.stats.as_dict()
-        s.update(plans_built=self.plans_built,
-                 labels_evaluated=self.labels_evaluated,
-                 compiles=self.compile_count())
+        s.update(
+            plans_built=self.plans_built,
+            labels_evaluated=self.labels_evaluated,
+            compiles=self.compile_count(),
+        )
         return s

@@ -1,0 +1,140 @@
+"""Unit tests for benchmarks/compare.py — the CI bench-regression gate.
+
+The gate must (a) fail on an injected 2x warm-latency regression, (b) not
+fail on uniform machine-speed differences between the baseline host and
+the CI runner (median normalisation), and (c) ignore cold rows.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import compare  # noqa: E402
+
+
+def _artifact(rows):
+    return {"meta": {"backend": "cpu"}, "rows": rows}
+
+
+def _row(section, name, us):
+    return {"section": section, "name": name, "us_per_call": us}
+
+
+BASE_ROWS = [
+    _row("serve(engine)", "serve_perm_warm_N96", 100.0),
+    _row("serve(engine)", "serve_perm_cold_N96", 90000.0),
+    _row("rsa(serve+kernel)", "bench_rsa_warm_N96", 200.0),
+    _row("async(serve.aio)", "async_8clients_warm_64req", 400.0),
+    _row("async(serve.aio)", "async_sequential_warm_64req", 800.0),
+]
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps(_artifact(rows)))
+    return str(path)
+
+
+@pytest.fixture()
+def baseline_path(tmp_path):
+    return _write(tmp_path, "baseline.json", BASE_ROWS)
+
+
+def _scaled(factor, only=None):
+    rows = []
+    for r in BASE_ROWS:
+        f = factor if (only is None or r["name"] == only) else 1.0
+        rows.append(_row(r["section"], r["name"], r["us_per_call"] * f))
+    return rows
+
+
+def test_identical_artifacts_pass(baseline_path, tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _scaled(1.0))
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_injected_2x_regression_fails(baseline_path, tmp_path):
+    """The acceptance case: one warm row regressing 2x must gate CI."""
+    fresh = _write(tmp_path, "fresh.json", _scaled(2.0, only="serve_perm_warm_N96"))
+    assert compare.main([baseline_path, fresh]) == 1
+
+
+def test_uniform_machine_slowdown_passes(baseline_path, tmp_path):
+    """A 3x-slower CI runner is hardware, not a code regression."""
+    fresh = _write(tmp_path, "fresh.json", _scaled(3.0))
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_correlated_slowdown_hits_median_backstop(baseline_path, tmp_path):
+    """A slowdown broad enough to drag the median past --max-median must
+    fail even though every row's *normalised* ratio stays at 1.0."""
+    fresh = _write(tmp_path, "fresh.json", _scaled(5.0))
+    assert compare.main([baseline_path, fresh]) == 1
+
+
+def test_max_median_flag_loosens_backstop(baseline_path, tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _scaled(5.0))
+    assert compare.main([baseline_path, fresh, "--max-median", "6.0"]) == 0
+
+
+def test_speedup_of_most_rows_does_not_flag_untouched_row(baseline_path, tmp_path):
+    """4 of 5 rows getting 2.5x faster must not report the unchanged fifth
+    row as a regression (the median is clamped at 1 for normalisation)."""
+    rows = [
+        _row(r["section"], r["name"], r["us_per_call"] * (1.0 if i == 0 else 0.4))
+        for i, r in enumerate(BASE_ROWS)
+    ]
+    fresh = _write(tmp_path, "fresh.json", rows)
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_cold_rows_do_not_gate(baseline_path, tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _scaled(10.0, only="serve_perm_cold_N96"))
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_missing_rows_warn_but_pass(baseline_path, tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _scaled(1.0)[:-1])
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_within_tolerance_passes(baseline_path, tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _scaled(1.4, only="bench_rsa_warm_N96"))
+    assert compare.main([baseline_path, fresh]) == 0
+
+
+def test_unreadable_artifact_is_usage_error(baseline_path, tmp_path):
+    assert compare.main([baseline_path, str(tmp_path / "missing.json")]) == 2
+
+
+def test_zero_shared_warm_rows_is_an_error(baseline_path, tmp_path):
+    """Renaming every row must not silently disable the gate."""
+    renamed = [_row(r["section"], r["name"] + "_v2", r["us_per_call"]) for r in BASE_ROWS]
+    fresh = _write(tmp_path, "fresh.json", renamed)
+    assert compare.main([baseline_path, fresh]) == 2
+
+
+def test_compare_function_reports_normalised_ratio():
+    base = {("s", f"warm_{i}"): 100.0 for i in range(4)}
+    fresh = dict(base)
+    fresh[("s", "warm_0")] = 250.0
+    regressions, checked, missing, median = compare.compare(base, fresh)
+    assert checked == 4
+    assert missing == []
+    assert median == 1.0
+    ((key, base_us, fresh_us, ratio),) = regressions
+    assert key == ("s", "warm_0")
+    assert ratio == pytest.approx(2.5)
+
+
+def test_few_rows_gate_raw_ratios():
+    """Below min_rows the median is meaningless; raw ratios must gate."""
+    base = {("s", "warm_only"): 100.0}
+    fresh = {("s", "warm_only"): 300.0}
+    regressions, checked, _, _ = compare.compare(base, fresh)
+    assert checked == 1
+    assert len(regressions) == 1

@@ -162,6 +162,44 @@ def test_cache_oversized_plan_does_not_evict_residents():
     assert cache.stats.oversized == 2
 
 
+def test_cache_pin_exempts_from_eviction_and_pressure():
+    one = _dummy_plan().nbytes
+    cache = PlanCache(byte_budget=2 * one + one // 2)   # fits exactly two
+    cache.put("a", _dummy_plan())
+    assert cache.pin("a")
+    assert cache.stats.pinned == 1 and cache.stats.pinned_bytes == one
+    cache.put("b", _dummy_plan())
+    cache.put("c", _dummy_plan())
+    cache.put("d", _dummy_plan())
+    # "a" is LRU by recency but pinned: "b" is evicted instead, and the
+    # pinned bytes don't count against the pressure budget
+    assert "a" in cache
+    assert "b" not in cache and "c" in cache and "d" in cache
+    assert cache.stats.bytes_in_use - cache.stats.pinned_bytes <= cache.stats.byte_budget
+    # pin is idempotent; pinning a missing key is a no-op
+    assert cache.pin("a") and cache.stats.pinned == 1
+    assert not cache.pin("zzz")
+
+
+def test_cache_unpin_resubjects_to_pressure():
+    one = _dummy_plan().nbytes
+    cache = PlanCache(byte_budget=2 * one + one // 2)
+    cache.put("a", _dummy_plan())
+    cache.pin("a")
+    cache.put("b", _dummy_plan())
+    cache.put("c", _dummy_plan())
+    assert len(cache) == 3                               # a pinned + b + c
+    assert cache.unpin("a")
+    assert not cache.unpin("a")                          # already unpinned
+    assert cache.stats.pinned == 0 and cache.stats.pinned_bytes == 0
+    # unpinned "a" counts again: 3 * one > budget -> one eviction, and "a"
+    # itself was refreshed most-recent so the LRU victim is "b"
+    assert len(cache) == 2
+    assert "a" in cache and "b" not in cache
+    cache.clear()
+    assert cache.stats.pinned == 0 and len(cache) == 0
+
+
 def test_engine_cache_eviction_end_to_end(problem):
     x, y, _, f = problem
     _, probe = CVEngine().plan(x, f, LAM)
