@@ -1,13 +1,15 @@
 """Async serving benchmark: concurrent mixed-task clients vs sequential serve.
 
 The async front-end's pitch is traffic shaping, not raw speed: N clients
-awaiting one request at a time coalesce inside the gather window onto
+awaiting one Workload at a time coalesce inside the gather window onto
 shared plans and shared padded evals, so aggregate throughput beats
 serving the same stream sequentially (one eval per request), with zero
 recompiles after ``engine.warmup()`` pre-compiled the bucketed eval
 family. Streaming turns a monolithic permutation response into
 prefix-stable null chunks — time-to-first-chunk is the latency a client
-actually waits before it can start updating a running p-value.
+actually waits before it can start updating a running p-value. All
+traffic speaks the One-API surface (registered DatasetHandles + Workload
+specs through :class:`~repro.serve.Client`).
 """
 
 from __future__ import annotations
@@ -22,48 +24,71 @@ import jax.numpy as jnp
 from benchmarks.common import percentiles, row
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import (
-    AsyncEngineServer,
-    CVEngine,
-    CVRequest,
-    DatasetSpec,
-    PermutationRequest,
-    serve,
-)
+from repro.serve import Client, CVEngine, Workload
 
 N_CLIENTS = 8
 
 
-def _datasets(n, p, seed=0):
-    specs = []
+def _datasets(engine, n, p, seed=0):
+    datasets = []
     for d in range(2):
         num_classes = 2 if d == 0 else 3
         x, yc = synthetic.make_classification(
             jax.random.PRNGKey(seed + d), n, p, num_classes=num_classes, class_sep=2.0
         )
-        spec = DatasetSpec(x, foldlib.kfold(n, 6, seed=d), 1.0)
+        handle = engine.register(x, foldlib.kfold(n, 6, seed=d), 1.0)
         y_bin = jnp.where(yc % 2 == 0, -1.0, 1.0)
-        specs.append((spec, y_bin, yc, num_classes))
-    return specs
+        datasets.append((handle, y_bin, yc, num_classes))
+    return datasets
 
 
-def _client_requests(specs, per_client, t_perm, cid):
+def _client_workloads(datasets, per_client, t_perm, cid):
     """One client's mixed-task stream: mostly cheap CV queries (the
     coalescable traffic class) plus one permutation test (served as its
     own bucketed eval in both drivers, so it can't coalesce)."""
-    reqs = []
+    work = []
     for i in range(per_client):
-        spec, y_bin, yc, c = specs[(cid + i) % len(specs)]
+        handle, y_bin, yc, c = datasets[(cid + i) % len(datasets)]
         slot = i % 8
         if slot == 7:
-            reqs.append(PermutationRequest(spec, y_bin, t_perm, seed=cid * 97 + i))
+            work.append(
+                Workload(
+                    kind="permutation",
+                    dataset=handle,
+                    y=y_bin,
+                    n_perm=t_perm,
+                    seed=cid * 97 + i,
+                )
+            )
         elif slot in (5, 6) and c > 2:
-            reqs.append(CVRequest(spec, yc, task="multiclass", num_classes=c))
+            work.append(
+                Workload(
+                    kind="cv",
+                    dataset=handle,
+                    y=yc,
+                    estimator="multiclass",
+                    num_classes=c,
+                )
+            )
         elif slot in (3, 4):
-            reqs.append(CVRequest(spec, jnp.roll(y_bin, i + cid), task="ridge"))
+            work.append(
+                Workload(
+                    kind="cv",
+                    dataset=handle,
+                    y=jnp.roll(y_bin, i + cid),
+                    estimator="ridge",
+                )
+            )
         else:
-            reqs.append(CVRequest(spec, jnp.roll(y_bin, i + cid), task="binary"))
-    return reqs
+            work.append(
+                Workload(
+                    kind="cv",
+                    dataset=handle,
+                    y=jnp.roll(y_bin, i + cid),
+                    estimator="binary",
+                )
+            )
+    return work
 
 
 def _ready(resp):
@@ -73,19 +98,17 @@ def _ready(resp):
 def run(fast: bool = False):
     rows = []
     n, p, t_perm, per_client = (96, 512, 32, 8) if fast else (192, 2048, 64, 12)
-    specs = _datasets(n, p)
+    engine = CVEngine()
+    datasets = _datasets(engine, n, p)
     n_req = N_CLIENTS * per_client
 
     # -- warm-up: pre-build + pin plans, pre-compile the bucketed family ---
-    engine = CVEngine()
     t0 = time.perf_counter()
-    for spec, _, _, c in specs:
+    for handle, _, _, c in datasets:
         tasks = ("binary", "ridge", "permutation")
         if c > 2:
             tasks = tasks + ("multiclass",)
-        engine.warmup(
-            spec, tasks, buckets=(1, 2, 4, 8, 16, t_perm), num_classes=c, pin=True
-        )
+        engine.warmup(handle, tasks, buckets=(1, 2, 4, 8, 16, t_perm), num_classes=c, pin=True)
     t_warm = time.perf_counter() - t0
     compiles0 = engine.compile_count()
     # NB: named "startup", not "warmup" — this row times plan builds + jit
@@ -99,15 +122,16 @@ def run(fast: bool = False):
     # should gate only the stable compute-bound warm rows.
     repeats = 3
 
-    # -- sequential baseline: the same stream, one request at a time -------
-    all_reqs = [
-        r for cid in range(N_CLIENTS) for r in _client_requests(specs, per_client, t_perm, cid)
-    ]
+    # -- sequential baseline: the same stream, one workload at a time ------
+    sync_client = Client(engine)
+    all_work = []
+    for cid in range(N_CLIENTS):
+        all_work.extend(_client_workloads(datasets, per_client, t_perm, cid))
 
     def sequential_once():
         t0 = time.perf_counter()
-        for req in all_reqs:
-            _ready(serve(engine, [req])[0])
+        for w in all_work:
+            _ready(sync_client.submit(w))
         return time.perf_counter() - t0
 
     t_seq = median(sequential_once() for _ in range(repeats))
@@ -115,31 +139,30 @@ def run(fast: bool = False):
         row(
             f"async_sequential_{n_req}req",
             t_seq,
-            f"{n_req / t_seq:.0f} req/s (serve() one-by-one)",
+            f"{n_req / t_seq:.0f} req/s (sync Client one-by-one)",
         )
     )
 
-    # -- async server: N concurrent clients, gather-window coalescing ------
+    # -- async transport: N concurrent clients, gather-window coalescing ---
     latencies = []
 
-    async def timed_submit(server, req):
+    async def timed_submit(client, w):
         t = time.perf_counter()
-        _ready(await server.submit(req))
+        _ready(await client.submit(w))
         latencies.append(time.perf_counter() - t)
 
-    async def one_client(server, cid):
+    async def one_client(client, cid):
         # a client pipelines its whole stream (no await between submits) —
         # that concurrency is what fills the gather window with work
-        await asyncio.gather(
-            *(timed_submit(server, req) for req in _client_requests(specs, per_client, t_perm, cid))
-        )
+        work = _client_workloads(datasets, per_client, t_perm, cid)
+        await asyncio.gather(*(timed_submit(client, w) for w in work))
 
     async def drive():
-        async with AsyncEngineServer(engine, max_batch=64, gather_window_ms=3.0) as server:
+        async with Client(engine, transport="async", max_batch=64, gather_window_ms=3.0) as client:
             t = time.perf_counter()
-            await asyncio.gather(*(one_client(server, cid) for cid in range(N_CLIENTS)))
+            await asyncio.gather(*(one_client(client, cid) for cid in range(N_CLIENTS)))
             wall = time.perf_counter() - t
-            return wall, server.batches_served
+            return wall, client.server.batches_served
 
     runs = [asyncio.run(drive()) for _ in range(repeats)]
     t_async = median(wall for wall, _ in runs)
@@ -157,14 +180,15 @@ def run(fast: bool = False):
     )
 
     # -- streaming: time-to-first-null-chunk vs the monolithic response ----
-    spec, y_bin = specs[0][0], specs[0][1]
-    t_stream = 4 * t_perm  # long-running request worth streaming
+    handle, y_bin = datasets[0][0], datasets[0][1]
+    t_stream = 4 * t_perm  # long-running workload worth streaming
+    stream_w = Workload(kind="permutation", dataset=handle, y=y_bin, n_perm=t_stream, seed=5)
 
     async def drive_stream():
-        async with AsyncEngineServer(engine, stream_chunk=t_perm) as server:
+        async with Client(engine, transport="async", stream_chunk=t_perm) as client:
             t = time.perf_counter()
             t_first = None
-            async for ev in server.stream(PermutationRequest(spec, y_bin, t_stream, seed=5)):
+            async for ev in client.stream(stream_w):
                 if ev.kind == "null" and t_first is None:
                     jax.block_until_ready(ev.payload)
                     t_first = time.perf_counter() - t

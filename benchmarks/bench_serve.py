@@ -2,11 +2,13 @@
 request throughput vs coalesced batch size.
 
 The headline number is the paper's §2.7 economics made operational: a cold
-permutation request pays the O(N²P) Gram + O(N³) factorisation + jit
+permutation workload pays the O(N²P) Gram + O(N³) factorisation + jit
 compile; a warm one against the cached plan pays only O(K·m²·T) fold
 solves through an already-compiled program. At N=256, P=4096, T=256 the
 warm path is expected to be well over 50× faster, with zero recompiles
-after the first request per shape bucket.
+after the first request per shape bucket. The stream speaks the One-API
+surface: a dataset registered once, :class:`~repro.serve.Workload` specs
+carrying the handle through a sync-transport :class:`~repro.serve.Client`.
 """
 
 from __future__ import annotations
@@ -19,7 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, timeit
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import CVEngine, CVRequest, DatasetSpec, PermutationRequest, serve
+from repro.serve import Client, CVEngine, Workload
 
 
 def run(fast: bool = False):
@@ -30,21 +32,23 @@ def run(fast: bool = False):
 
     x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n, p, class_sep=2.0)
     y = jnp.where(yc == 0, -1.0, 1.0)
-    spec = DatasetSpec(x, foldlib.kfold(n, k, seed=0), lam)
-    perm_req = PermutationRequest(spec, y, t_perm, seed=0)
+    folds = foldlib.kfold(n, k, seed=0)
 
     # -- cold: fresh engine; plan build + compile + eval -------------------
-    engine = CVEngine()
+    client = Client(CVEngine())
+    data = client.register(x, folds, lam)
+    perm = Workload(kind="permutation", dataset=data, y=y, n_perm=t_perm, seed=0)
     t0 = time.perf_counter()
-    jax.block_until_ready(serve(engine, [perm_req])[0].null)
+    jax.block_until_ready(client.submit(perm).null)
     t_cold = time.perf_counter() - t0
     rows.append(row(f"serve_perm_cold_N{n}_P{p}_T{t_perm}", t_cold, "plan build + compile + eval"))
 
     # -- warm: cached plan, compiled program -------------------------------
+    engine = client.engine
     compiles_warm = engine.compile_count()
 
     def warm_once():
-        return serve(engine, [perm_req])[0].null
+        return client.submit(perm).null
 
     t_warm = timeit(warm_once, warmup=1, repeats=5)
     recompiles = engine.compile_count() - compiles_warm
@@ -58,10 +62,13 @@ def run(fast: bool = False):
 
     # -- requests/s vs coalesced batch size --------------------------------
     for bs in (1, 8, 32):
-        reqs = [CVRequest(spec, jnp.roll(y, i), task="binary") for i in range(bs)]
+        batch = [
+            Workload(kind="cv", dataset=data, y=jnp.roll(y, i), estimator="binary")
+            for i in range(bs)
+        ]
 
         def cv_batch():
-            return [r.values for r in serve(engine, reqs)]
+            return [r.values for r in client.gather(batch)]
 
         secs = timeit(cv_batch, warmup=1, repeats=5)
         rows.append(row(f"serve_cv_warm_batch{bs}_N{n}_P{p}", secs, f"{bs / secs:.0f} req/s"))

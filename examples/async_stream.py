@@ -2,12 +2,14 @@
 
     PYTHONPATH=src python examples/async_stream.py
 
-The interactive-analysis story the paper's economics enable (§2.7): a
-session warms the engine once — plan built, pinned, bucketed eval family
-compiled — then many concurrent questions coalesce through the asyncio
-server's gather window with zero further compiles, and a long permutation
-test *streams* its null distribution chunk by chunk, so the running
-p-value is watchable long before the last permutation lands.
+The interactive-analysis story the paper's economics enable (§2.7), on
+the One-API surface: a session registers its dataset and warms the engine
+once — plan built, pinned, bucketed eval family compiled — then many
+concurrent coroutines submit Workloads through one async-transport
+Client, coalescing in the server's gather window with zero further
+compiles, and a long permutation test *streams* its null distribution
+chunk by chunk, so the running p-value is watchable long before the last
+permutation lands.
 """
 
 import asyncio
@@ -20,13 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import (
-    AsyncEngineServer,
-    CVEngine,
-    CVRequest,
-    DatasetSpec,
-    PermutationRequest,
-)
+from repro.serve import Client, CVEngine, Workload
 
 
 async def main():
@@ -35,11 +31,11 @@ async def main():
         jax.random.PRNGKey(0), n, p, num_classes=num_classes, class_sep=2.5
     )
     y = jnp.where(yc % 2 == 0, -1.0, 1.0)
-    spec = DatasetSpec(x, foldlib.kfold(n, 6, seed=0), lam=1.0)
 
     engine = CVEngine()
+    data = engine.register(x, foldlib.kfold(n, 6, seed=0), lam=1.0)
     info = engine.warmup(
-        spec,
+        data,
         tasks=("binary", "ridge", "multiclass", "permutation"),
         buckets=(1, 2, 4, 8, 64),
         num_classes=num_classes,
@@ -51,27 +47,32 @@ async def main():
         f"compiled for buckets {info['buckets']}"
     )
 
-    async with AsyncEngineServer(engine, gather_window_ms=3.0, stream_chunk=64) as server:
+    async with Client(engine, transport="async", gather_window_ms=3.0,
+                      stream_chunk=64) as client:
         # Eight concurrent clients; same plan, coalesced padded evals.
-        async def client(cid):
-            r1 = await server.submit(CVRequest(spec, jnp.roll(y, cid), task="binary"))
-            r2 = await server.submit(
-                CVRequest(spec, yc, task="multiclass", num_classes=num_classes)
+        async def one_client(cid):
+            r1 = await client.submit(
+                Workload(kind="cv", dataset=data, y=jnp.roll(y, cid))
+            )
+            r2 = await client.submit(
+                Workload(kind="cv", dataset=data, y=yc,
+                         estimator="multiclass", num_classes=num_classes)
             )
             return float(r1.score), float(r2.score)
 
-        scores = await asyncio.gather(*(client(c) for c in range(8)))
+        scores = await asyncio.gather(*(one_client(c) for c in range(8)))
         mean_bin = sum(s[0] for s in scores) / len(scores)
         print(
             f"8 async clients: mean binary acc {mean_bin:.3f}, "
-            f"{server.batches_served} micro-batches, "
+            f"{client.server.batches_served} micro-batches, "
             f"recompiles: {engine.compile_count() - compiles_after_warmup}"
         )
 
         # Stream a 256-draw permutation null in 64-draw chunks: the
         # running p-value converges while the test is still in flight.
         observed = None
-        async for ev in server.stream(PermutationRequest(spec, y, n_perm=256, seed=7)):
+        perm = Workload(kind="permutation", dataset=data, y=y, n_perm=256, seed=7)
+        async for ev in client.stream(perm):
             if ev.kind == "observed":
                 observed = ev.payload
             elif ev.kind == "null":

@@ -4,9 +4,10 @@ The paper's §4.2 application: a Representational Dissimilarity Matrix over
 C conditions. Where the old version of this example rebuilt a hat matrix
 per condition pair (C(C−1)/2 separate cross-validations), `repro.rsa`
 treats all pairwise contrasts as ONE label batch against ONE shared
-CVPlan — the engine builds the plan once, evaluates every contrast at
-O(K·m²) each, and scores candidate model RDMs with a condition-permutation
-null, all through `repro.serve`.
+CVPlan — the dataset registers once, every contrast evaluates at O(K·m²),
+candidate model RDMs are scored with a condition-permutation null, and a
+*repeat* of the same workload is served from the engine's empirical-RDM
+memo (zero fold solves — watch `rdm_hits`).
 
 Run:  PYTHONPATH=src python examples/rsa_probe.py
 """
@@ -22,7 +23,7 @@ jax.config.update("jax_enable_x64", True)
 from repro import rsa
 from repro.core import folds
 from repro.data import synthetic
-from repro.serve import CVEngine, DatasetSpec, RSARequest, serve
+from repro.serve import Client, Workload
 
 C = 8                 # conditions -> 28 pairwise contrasts, one batch
 N_PER_COND = 24
@@ -31,7 +32,6 @@ P = 1500              # high-dimensional patterns (P >> N)
 key = jax.random.PRNGKey(0)
 x, y_cond = synthetic.make_classification(key, C * N_PER_COND, P,
                                           num_classes=C, class_sep=1.5)
-spec = DatasetSpec(x, folds.stratified_kfold(y_cond, 6, seed=0), lam=1.0)
 
 # candidate model RDMs: the condition-mean pattern geometry (via the Pallas
 # pairdist kernel path), a circular "ring" structure, and a random control
@@ -44,20 +44,22 @@ np.fill_diagonal(rnd, 0.0)
 models = jnp.stack([rsa.euclidean_rdm(mu), ring, jnp.asarray(rnd)])
 model_names = ["pattern-euclidean", "ring", "random"]
 
-engine = CVEngine()
-request = RSARequest(spec, y_cond, C, model_rdms=models, n_perm=500, seed=0)
+client = Client()
+data = client.register(x, folds.stratified_kfold(y_cond, 6, seed=0), lam=1.0)
+workload = Workload(kind="rsa", dataset=data, y=y_cond, num_classes=C,
+                    model_rdms=models, n_perm=500, seed=0)
 
 t0 = time.time()
-(resp,) = serve(engine, [request])
+resp = client.submit(workload)
 jax.block_until_ready(resp.rdm)
 t_cold = time.time() - t0
 t0 = time.time()
-(resp,) = serve(engine, [request])
+resp = client.submit(workload)
 jax.block_until_ready(resp.rdm)
 t_warm = time.time() - t0
 
 print(f"{C * (C - 1) // 2} pairwise contrasts at P={P} in one batched "
-      f"request: cold {t_cold:.2f}s, warm {t_warm:.3f}s "
+      f"workload: cold {t_cold:.2f}s, warm {t_warm:.3f}s "
       f"({t_cold / t_warm:.0f}x)")
 print("cross-validated RDM (pairwise decodability):")
 with np.printoptions(precision=2, suppress=True):
@@ -68,6 +70,7 @@ print("model-RDM comparison (Spearman, 500-permutation null):")
 for name, s, p in zip(model_names, resp.model_scores, resp.p):
     print(f"  {name:18s} rho={float(s):+.3f}  p={float(p):.4f}")
 
-stats = engine.stats()
+stats = client.stats()
 print(f"engine: {stats['plans_built']} plan build(s), "
-      f"{stats['hits']} cache hit(s), {stats['compiles']} compiled programs")
+      f"{stats['hits']} cache hit(s), {stats['compiles']} compiled programs, "
+      f"{stats['rdm_hits']} RDM memo hit(s)")

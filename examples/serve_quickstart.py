@@ -1,12 +1,14 @@
-"""Serving-engine quickstart: many analyses, one plan.
+"""Serving-engine quickstart: one registered dataset, many workloads.
 
     PYTHONPATH=src python examples/serve_quickstart.py
 
-A neuroimaging-flavoured session: one dataset, then a stream of questions
-against it — binary CV, a permutation test, multi-class CV, ridge-λ
-tuning. The engine builds the hat matrix + fold factorisations ONCE
-(first request) and serves everything else from the cached plan; the
-stats at the end show a single plan build for the whole session.
+A neuroimaging-flavoured session on the One-API surface: register the
+dataset once (`client.register` -> DatasetHandle; the feature matrix is
+never re-shipped), then a stream of Workload specs against the handle —
+binary CV, a permutation test, multi-class CV, ridge-λ tuning. The engine
+builds the hat matrix + fold factorisations ONCE (first workload) and
+serves everything else from the cached plan; the stats at the end show a
+single plan build for the whole session.
 """
 
 import jax
@@ -17,8 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import (CVEngine, CVRequest, DatasetSpec,
-                         PermutationRequest, TuneRequest, serve)
+from repro.serve import Client, Workload
 
 
 def main():
@@ -27,16 +28,19 @@ def main():
                                           num_classes=num_classes,
                                           class_sep=2.5)
     y = jnp.where(yc % 2 == 0, -1.0, 1.0)        # binary contrast
-    spec = DatasetSpec(x, foldlib.kfold(n, 6, seed=0), lam=1.0)
 
-    engine = CVEngine()
-    responses = serve(engine, [
-        CVRequest(spec, y, task="binary"),
-        PermutationRequest(spec, y, n_perm=200, seed=1),
-        CVRequest(spec, yc, task="multiclass", num_classes=num_classes),
-        PermutationRequest(spec, yc, n_perm=200, seed=2, task="multiclass",
-                           num_classes=num_classes),
-        TuneRequest(x, y),
+    client = Client()                             # sync transport, own engine
+    data = client.register(x, foldlib.kfold(n, 6, seed=0), lam=1.0)
+
+    responses = client.gather([
+        Workload(kind="cv", dataset=data, y=y),
+        Workload(kind="permutation", dataset=data, y=y, n_perm=200, seed=1),
+        Workload(kind="cv", dataset=data, y=yc, estimator="multiclass",
+                 num_classes=num_classes),
+        Workload(kind="permutation", dataset=data, y=yc,
+                 estimator="multiclass", num_classes=num_classes,
+                 n_perm=200, seed=2),
+        Workload(kind="tune", x=x, y=y),
     ])
 
     cv_bin, perm_bin, cv_mc, perm_mc, tune = responses
@@ -45,7 +49,10 @@ def main():
     print(f"multi-class CV accuracy : {float(cv_mc.score):.3f} "
           f"(p = {float(perm_mc.p):.4f})")
     print(f"tuned ridge λ (exact LOO): {float(tune.result.best_lambda):.3g}")
-    s = engine.stats()
+    (info,) = client.datasets()
+    print(f"dataset: N={info['n']} P={info['p']}, served {info['served']} "
+          f"plan resolutions, resident={info['resident']}")
+    s = client.stats()
     print(f"engine: {s['plans_built']} plan build, {s['hits']} cache hits, "
           f"{s['labels_evaluated']} label vectors evaluated, "
           f"{s['compiles']} compiled programs")

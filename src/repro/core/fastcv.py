@@ -275,6 +275,11 @@ def binary_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0,
 
     Returns (dvals_te, y_te): per-fold decision values and matching labels,
     both (K, m), ready for ``metrics.binary_accuracy`` / ``metrics.auc``.
+
+    This is the library-level reference implementation; the serving
+    equivalent is ``Workload(kind="cv", estimator="binary", ...)`` through
+    ``repro.serve.Client`` (bit-identical by the parity tests), which adds
+    plan caching, micro-batching, and shape-bucketed compilation.
     """
     plan = prepare(x, folds, lam, mode=mode, with_train_block=adjust_bias)
     dvals = binary_dvals(plan, y, adjust_bias=adjust_bias)

@@ -192,7 +192,9 @@ def analytical_cv_multiclass(x: jax.Array, y: jax.Array, folds: Folds,
                              plan: fastcv.CVPlan | None = None):
     """Algorithm 2: exact CV for multi-class LDA from one full-data fit.
 
-    Returns (pred (K, m), y_te (K, m)).
+    Returns (pred (K, m), y_te (K, m)). Serving equivalent (bit-identical,
+    plan-cached): ``Workload(kind="cv", estimator="multiclass", ...)``
+    via ``repro.serve``.
     """
     if plan is None:
         plan = fastcv.prepare(x, folds, lam, mode=mode, with_train_block=True)

@@ -39,7 +39,8 @@ def cv_grid(xs: jax.Array, y: jax.Array, folds: Folds, lam: float,
     """Analytical binary CV at every grid point.
 
     xs: (Q, N, P) — Q independent feature sets sharing labels and folds.
-    Returns accuracies (Q,).
+    Returns accuracies (Q,). Serving equivalent:
+    ``Workload(kind="grid", xs=xs, ...)`` via ``repro.serve``.
     """
     y = y.astype(xs.dtype)
     te_idx, tr_idx = folds.te_idx, folds.tr_idx

@@ -73,7 +73,11 @@ def standard_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0):
 def analytical_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0,
                   mode: str = "auto"):
     """Analytical ridge-regression CV (Eq. 14): exact fold predictions from
-    a single full-data hat matrix. Returns (preds_te, y_te), both (K, m)."""
+    a single full-data hat matrix. Returns (preds_te, y_te), both (K, m).
+
+    Serving equivalent (bit-identical, plan-cached):
+    ``Workload(kind="cv", estimator="ridge", ...)`` via ``repro.serve``;
+    multi-target responses register as ``estimator="ridge_multi"``."""
     plan = fastcv.prepare(x, folds, lam, mode=mode, with_train_block=False)
     preds, _ = fastcv.cv_errors(plan, y.astype(x.dtype))
     return preds, y[folds.te_idx]

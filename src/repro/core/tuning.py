@@ -73,7 +73,9 @@ def loo_curve(x: jax.Array, y: jax.Array, lambdas: jax.Array,
 
 def tune_ridge(x: jax.Array, y: jax.Array, lambdas=None,
                criterion: str = "mse") -> RidgeTuneResult:
-    """Pick λ by exact LOO over a (default log-spaced) grid."""
+    """Pick λ by exact LOO over a (default log-spaced) grid.
+
+    Serving equivalent: ``Workload(kind="tune", x=x, y=y, ...)``."""
     if lambdas is None:
         xc = x - jnp.mean(x, axis=0, keepdims=True)
         scale = jnp.trace(xc @ xc.T) / x.shape[0]

@@ -4,26 +4,30 @@
     PYTHONPATH=src python -m repro.launch.serve_cv --data eeg --clients 4
     PYTHONPATH=src python -m repro.launch.serve_cv --rsa --conditions 8
     PYTHONPATH=src python -m repro.launch.serve_cv --warmup --pin --async 8
+    PYTHONPATH=src python -m repro.launch.serve_cv --record-traffic t.json
+    PYTHONPATH=src python -m repro.launch.serve_cv --warmup-from t.json
 
-Builds a :class:`repro.serve.CVEngine`, synthesises a small fleet of
-datasets (synthetic hypersphere-classification or EEG-like windowed
-features), and plays a mixed request stream against it — binary-LDA CV,
-ridge CV, multi-class CV, permutation tests, and λ-tuning — first cold
-(plans built, evals compiled), then warm (everything cached). With
-``--rsa`` the stream becomes RSA traffic instead: cross-validated RDMs
+Builds a :class:`repro.serve.CVEngine` fronted by the unified
+:class:`repro.serve.Client`, registers a small fleet of datasets
+(synthetic hypersphere-classification or EEG-like windowed features) as
+:class:`~repro.serve.DatasetHandle`\\ s, and plays a mixed
+:class:`~repro.serve.Workload` stream against it — binary-LDA CV, ridge
+CV, multi-class CV, permutation tests, and λ-tuning — first cold (plans
+built, evals compiled), then warm (everything cached). With ``--rsa``
+the stream becomes RSA traffic instead: cross-validated RDMs
 (pairwise-contrast and confusion), scored against model RDMs with
 condition-permutation nulls, all riding the same cached plans and
 coalesced label batches. With ``--clients > 1`` the same stream is
-replayed through the thread-backed :class:`~repro.serve.api.EngineServer`
-so concurrent submitters coalesce onto shared micro-batches; with
-``--async N`` it is replayed through the asyncio
-:class:`~repro.serve.aio.AsyncEngineServer` instead (N coroutine
-clients), followed by a streamed permutation request printing its null
-chunks as they land. ``--warmup`` pre-builds every plan and pre-compiles
-the bucketed eval family before the first timed pass (``--pin``
-additionally pins the warmed plans against eviction), so the "cold" pass
-measures pure serving, not compilation. Reports requests/s and the
-engine's cache / compile statistics.
+replayed through a thread-transport Client so concurrent submitters
+coalesce onto shared micro-batches; with ``--async N`` through an
+async-transport Client (N coroutine clients), followed by a streamed
+permutation workload printing its null chunks as they land. ``--warmup``
+pre-builds every plan and pre-compiles the bucketed eval family before
+the first timed pass (``--pin`` additionally pins the warmed plans
+against eviction). ``--record-traffic FILE`` dumps the (task, bucket)
+set the session served; ``--warmup-from FILE`` replays a recorded set at
+boot, warming the per-workload shapes yesterday's traffic needed. Reports
+requests/s and the engine's cache / compile statistics.
 """
 
 from __future__ import annotations
@@ -41,24 +45,14 @@ import jax.numpy as jnp
 from repro import rsa
 from repro.core import folds as foldlib
 from repro.data import eeg, synthetic
-from repro.serve import (
-    AsyncEngineServer,
-    CVEngine,
-    CVRequest,
-    DatasetSpec,
-    EngineConfig,
-    EngineServer,
-    PermutationRequest,
-    RSARequest,
-    TuneRequest,
-    serve,
-)
+from repro.serve import Client, CVEngine, EngineConfig, TrafficLog, Workload
 
 
-def build_requests(args):
+def build_workloads(args, client):
     """Alternating binary (C=2) and multi-class (C=3) datasets, mixed
-    request stream: CV (binary/ridge/multiclass), permutations, tuning.
-    Returns (requests, datasets) so ``--warmup`` can pre-build the plans."""
+    workload stream: CV (binary/ridge/multiclass), permutations, tuning.
+    Datasets register once; workloads carry handles. Returns
+    (workloads, datasets)."""
     datasets = []
     for d in range(args.datasets):
         num_classes = 2 if d % 2 == 0 else 3
@@ -71,36 +65,40 @@ def build_requests(args):
             x, y_int = synthetic.make_classification(
                 key, args.n, args.p, num_classes=num_classes, class_sep=2.0)
         n = int(x.shape[0])
-        spec = DatasetSpec(x, foldlib.kfold(n, args.k, seed=d), args.lam)
+        handle = client.register(x, foldlib.kfold(n, args.k, seed=d), args.lam)
         y_bin = jnp.where(y_int % 2 == 0, -1.0, 1.0)
-        datasets.append((spec, y_bin, y_int, num_classes))
+        datasets.append((handle, x, y_bin, y_int, num_classes))
 
-    requests = []
+    workloads = []
     for i in range(args.requests):
-        spec, y_bin, y_int, c = datasets[i % len(datasets)]
+        handle, x, y_bin, y_int, c = datasets[i % len(datasets)]
         slot = i % 8
         if slot == 7:
             if c > 2:
-                requests.append(PermutationRequest(
-                    spec, y_int, args.perm, seed=i, task="multiclass",
-                    num_classes=c))
+                workloads.append(Workload(
+                    kind="permutation", dataset=handle, y=y_int,
+                    estimator="multiclass", num_classes=c,
+                    n_perm=args.perm, seed=i))
             else:
-                requests.append(PermutationRequest(spec, y_bin, args.perm,
-                                                   seed=i))
+                workloads.append(Workload(
+                    kind="permutation", dataset=handle, y=y_bin,
+                    n_perm=args.perm, seed=i))
         elif slot == 6:
-            requests.append(TuneRequest(spec.x, y_bin))
+            workloads.append(Workload(kind="tune", x=x, y=y_bin))
         elif slot in (4, 5) and c > 2:
-            requests.append(CVRequest(spec, y_int, task="multiclass",
-                                      num_classes=c))
+            workloads.append(Workload(kind="cv", dataset=handle, y=y_int,
+                                      estimator="multiclass", num_classes=c))
         elif slot == 3:
-            requests.append(CVRequest(spec, y_bin, task="ridge"))
+            workloads.append(Workload(kind="cv", dataset=handle, y=y_bin,
+                                      estimator="ridge"))
         else:
-            requests.append(CVRequest(spec, y_bin, task="binary"))
-    return requests, datasets
+            workloads.append(Workload(kind="cv", dataset=handle, y=y_bin,
+                                      estimator="binary"))
+    return workloads, datasets
 
 
-def build_rsa_requests(args):
-    """RSA stream: C-condition datasets, RDM requests alternating pairwise
+def build_rsa_workloads(args, client):
+    """RSA stream: C-condition datasets, RDM workloads alternating pairwise
     dissimilarities and confusion contrasts, scored against model RDMs."""
     c = args.conditions
     datasets = []
@@ -108,29 +106,31 @@ def build_rsa_requests(args):
         key = jax.random.PRNGKey(args.seed + d)
         x, y_cond = synthetic.make_classification(
             key, args.n, args.p, num_classes=c, class_sep=2.0)
-        spec = DatasetSpec(x, foldlib.stratified_kfold(y_cond, args.k, seed=d),
-                           args.lam)
+        handle = client.register(
+            x, foldlib.stratified_kfold(y_cond, args.k, seed=d), args.lam)
         mu = rsa.condition_means(x, y_cond, c)
         models = jnp.stack([rsa.euclidean_rdm(mu), rsa.ring_rdm(c)])
-        datasets.append((spec, y_cond, models))
+        datasets.append((handle, x, y_cond, models, c))
 
-    requests = []
+    workloads = []
     for i in range(args.requests):
-        spec, y_cond, models = datasets[i % len(datasets)]
+        handle, _x, y_cond, models, _c = datasets[i % len(datasets)]
         slot = i % 4
         if slot == 3:
-            requests.append(RSARequest(spec, y_cond, c,
-                                       contrast="multiclass",
-                                       model_rdms=models, n_perm=args.perm,
-                                       seed=i))
+            workloads.append(Workload(kind="rsa", dataset=handle, y=y_cond,
+                                      num_classes=c, contrast="multiclass",
+                                      model_rdms=models, n_perm=args.perm,
+                                      seed=i))
         elif slot == 2:
-            requests.append(RSARequest(spec, y_cond, c,
-                                       dissimilarity="contrast",
-                                       adjust_bias=False))
+            workloads.append(Workload(kind="rsa", dataset=handle, y=y_cond,
+                                      num_classes=c,
+                                      dissimilarity="contrast",
+                                      adjust_bias=False))
         else:
-            requests.append(RSARequest(spec, y_cond, c, model_rdms=models,
-                                       n_perm=args.perm, seed=i))
-    return requests, datasets
+            workloads.append(Workload(kind="rsa", dataset=handle, y=y_cond,
+                                      num_classes=c, model_rdms=models,
+                                      n_perm=args.perm, seed=i))
+    return workloads, datasets
 
 
 def warmup_engine(engine, args, datasets):
@@ -138,25 +138,25 @@ def warmup_engine(engine, args, datasets):
     t0 = time.perf_counter()
     small = (1, 2, 4, 8, 16)
     for entry in datasets:
-        spec = entry[0]
+        handle = entry[0]
         if args.rsa:
             c = args.conditions
             n_pairs = c * (c - 1) // 2
-            # same-plan RSA requests coalesce: cover up to two requests'
+            # same-plan RSA workloads coalesce: cover up to two requests'
             # worth of contrast columns in one padded batch
-            engine.warmup(spec, tasks=("rsa", "multiclass"),
+            engine.warmup(handle, tasks=("rsa", "multiclass"),
                           buckets=small + (n_pairs, 2 * n_pairs, args.perm),
                           num_classes=c, num_model_rdms=2, pin=args.pin)
             # the stream's slot-2 variant: continuous contrast, no bias adjust
-            engine.warmup(spec, tasks=("rsa",), buckets=(n_pairs,),
+            engine.warmup(handle, tasks=("rsa",), buckets=(n_pairs,),
                           num_classes=c, dissimilarity="contrast",
                           adjust_bias=False)
         else:
-            c = entry[3]
+            c = entry[4]
             tasks = ("binary", "ridge", "permutation")
             if c > 2:
                 tasks = tasks + ("multiclass",)
-            engine.warmup(spec, tasks, buckets=small + (args.perm,),
+            engine.warmup(handle, tasks, buckets=small + (args.perm,),
                           num_classes=c, pin=args.pin)
     t_warm = time.perf_counter() - t0
     s = engine.stats()
@@ -164,28 +164,41 @@ def warmup_engine(engine, args, datasets):
           f" ({s['pinned']} pinned), {s['compiles']} programs compiled")
 
 
-async def replay_async(engine, requests, n_clients, perm_demo=None):
-    """Replay the stream through AsyncEngineServer with N coroutine
-    clients, then stream one permutation request chunk by chunk."""
-    per_client = -(-len(requests) // n_clients)
-    results = [None] * len(requests)
-    async with AsyncEngineServer(engine, max_batch=per_client) as server:
+def warmup_from_traffic(engine, path, datasets, pin):
+    """Boot-time warm-up from a recorded (task, bucket) traffic set."""
+    log = TrafficLog.load(path)
+    t0 = time.perf_counter()
+    for entry in datasets:
+        log.replay(engine, entry[0], pin=pin)
+    t_warm = time.perf_counter() - t0
+    s = engine.stats()
+    print(f"[serve_cv] warmup-from {path}: {len(log)} recorded entries, "
+          f"{t_warm:.3f}s, {s['plans_built']} plans built "
+          f"({s['pinned']} pinned), {s['compiles']} programs compiled")
 
-        async def client(cid):
+
+async def replay_async(engine, workloads, n_clients, perm_demo=None):
+    """Replay the stream through an async-transport Client with N coroutine
+    clients, then stream one permutation workload chunk by chunk."""
+    per_client = -(-len(workloads) // n_clients)
+    results = [None] * len(workloads)
+    async with Client(engine, transport="async", max_batch=per_client) as client:
+
+        async def one_client(cid):
             lo = cid * per_client
-            for j in range(lo, min(lo + per_client, len(requests))):
-                results[j] = await server.submit(requests[j])
+            for j in range(lo, min(lo + per_client, len(workloads))):
+                results[j] = await client.submit(workloads[j])
 
         t0 = time.perf_counter()
-        await asyncio.gather(*(client(c) for c in range(n_clients)))
+        await asyncio.gather(*(one_client(c) for c in range(n_clients)))
         t_async = time.perf_counter() - t0
         print(f"[serve_cv] async ({n_clients} clients): {t_async:.3f}s "
-              f"({len(requests) / t_async:.1f} req/s) in "
-              f"{server.batches_served} micro-batches")
+              f"({len(workloads) / t_async:.1f} req/s) in "
+              f"{client.server.batches_served} micro-batches")
 
         if perm_demo is not None:
             t0 = time.perf_counter()
-            async for ev in server.stream(perm_demo):
+            async for ev in client.stream(perm_demo):
                 if ev.kind == "null":
                     print(f"[serve_cv]   stream: {ev.done}/{ev.total} null "
                           f"draws at {time.perf_counter() - t0:.3f}s")
@@ -207,38 +220,48 @@ def main():
     ap.add_argument("--k", type=int, default=6, help="CV folds")
     ap.add_argument("--lam", type=float, default=1.0)
     ap.add_argument("--perm", type=int, default=64,
-                    help="permutations per permutation request")
+                    help="permutations per permutation workload")
     ap.add_argument("--clients", type=int, default=0,
                     help="if > 1, replay warm through this many threads")
     ap.add_argument("--async", type=int, default=0, dest="async_clients",
                     metavar="N", help="if > 1, replay warm through the "
-                    "asyncio server with N coroutine clients + stream demo")
+                    "asyncio transport with N coroutine clients + stream demo")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-build plans + pre-compile eval buckets "
                     "before the first timed pass")
     ap.add_argument("--pin", action="store_true",
-                    help="with --warmup: pin the warmed plans (never "
-                    "LRU-evicted)")
+                    help="with --warmup/--warmup-from: pin the warmed "
+                    "plans (never LRU-evicted)")
+    ap.add_argument("--record-traffic", metavar="FILE", default=None,
+                    help="dump the served (task, bucket) set as JSON")
+    ap.add_argument("--warmup-from", metavar="FILE", default=None,
+                    help="replay a recorded traffic set at boot "
+                    "(pre-builds plans + pre-compiles exactly the "
+                    "programs that traffic needed)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rsa", action="store_true",
-                    help="serve an RSA request stream instead of mixed CV")
+                    help="serve an RSA workload stream instead of mixed CV")
     ap.add_argument("--conditions", type=int, default=6,
                     help="RSA conditions per dataset (with --rsa)")
     args = ap.parse_args()
 
     engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
+    record = TrafficLog() if args.record_traffic else None
+    client = Client(engine, record=record)
     if args.rsa:
-        requests, datasets = build_rsa_requests(args)
-        print(f"[serve_cv] RSA mode: {len(requests)} requests over "
+        workloads, datasets = build_rsa_workloads(args, client)
+        print(f"[serve_cv] RSA mode: {len(workloads)} workloads over "
               f"{args.datasets} datasets, C={args.conditions}, λ={args.lam}, "
               f"K={args.k}, T={args.perm}")
     else:
-        requests, datasets = build_requests(args)
-        print(f"[serve_cv] {len(requests)} requests over {args.datasets} "
+        workloads, datasets = build_workloads(args, client)
+        print(f"[serve_cv] {len(workloads)} workloads over {args.datasets} "
               f"datasets ({args.data}), λ={args.lam}, K={args.k}, "
               f"T={args.perm}")
 
+    if args.warmup_from:
+        warmup_from_traffic(engine, args.warmup_from, datasets, args.pin)
     if args.warmup:
         warmup_engine(engine, args, datasets)
 
@@ -247,37 +270,37 @@ def main():
                               + [r.rdm for r in rs if hasattr(r, "rdm")])
 
     t0 = time.perf_counter()
-    responses = serve(engine, requests)
+    responses = client.gather(workloads)
     ready(responses)
     t_cold = time.perf_counter() - t0
 
     compiles_after_cold = engine.compile_count()
     t0 = time.perf_counter()
-    responses = serve(engine, requests)
+    responses = client.gather(workloads)
     ready(responses)
     t_warm = time.perf_counter() - t0
     warm_recompiles = engine.compile_count() - compiles_after_cold
 
-    print(f"[serve_cv] cold: {t_cold:.3f}s ({len(requests)/t_cold:.1f} req/s)"
-          f"   warm: {t_warm:.3f}s ({len(requests)/t_warm:.1f} req/s)"
+    print(f"[serve_cv] cold: {t_cold:.3f}s ({len(workloads)/t_cold:.1f} req/s)"
+          f"   warm: {t_warm:.3f}s ({len(workloads)/t_warm:.1f} req/s)"
           f"   speedup {t_cold/t_warm:.1f}x, "
           f"recompiles on warm replay: {warm_recompiles}")
 
     if args.clients > 1:
         import threading
-        per_client = -(-len(requests) // args.clients)
-        with EngineServer(engine, max_batch=per_client) as server:
-            results = [None] * len(requests)
+        per_client = -(-len(workloads) // args.clients)
+        with Client(engine, transport="thread", max_batch=per_client) as tclient:
+            results = [None] * len(workloads)
 
-            def client(cid):
+            def one_client(cid):
                 lo = cid * per_client
-                futs = [(j, server.submit(requests[j]))
-                        for j in range(lo, min(lo + per_client, len(requests)))]
+                futs = [(j, tclient.submit(workloads[j]))
+                        for j in range(lo, min(lo + per_client, len(workloads)))]
                 for j, f in futs:
                     results[j] = f.result(timeout=600)
 
             t0 = time.perf_counter()
-            threads = [threading.Thread(target=client, args=(c,))
+            threads = [threading.Thread(target=one_client, args=(c,))
                        for c in range(args.clients)]
             for t in threads:
                 t.start()
@@ -285,17 +308,23 @@ def main():
                 t.join()
             t_threaded = time.perf_counter() - t0
             print(f"[serve_cv] threaded ({args.clients} clients): "
-                  f"{t_threaded:.3f}s ({len(requests)/t_threaded:.1f} req/s) "
-                  f"in {server.batches_served} micro-batches")
+                  f"{t_threaded:.3f}s ({len(workloads)/t_threaded:.1f} req/s) "
+                  f"in {tclient.server.batches_served} micro-batches")
         assert all(r is not None for r in results)
 
     if args.async_clients > 1:
         demo = None
         if not args.rsa:
-            spec, y_bin = datasets[0][0], datasets[0][1]
-            demo = PermutationRequest(spec, y_bin, 4 * args.perm, seed=99)
-        asyncio.run(replay_async(engine, requests, args.async_clients,
+            handle, _x, y_bin = datasets[0][0], datasets[0][1], datasets[0][2]
+            demo = Workload(kind="permutation", dataset=handle, y=y_bin,
+                            n_perm=4 * args.perm, seed=99)
+        asyncio.run(replay_async(engine, workloads, args.async_clients,
                                  perm_demo=demo))
+
+    if args.record_traffic:
+        record.save(args.record_traffic)
+        print(f"[serve_cv] recorded {len(record)} (task, bucket) entries "
+              f"-> {args.record_traffic}")
 
     stats = engine.stats()
     print(f"[serve_cv] cache: {stats['hits']} hits / {stats['misses']} misses "
@@ -304,10 +333,11 @@ def main():
           f"(budget {stats['byte_budget'] / 2**20:.0f} MiB)")
     print(f"[serve_cv] plans built: {stats['plans_built']}, "
           f"labels evaluated: {stats['labels_evaluated']}, "
-          f"compiled programs: {stats['compiles']}")
+          f"compiled programs: {stats['compiles']}, "
+          f"RDM cache hits: {stats['rdm_hits']}")
     scored = [float(r.score) for r in responses if hasattr(r, "score")]
     if scored:
-        print(f"[serve_cv] mean CV score over {len(scored)} CV requests: "
+        print(f"[serve_cv] mean CV score over {len(scored)} CV workloads: "
               f"{sum(scored)/len(scored):.3f}")
     rsa_scored = [r for r in responses
                   if hasattr(r, "model_scores") and r.model_scores is not None]
@@ -316,7 +346,7 @@ def main():
         sig = [float(jnp.min(r.p)) for r in rsa_scored if r.p is not None]
         print(f"[serve_cv] RSA: best-model score mean "
               f"{sum(best)/len(best):.3f} over {len(rsa_scored)} scored "
-              f"requests" + (f", min p {min(sig):.4f}" if sig else ""))
+              f"workloads" + (f", min p {min(sig):.4f}" if sig else ""))
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ RDM problems — shard over the mesh's problem axes via
 from __future__ import annotations
 
 import functools
+import threading
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -41,6 +43,7 @@ from repro.core import fastcv, metrics, multiclass
 from repro.core.folds import Folds
 
 __all__ = [
+    "RDMCache",
     "condition_pairs",
     "pair_contrast_columns",
     "pair_dissimilarities",
@@ -56,6 +59,61 @@ __all__ = [
 ]
 
 _DISSIMILARITIES = ("accuracy", "contrast")
+
+
+class RDMCache:
+    """Memoised empirical RDMs, keyed by (plan, labels-fingerprint, spec).
+
+    An empirical RDM is a pure function of the plan (features × folds × λ)
+    and the condition labels — so repeated model-RDM scoring against the
+    same data (a model-comparison sweep, a dashboard refresh) can skip the
+    fold solves entirely. Entries hold ``(rdm, pair_values)`` tuples; the
+    serving engine owns one instance and exposes ``hits`` in its stats
+    (ROADMAP "RDM caching" item). Bounded LRU: RDMs are tiny (C², not N²),
+    so an entry *count* cap is the right unit, unlike the byte-budgeted
+    plan cache.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        if max_entries <= 0:
+            raise ValueError("max_entries must be positive")
+        self.max_entries = max_entries
+        # Locked like PlanCache: thread-transport streams run on the
+        # calling thread while the queue worker serves batches, so get/put
+        # race without it.
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def get(self, key):
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return hit
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
 
 
 def condition_pairs(num_classes: int) -> np.ndarray:

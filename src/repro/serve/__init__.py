@@ -1,18 +1,28 @@
-"""repro.serve — plan-cached analytical-CV serving engine.
+"""repro.serve — plan-cached analytical-CV serving engine, one workload API.
 
 The paper's economics (§2.7: the hat matrix and fold factorisations depend
 on features only) have the exact shape of a serving workload — expensive
 label-invariant state, cheap per-request evaluation. This package
-productises that:
+productises that behind a single declarative surface:
 
+  workload  Workload — one versioned, eagerly-validated spec (kind:
+            cv | permutation | rsa | tune | grid) against a registered
+            DatasetHandle or inline DatasetSpec; LeastSquaresSpec — the
+            estimator registry under which binary LDA, multi-class LDA,
+            ridge, and multi-target ridge are registrations, not engine
+            forks; run_workloads / stream_workload drivers; TrafficLog.
+  client    Client — submit/stream/gather over a transport chosen by
+            construction (sync, thread-queue, or asyncio).
   cache     PlanCache — LRU CVPlan store under a byte budget, with
             admission control for plans larger than the whole budget and
             pin/unpin for warm, never-evicted plans.
-  engine    CVEngine — cached plans + shape-bucketed jitted eval paths
-            (CV, permutation, and RSA workload families), plus an
-            explicit warmup() readiness API.
+  engine    CVEngine — dataset registry (register once, serve by handle),
+            cached plans + shape-bucketed jitted eval paths from the
+            estimator registry, RDM memoisation, and an explicit warmup()
+            readiness API (replayable from recorded traffic).
   batching  MicroBatcher — coalesce ragged same-plan label queries.
-  api       Request/response types, sync driver, threaded queue server.
+  api       Deprecated request shims (CVRequest & co. → Workload), sync
+            driver, threaded queue server.
   aio       AsyncEngineServer — asyncio front-end with gather-window
             micro-batching and streamed permutation/RSA responses.
 
@@ -25,6 +35,7 @@ from repro.serve.api import (  # noqa: F401
     CVResponse,
     DatasetSpec,
     EngineServer,
+    GridResponse,
     PermutationRequest,
     PermutationResponse,
     RSARequest,
@@ -35,4 +46,18 @@ from repro.serve.api import (  # noqa: F401
 )
 from repro.serve.batching import MicroBatcher, bucket_size  # noqa: F401
 from repro.serve.cache import CacheStats, PlanCache  # noqa: F401
+from repro.serve.client import Client  # noqa: F401
 from repro.serve.engine import CVEngine, EngineConfig  # noqa: F401
+from repro.serve.workload import (  # noqa: F401
+    WORKLOAD_SCHEMA_VERSION,
+    DatasetHandle,
+    LeastSquaresSpec,
+    TrafficLog,
+    Workload,
+    as_workload,
+    estimators,
+    get_estimator,
+    register_estimator,
+    run_workloads,
+    stream_workload,
+)

@@ -4,10 +4,12 @@ The sync drivers in :mod:`repro.serve.api` make one of two trades: the
 blocking :func:`~repro.serve.api.serve` wants the whole batch up front,
 and the thread-queue :class:`~repro.serve.api.EngineServer` gives each
 submitter a `concurrent.futures.Future` but keeps long work monolithic —
-one slow permutation request head-of-line-blocks every cheap binary query
-behind it. This module turns the engine into a traffic-shaped service:
+one slow permutation workload head-of-line-blocks every cheap binary
+query behind it. This module turns the engine into a traffic-shaped
+service:
 
-* :class:`AsyncEngineServer` — submitters ``await server.submit(req)``
+* :class:`AsyncEngineServer` — submitters ``await server.submit(w)``
+  (a :class:`~repro.serve.workload.Workload` or a legacy request shim)
   from any coroutine; the worker gathers whatever arrives inside a
   deadline-bounded window (``gather_window_ms`` after the first request,
   up to ``max_batch``) and serves the whole group through the sync
@@ -15,84 +17,52 @@ behind it. This module turns the engine into a traffic-shaped service:
   :class:`~repro.serve.batching.MicroBatcher` into one padded jitted
   eval per flush group. Engine compute runs on a single executor thread;
   the event loop never blocks on XLA.
-* **Streaming** — ``server.stream(req)`` returns an async iterator of
-  :class:`ProgressEvent`\\ s for long-running work: permutation requests
-  emit their null distribution in prefix-stable chunks (running p-values
-  for free), RSA requests emit the empirical RDM, then model scores,
-  then permutation-null chunks. Because chunks run through the engine's
-  bucketed ``null_*`` paths at a fixed chunk size, a stream interleaves
-  with batch traffic at chunk granularity and never recompiles after
-  warm-up.
+* **Streaming** — ``server.stream(w)`` returns an async iterator of
+  :class:`~repro.serve.workload.ProgressEvent`\\ s for long-running work:
+  permutation workloads emit their null distribution in prefix-stable
+  chunks (running p-values for free), RSA workloads emit the empirical
+  RDM, then model scores, then permutation-null chunks. The event
+  sequence is produced by the *one* streaming implementation —
+  :func:`repro.serve.workload.stream_workload` — driven chunk by chunk
+  on the engine's executor thread, so a stream interleaves with batch
+  traffic at chunk granularity and never recompiles after warm-up. On a
+  mesh-configured engine, streamed null chunks shard over ``perm_axes``
+  exactly like monolithic permutation requests
+  (``engine.null_binary`` routes through ``sharded_null_from_plan``).
 
 The streamed permutations are the same draws the monolithic path uses
 (``permutation_indices`` is prefix-stable under bucket rounding), so a
 stream's final ``done`` payload matches the one-shot response up to
 padded-shape rounding.
-
-Known limitation: streamed nulls always run the *local* bucketed chunk
-path (``engine.null_binary`` / ``null_multiclass``). On a mesh-configured
-engine, ``submit()`` shards permutation nulls over ``perm_axes`` while
-``stream()`` does not (and compiles the unsharded program) — mesh-sharded
-streaming is a ROADMAP item, not a silent behaviour of this class.
 """
 
 from __future__ import annotations
 
 import asyncio
-import dataclasses
 import functools
 from concurrent.futures import ThreadPoolExecutor
 from typing import AsyncIterator, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import permutation as perm_lib
-from repro.rsa import rdm as rsa_rdm
-from repro.serve.api import (
-    PermutationRequest,
-    PermutationResponse,
-    Request,
-    RSARequest,
-    RSAResponse,
-    serve,
-)
-from repro.serve.batching import as_folds, bucket_size
+from repro.serve.api import Request, serve
 from repro.serve.engine import CVEngine
+from repro.serve.workload import ProgressEvent, as_workload, stream_workload
 
 __all__ = ["ProgressEvent", "AsyncEngineServer"]
 
 _STOP = object()
-
-
-@dataclasses.dataclass
-class ProgressEvent:
-    """One step of a streamed request.
-
-    kind:    "plan" (payload: plan key), "observed" (payload: observed
-             metric), "rdm" (payload: empirical RDM), "scores" (payload:
-             model scores), "null" (payload: the new null chunk), or
-             "done" (payload: the final response object).
-    done:    permutations finished so far (0 for pre-null events).
-    total:   total permutations the stream will produce.
-    payload: kind-specific value; always the full response on "done".
-    """
-
-    kind: str
-    done: int
-    total: int
-    payload: object
+_STREAM_END = object()
 
 
 class AsyncEngineServer:
-    """Asyncio server: gather-window micro-batching + streaming requests.
+    """Asyncio server: gather-window micro-batching + streaming workloads.
 
-    Submitters get one coroutine per request (``await submit(req)``);
+    Submitters get one coroutine per workload (``await submit(w)``);
     concurrent submissions landing within ``gather_window_ms`` of each
     other coalesce onto shared plans and shared padded evals exactly like
-    the sync driver. ``stream(req)`` yields :class:`ProgressEvent`\\ s for
-    permutation/RSA requests instead of one monolithic response, chunked
-    by ``stream_chunk`` (canonicalised to an engine shape bucket).
+    the sync driver. ``stream(w)`` yields
+    :class:`~repro.serve.workload.ProgressEvent`\\ s for permutation/RSA
+    workloads instead of one monolithic response, chunked by
+    ``stream_chunk`` (canonicalised to an engine shape bucket).
     """
 
     def __init__(
@@ -169,30 +139,33 @@ class AsyncEngineServer:
     # -- client side -------------------------------------------------------
 
     async def submit(self, request: Request):
-        """Submit one request; awaits (and returns) its response."""
+        """Submit one workload (or legacy request); awaits its response."""
         self._check_running()
         fut = self._loop.create_future()
         await self._queue.put((request, fut))
         return await fut
 
     async def stream(self, request: Request) -> AsyncIterator[ProgressEvent]:
-        """Async iterator of :class:`ProgressEvent`\\ s for one request.
+        """Async iterator of :class:`ProgressEvent`\\ s for one workload.
 
-        Permutation and RSA requests stream incrementally; any other
-        request type degenerates to a single "done" event wrapping the
-        batched response (counted in ``streams_served`` either way —
-        streams count when they start, so abandoned iterators count too).
+        Permutation and RSA workloads stream incrementally by driving
+        :func:`~repro.serve.workload.stream_workload` on the engine
+        thread; any other kind degenerates to a single "done" event
+        wrapping the batched response (counted in ``streams_served``
+        either way — streams count when they start, so abandoned
+        iterators count too).
         """
         self._check_running()
         self.streams_served += 1
-        if isinstance(request, PermutationRequest):
-            agen = self._stream_permutation(request)
-        elif isinstance(request, RSARequest):
-            agen = self._stream_rsa(request)
-        else:
-            yield ProgressEvent("done", 1, 1, await self.submit(request))
+        w = as_workload(request)
+        if w.kind not in ("permutation", "rsa"):
+            yield ProgressEvent("done", 1, 1, await self.submit(w))
             return
-        async for event in agen:
+        gen = stream_workload(self.engine, w, chunk=self.stream_chunk)
+        while True:
+            event = await self._run(next, gen, _STREAM_END)
+            if event is _STREAM_END:
+                return
             yield event
 
     # -- worker side -------------------------------------------------------
@@ -241,140 +214,3 @@ class AsyncEngineServer:
                 fut.set_result(resp)
         self.batches_served += 1
         self.requests_served += len(batch)
-
-    # -- streaming ---------------------------------------------------------
-
-    async def _plan_for(self, data, needs_train: bool):
-        folds = as_folds(data.folds)
-        return await self._run(self.engine.plan, data.x, folds, data.lam, data.mode, needs_train)
-
-    def _chunking(self, total: int) -> tuple[int, int]:
-        buckets = self.engine.config.buckets
-        t_gen = bucket_size(total, buckets)
-        return t_gen, min(bucket_size(self.stream_chunk, buckets), t_gen)
-
-    async def _null_chunks(self, total: int, n_items: int, seed: int, eval_chunk):
-        """Shared streaming loop: yield (done, null_block) chunk by chunk.
-
-        Permutations of ``n_items`` are generated once at the bucketed
-        ``t_gen`` — rounded up to a whole number of chunks, so every slice
-        is a full chunk with one static shape even under non-nested custom
-        buckets — and evaluated ``chunk`` rows at a time; repeats never
-        recompile, and the rounding preserves the prefix
-        (``permutation_indices`` is prefix-stable), so the stream's first
-        ``total`` draws match the monolithic path exactly.
-        ``eval_chunk(block, keep)`` trims its own output to ``keep``.
-        """
-        t_gen, chunk = self._chunking(total)
-        t_gen = -(-t_gen // chunk) * chunk  # whole chunks, same prefix
-        perms = await self._run(
-            perm_lib.permutation_indices, jax.random.PRNGKey(seed), n_items, t_gen
-        )
-        for lo in range(0, total, chunk):
-            hi = min(lo + chunk, total)
-            block = perms[lo : min(lo + chunk, t_gen)]
-            yield hi, await eval_chunk(block, hi - lo)
-
-    async def _stream_permutation(self, req: PermutationRequest):
-        if req.n_perm <= 0:
-            raise ValueError("streaming a permutation request needs n_perm > 0")
-        engine = self.engine
-        total = req.n_perm
-        needs_train = req.task == "multiclass" or req.adjust_bias
-        key, plan = await self._plan_for(req.data, needs_train)
-        yield ProgressEvent("plan", 0, total, key)
-        y = jnp.asarray(req.y)
-        if req.task == "multiclass":
-            observed = await self._run(
-                engine.observed_multiclass, plan, y, num_classes=req.num_classes
-            )
-        else:
-            observed = await self._run(
-                engine.observed_binary, plan, y, metric=req.metric, adjust_bias=req.adjust_bias
-            )
-        yield ProgressEvent("observed", 0, total, observed)
-
-        if req.task == "multiclass":
-
-            async def eval_chunk(block, keep):
-                out = await self._run(
-                    engine.null_multiclass, plan, y, block, num_classes=req.num_classes
-                )
-                return out[:keep]
-
-        else:
-
-            async def eval_chunk(block, keep):
-                out = await self._run(
-                    engine.null_binary,
-                    plan,
-                    y,
-                    block,
-                    metric=req.metric,
-                    adjust_bias=req.adjust_bias,
-                )
-                return out[:keep]
-
-        chunks = []
-        async for hi, null_block in self._null_chunks(total, int(y.shape[0]), req.seed, eval_chunk):
-            chunks.append(null_block)
-            yield ProgressEvent("null", hi, total, null_block)
-
-        def finish():  # keep even the cheap eager tail off the loop thread
-            null = jnp.concatenate(chunks)
-            return null, perm_lib.p_value(observed, null)
-
-        null, p = await self._run(finish)
-        yield ProgressEvent("done", total, total, PermutationResponse(observed, null, p, key))
-
-    async def _stream_rsa(self, req: RSARequest):
-        if req.contrast not in ("binary", "multiclass"):
-            raise ValueError(f"unknown RSA contrast {req.contrast!r}")
-        engine = self.engine
-        c = req.num_classes
-        total = req.n_perm if req.model_rdms is not None else 0
-        needs_train = req.contrast == "multiclass" or req.adjust_bias
-        key, plan = await self._plan_for(req.data, needs_train)
-        yield ProgressEvent("plan", 0, total, key)
-        y = jnp.asarray(req.y)
-        if req.contrast == "binary":
-
-            def build_rdm():  # contrast columns + eval + scatter, one engine-thread hop
-                cols = rsa_rdm.pair_contrast_columns(y, c, plan.h.dtype)
-                vals = engine.eval_rsa_pairs(plan, cols, req.dissimilarity, req.adjust_bias)
-                return rsa_rdm.rdm_from_pair_values(vals, c), vals
-
-        else:
-
-            def build_rdm():
-                preds = engine.eval_multiclass(plan, y, c)
-                return rsa_rdm.rdm_from_confusion(preds, y[plan.te_idx], c), None
-
-        rdm, vals = await self._run(build_rdm)
-        yield ProgressEvent("rdm", 0, total, rdm)
-        if req.model_rdms is None:
-            yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, None, None, None, key))
-            return
-        models = jnp.asarray(req.model_rdms)
-        scores = await self._run(engine.score_rdms, rdm, models, req.comparison)
-        yield ProgressEvent("scores", 0, total, scores)
-        if total <= 0:
-            yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, scores, None, None, key))
-            return
-
-        async def eval_chunk(block, keep):
-            out = await self._run(engine.null_rdm_scores, rdm, models, block, req.comparison)
-            return out[:, :keep]
-
-        chunks = []
-        async for hi, null_block in self._null_chunks(total, c, req.seed, eval_chunk):
-            chunks.append(null_block)
-            yield ProgressEvent("null", hi, total, null_block)
-
-        def finish():
-            null = jnp.concatenate(chunks, axis=1)
-            p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
-            return null, p
-
-        null, p = await self._run(finish)
-        yield ProgressEvent("done", total, total, RSAResponse(rdm, vals, scores, null, p, key))

@@ -1,26 +1,31 @@
-"""Request/response API for the serving engine, plus drivers.
+"""Legacy request shims + the sync drivers over the one-Workload API.
 
-Clients speak in terms of datasets and label queries:
+The serving surface is :class:`repro.serve.workload.Workload` — one
+versioned, eagerly-validated spec (``kind``: ``cv | permutation | rsa |
+tune | grid``) against a registered dataset handle or an inline
+:class:`~repro.serve.workload.DatasetSpec`, executed by
+:func:`repro.serve.workload.run_workloads` and fronted by
+:class:`repro.serve.client.Client` (which picks the sync, thread-queue,
+or asyncio transport by construction).
 
-  * :class:`CVRequest` — one cross-validation run (binary LDA, multi-class
-    LDA, or ridge regression) against a dataset.
-  * :class:`PermutationRequest` — a full permutation test (observed + null
-    + p-value); the expensive part is label-batched through the plan.
-  * :class:`RSARequest` — a cross-validated RDM over conditions (pairwise
-    contrasts or multi-class confusion), optionally scored against model
-    RDMs with a condition-permutation null. Contrast columns are just
-    label columns, so RSA requests coalesce through the same
-    :class:`~repro.serve.batching.MicroBatcher` paths as CV requests.
-  * :class:`TuneRequest` — ridge-λ selection, routed to the
-    eigendecomposition-based exact-LOO machinery (`tuning.tune_ridge`).
+This module keeps the original request vocabulary alive as **deprecated
+shims**: :class:`CVRequest`, :class:`PermutationRequest`,
+:class:`RSARequest`, and :class:`TuneRequest` are thin dataclasses whose
+``to_workload()`` converts to the unified spec — every driver accepts
+them interchangeably with Workloads (``serve`` normalises via
+:func:`~repro.serve.workload.as_workload`), and parity tests pin their
+results bit-identical to the Workload path. New code should construct
+Workloads (or use the ``Client``) directly; the shims are scheduled for
+removal two minor versions after 0.1 (see README "One API").
 
-:func:`serve` is the synchronous driver: it groups requests by plan
-identity, coalesces same-plan label queries through the
+:func:`serve` is the synchronous batch driver: it groups workloads by
+plan identity, coalesces same-plan label queries through the
 :class:`~repro.serve.batching.MicroBatcher` (one padded jitted eval per
-group), and un-pads per-request results. :class:`EngineServer` wraps the
-same driver in a thread-backed queue so concurrent submitters get futures
-while their queries ride shared micro-batches; the asyncio counterpart
-(with streamed responses) lives in :mod:`repro.serve.aio`.
+(plan, estimator, static-options) group), and un-pads per-request
+results. :class:`EngineServer` wraps the same driver in a thread-backed
+queue so concurrent submitters get futures while their queries ride
+shared micro-batches; the asyncio counterpart (with streamed responses)
+lives in :mod:`repro.serve.aio`.
 """
 
 from __future__ import annotations
@@ -29,16 +34,24 @@ import dataclasses
 import queue as queue_mod
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from typing import Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import metrics, tuning
-from repro.rsa import rdm as rsa_rdm
-from repro.serve.batching import MicroBatcher, as_folds
 from repro.serve.engine import CVEngine
+from repro.serve.workload import (  # noqa: F401  (re-exported compat surface)
+    CVResponse,
+    DatasetSpec,
+    GridResponse,
+    PermutationResponse,
+    RSAResponse,
+    TuneResponse,
+    Workload,
+    as_workload,
+    run_workloads,
+)
 
 __all__ = [
     "DatasetSpec",
@@ -51,41 +64,57 @@ __all__ = [
     "PermutationResponse",
     "RSAResponse",
     "TuneResponse",
+    "GridResponse",
     "serve",
     "EngineServer",
 ]
 
 
 # ---------------------------------------------------------------------------
-# Requests
+# Deprecated request shims (one per legacy request type)
 # ---------------------------------------------------------------------------
 
-
-@dataclasses.dataclass
-class DatasetSpec:
-    """The label-invariant half of a request: features, folds, λ.
-
-    ``folds`` is a :class:`~repro.core.folds.Folds` or a raw
-    ``(te_idx, tr_idx)`` index pair (normalised via ``Folds.with_indices``).
-    """
-
-    x: jax.Array
-    folds: object
-    lam: float
-    mode: str = "auto"
+def _warn_deprecated(cls: type) -> None:
+    # Plain warnings.warn: the module's default per-location dedup keeps
+    # construction loops quiet without global state that would defeat
+    # warnings.catch_warnings() isolation in tests.
+    warnings.warn(
+        f"{cls.__name__} is deprecated; construct a repro.serve.Workload "
+        f"(or use repro.serve.Client) instead — see README 'One API'",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass
 class CVRequest:
+    """Deprecated shim: one CV run. Use ``Workload(kind="cv", ...)``."""
+
     data: DatasetSpec
     y: jax.Array  # binary/ridge: (N,) or (N, B); mc: (N,)/(B, N)
-    task: str = "binary"  # "binary" | "multiclass" | "ridge"
+    task: str = "binary"  # estimator name: "binary" | "multiclass" | "ridge"
     num_classes: int = 0  # required for task="multiclass"
     adjust_bias: bool = True  # binary only (paper §2.5)
+
+    def __post_init__(self):
+        _warn_deprecated(type(self))
+
+    def to_workload(self) -> Workload:
+        return Workload(
+            kind="cv",
+            dataset=self.data,
+            y=self.y,
+            estimator=self.task,
+            num_classes=self.num_classes,
+            adjust_bias=self.adjust_bias,
+        )
 
 
 @dataclasses.dataclass
 class PermutationRequest:
+    """Deprecated shim: a full permutation test.
+    Use ``Workload(kind="permutation", ...)``."""
+
     data: DatasetSpec
     y: jax.Array
     n_perm: int
@@ -95,20 +124,27 @@ class PermutationRequest:
     metric: str = "accuracy"  # binary only: "accuracy" | "auc"
     adjust_bias: bool = True
 
+    def __post_init__(self):
+        _warn_deprecated(type(self))
+
+    def to_workload(self) -> Workload:
+        return Workload(
+            kind="permutation",
+            dataset=self.data,
+            y=self.y,
+            estimator=self.task,
+            num_classes=self.num_classes,
+            adjust_bias=self.adjust_bias,
+            n_perm=self.n_perm,
+            seed=self.seed,
+            metric=self.metric,
+        )
+
 
 @dataclasses.dataclass
 class RSARequest:
-    """Cross-validated RDM over conditions, optionally scored vs models.
-
-    ``y`` holds integer condition labels in [0, num_classes). With
-    ``contrast="binary"`` the RDM comes from C(C−1)/2 pairwise ±1/0
-    contrast columns through the plan's fold solves (dissimilarity
-    "accuracy" or "contrast"); with ``contrast="multiclass"`` it is the
-    symmetrised confusion dissimilarity of one Algorithm-2 CV run.
-    ``model_rdms`` (M, C, C), when given, are scored against the empirical
-    RDM (``comparison``: spearman/kendall/pearson/cosine) with an
-    ``n_perm``-draw condition-permutation null.
-    """
+    """Deprecated shim: a cross-validated RDM (optionally model-scored).
+    Use ``Workload(kind="rsa", ...)``."""
 
     data: DatasetSpec
     y: jax.Array  # int (N,) condition labels
@@ -121,56 +157,49 @@ class RSARequest:
     n_perm: int = 0
     seed: int = 0
 
+    def __post_init__(self):
+        _warn_deprecated(type(self))
+
+    def to_workload(self) -> Workload:
+        return Workload(
+            kind="rsa",
+            dataset=self.data,
+            y=self.y,
+            num_classes=self.num_classes,
+            contrast=self.contrast,
+            dissimilarity=self.dissimilarity,
+            adjust_bias=self.adjust_bias,
+            model_rdms=self.model_rdms,
+            comparison=self.comparison,
+            n_perm=self.n_perm,
+            seed=self.seed,
+        )
+
 
 @dataclasses.dataclass
 class TuneRequest:
+    """Deprecated shim: ridge-λ selection (exact LOO).
+    Use ``Workload(kind="tune", ...)``."""
+
     x: jax.Array
     y: jax.Array
     lambdas: Optional[jax.Array] = None
     criterion: str = "mse"
 
+    def __post_init__(self):
+        _warn_deprecated(type(self))
 
-Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest]
-
-
-# ---------------------------------------------------------------------------
-# Responses
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class CVResponse:
-    task: str
-    values: object  # dvals / ẏ_Te (K, m[, B]) or preds — host np.ndarray
-    #                 from the batched driver (MicroBatcher un-pads on the
-    #                 host), jax.Array from direct engine calls
-    y_te: jax.Array  # matching test labels/responses
-    score: jax.Array  # accuracy (classification) or mse (ridge)
-    plan_key: tuple
+    def to_workload(self) -> Workload:
+        return Workload(
+            kind="tune",
+            x=self.x,
+            y=self.y,
+            lambdas=self.lambdas,
+            criterion=self.criterion,
+        )
 
 
-@dataclasses.dataclass
-class PermutationResponse:
-    observed: jax.Array
-    null: jax.Array
-    p: jax.Array
-    plan_key: tuple
-
-
-@dataclasses.dataclass
-class RSAResponse:
-    rdm: jax.Array  # (C, C) empirical RDM
-    pair_values: Optional[object]  # (B,) pair dissimilarities (binary);
-    #                                np.ndarray from the batched driver
-    model_scores: Optional[jax.Array]  # (M,) or None
-    null: Optional[jax.Array]  # (M, n_perm) or None
-    p: Optional[jax.Array]  # (M,) or None
-    plan_key: tuple
-
-
-@dataclasses.dataclass
-class TuneResponse:
-    result: tuning.RidgeTuneResult
+Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest, Workload]
 
 
 # ---------------------------------------------------------------------------
@@ -178,130 +207,16 @@ class TuneResponse:
 # ---------------------------------------------------------------------------
 
 
-def _score(task: str, values, y_te):
-    if task == "binary":
-        return metrics.binary_accuracy(values, y_te)
-    if task == "multiclass":
-        return metrics.multiclass_accuracy(values, y_te)
-    return metrics.mse(values, y_te)
-
-
 def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
-    """Serve a batch of requests; responses align with ``requests``.
+    """Serve a batch of Workloads (or legacy requests); responses align
+    with ``requests``.
 
-    Same-plan CV label queries are coalesced into one padded jitted eval
-    per (plan, task) group; plans are fetched once per distinct dataset
-    (fingerprints memoised per driver call, keyed by object identity).
+    Thin alias of :func:`repro.serve.workload.run_workloads`: same-plan CV
+    label queries are coalesced into one padded jitted eval per (plan,
+    estimator, static-options) group; plans are fetched once per distinct
+    dataset; legacy request objects convert via ``to_workload()``.
     """
-    responses: list = [None] * len(requests)
-    plan_memo: dict = {}
-
-    def plan_for(data: DatasetSpec, with_train_block: bool):
-        memo_key = (id(data.x), id(data.folds), float(data.lam), data.mode, with_train_block)
-        hit = plan_memo.get(memo_key)
-        if hit is None:
-            folds = as_folds(data.folds)
-            hit = engine.plan(
-                data.x, folds, data.lam, mode=data.mode, with_train_block=with_train_block
-            )
-            plan_memo[memo_key] = hit
-        return hit
-
-    # -- group CV requests by (plan, eval path) ----------------------------
-    groups: dict = {}
-    rsa_groups: dict = {}
-    for i, req in enumerate(requests):
-        if isinstance(req, RSARequest):
-            if req.contrast not in ("binary", "multiclass"):
-                raise ValueError(f"unknown RSA contrast {req.contrast!r}")
-            needs_train = req.contrast == "multiclass" or req.adjust_bias
-            key, plan = plan_for(req.data, needs_train)
-            if req.contrast == "binary":
-                gkey = (key, "binary", req.dissimilarity, req.adjust_bias, req.num_classes)
-            else:
-                gkey = (key, "multiclass", None, None, req.num_classes)
-            rsa_groups.setdefault(gkey, (plan, []))[1].append((i, req))
-        elif isinstance(req, TuneRequest):
-            responses[i] = TuneResponse(
-                engine.tune(req.x, req.y, lambdas=req.lambdas, criterion=req.criterion)
-            )
-        elif isinstance(req, PermutationRequest):
-            needs_train = req.task == "multiclass" or req.adjust_bias
-            key, plan = plan_for(req.data, needs_train)
-            if req.task == "multiclass":
-                res = engine.permutation_multiclass(
-                    plan,
-                    jnp.asarray(req.y),
-                    req.n_perm,
-                    jax.random.PRNGKey(req.seed),
-                    num_classes=req.num_classes,
-                )
-            else:
-                res = engine.permutation_binary(
-                    plan,
-                    jnp.asarray(req.y),
-                    req.n_perm,
-                    jax.random.PRNGKey(req.seed),
-                    metric=req.metric,
-                    adjust_bias=req.adjust_bias,
-                )
-            responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
-        elif isinstance(req, CVRequest):
-            needs_train = req.task == "multiclass" or (req.task == "binary" and req.adjust_bias)
-            key, plan = plan_for(req.data, needs_train)
-            gkey = (key, req.task, req.adjust_bias, req.num_classes)
-            groups.setdefault(gkey, (plan, []))[1].append((i, req))
-        else:
-            raise TypeError(f"unknown request type {type(req).__name__}")
-
-    # -- one coalesced eval per group --------------------------------------
-    batcher: MicroBatcher = engine.batcher
-    for (key, task, adjust_bias, num_classes), (plan, members) in groups.items():
-        ys = [jnp.asarray(req.y) for _, req in members]
-        if task == "binary":
-            outs = batcher.run_columns(ys, lambda b: engine.eval_binary(plan, b, adjust_bias))
-        elif task == "ridge":
-            outs = batcher.run_columns(ys, lambda b: engine.eval_ridge(plan, b))
-        elif task == "multiclass":
-            outs = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, num_classes))
-        else:
-            raise ValueError(f"unknown task {task!r}")
-        for (i, req), values in zip(members, outs):
-            y = jnp.asarray(req.y)
-            if task == "multiclass":
-                y_te = y[plan.te_idx] if y.ndim == 1 else y[:, plan.te_idx]
-            else:
-                y_te = y[plan.te_idx]  # (K, m[, B]) via trailing dims
-            responses[i] = CVResponse(task, values, y_te, _score(task, values, y_te), key)
-
-    # -- RSA: contrast columns ride the same coalesced label-batch path ----
-    for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
-        if contrast == "binary":
-            cols = [
-                rsa_rdm.pair_contrast_columns(jnp.asarray(req.y), c, plan.h.dtype)
-                for _, req in members
-            ]
-            outs = batcher.run_columns(cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj))
-            rdms = [(rsa_rdm.rdm_from_pair_values(vals, c), vals) for vals in outs]
-        else:
-            ys = [jnp.asarray(req.y) for _, req in members]
-            preds = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, c))
-            rdms = [
-                (rsa_rdm.rdm_from_confusion(pred, y[plan.te_idx], c), None)
-                for pred, y in zip(preds, ys)
-            ]
-        for (i, req), (rdm, vals) in zip(members, rdms):
-            scores = null = p = None
-            if req.model_rdms is not None:
-                scores, null, p = engine.compare_rdms(
-                    rdm,
-                    jnp.asarray(req.model_rdms),
-                    req.comparison,
-                    req.n_perm,
-                    jax.random.PRNGKey(req.seed),
-                )
-            responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
-    return responses
+    return run_workloads(engine, requests)
 
 
 # ---------------------------------------------------------------------------
@@ -312,11 +227,12 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
 class EngineServer:
     """Background worker that drains a request queue into micro-batches.
 
-    Submitters (any thread) get a Future per request; the worker collects
-    whatever is queued — up to ``max_batch`` requests, waiting at most
-    ``max_wait_ms`` after the first — and serves the whole batch through
-    :func:`serve`, so concurrent clients' queries coalesce onto shared
-    plans and shared padded evals.
+    Submitters (any thread) get a Future per Workload (legacy requests
+    are accepted too); the worker collects whatever is queued — up to
+    ``max_batch`` requests, waiting at most ``max_wait_ms`` after the
+    first — and serves the whole batch through :func:`serve`, so
+    concurrent clients' queries coalesce onto shared plans and shared
+    padded evals.
     """
 
     def __init__(self, engine: CVEngine, max_batch: int = 64, max_wait_ms: float = 2.0):

@@ -78,6 +78,12 @@ class PlanCache:
         with self._lock:
             return key in self._entries
 
+    def peek(self, key: Hashable) -> Optional[CVPlan]:
+        """Locked lookup without recency refresh or stats — introspection
+        (e.g. the engine's ``datasets()`` residency view), not serving."""
+        with self._lock:
+            return self._entries.get(key)
+
     def get(self, key: Hashable) -> Optional[CVPlan]:
         """Return the cached plan (refreshing recency) or None on miss.
 
@@ -156,6 +162,24 @@ class PlanCache:
     def pinned_keys(self) -> tuple:
         with self._lock:
             return tuple(self._pinned)
+
+    def remove(self, key: Hashable) -> bool:
+        """Explicitly drop one entry (handle-scoped eviction).
+
+        Unpins first if needed; counted as an eviction. Returns whether the
+        key was resident.
+        """
+        with self._lock:
+            plan = self._entries.pop(key, None)
+            if plan is None:
+                return False
+            if key in self._pinned:
+                self._pinned.discard(key)
+                self.stats.pinned -= 1
+                self.stats.pinned_bytes -= plan.nbytes
+            self.stats.bytes_in_use -= plan.nbytes
+            self.stats.evictions += 1
+            return True
 
     def _evict_over_budget(self) -> None:
         # Pressure counts unpinned bytes only; victims are the LRU

@@ -1,0 +1,201 @@
+"""repro.serve.client — one Client, three transports.
+
+Every driver in this package executes the same
+:class:`~repro.serve.workload.Workload` spec through the same engine; the
+only real choice a caller makes is *how submissions travel*: inline on
+the calling thread, through the thread-backed queue, or through the
+asyncio gather window. :class:`Client` makes that a constructor argument
+instead of three APIs:
+
+    client = Client(engine)                      # sync, in-process
+    client = Client(engine, transport="thread")  # EngineServer futures
+    client = Client(engine, transport="async")   # AsyncEngineServer
+
+``submit`` / ``gather`` / ``stream`` then have transport-appropriate
+return types (response vs Future vs awaitable; generator vs async
+generator) but identical semantics and — by the parity tests —
+bit-identical results. The client also fronts the engine's dataset
+registry (``register`` → :class:`~repro.serve.workload.DatasetHandle`)
+and, given a :class:`~repro.serve.workload.TrafficLog`, records the
+(task, bucket) set of everything submitted so a later boot can warm the
+engine from observed traffic (``serve_cv --record-traffic`` /
+``--warmup-from``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import Optional, Sequence
+
+from repro.serve.aio import AsyncEngineServer
+from repro.serve.api import EngineServer
+from repro.serve.engine import CVEngine
+from repro.serve.workload import (
+    DatasetHandle,
+    TrafficLog,
+    as_workload,
+    run_workloads,
+    stream_workload,
+)
+
+__all__ = ["Client"]
+
+_TRANSPORTS = ("sync", "thread", "async")
+
+
+class Client:
+    """Unified front door: submit/stream/gather over a chosen transport.
+
+    transport="sync"    ``submit`` returns the response, ``gather`` the
+                        response list (whole batch coalesced through one
+                        driver call), ``stream`` a plain generator.
+    transport="thread"  ``submit`` returns a ``concurrent.futures.Future``
+                        from a lazily-started
+                        :class:`~repro.serve.api.EngineServer`; ``gather``
+                        blocks for all results; ``stream`` runs on the
+                        calling thread (the engine is thread-safe, so
+                        chunks interleave with the worker's batches).
+    transport="async"   use ``async with Client(...)``; ``submit`` /
+                        ``gather`` are awaitables and ``stream`` an async
+                        iterator over an
+                        :class:`~repro.serve.aio.AsyncEngineServer`.
+
+    Legacy request shims are accepted anywhere a Workload is.
+    """
+
+    def __init__(
+        self,
+        engine: Optional[CVEngine] = None,
+        transport: str = "sync",
+        *,
+        max_batch: int = 64,
+        gather_window_ms: float = 2.0,
+        stream_chunk: int = 64,
+        record: Optional[TrafficLog] = None,
+    ):
+        if transport not in _TRANSPORTS:
+            raise ValueError(f"transport must be one of {_TRANSPORTS}, got {transport!r}")
+        self.engine = engine if engine is not None else CVEngine()
+        self.transport = transport
+        self.max_batch = max_batch
+        self.gather_window_ms = gather_window_ms
+        self.stream_chunk = stream_chunk
+        self.record = record
+        self._server = None  # EngineServer | AsyncEngineServer | None
+
+    # -- dataset registry passthrough --------------------------------------
+
+    def register(self, x, folds, lam: float, mode: str = "auto") -> DatasetHandle:
+        """Register a dataset once; subsequent workloads carry the handle."""
+        return self.engine.register(x, folds, lam, mode=mode)
+
+    def datasets(self) -> tuple:
+        return self.engine.datasets()
+
+    def warmup(self, dataset, **kwargs) -> dict:
+        return self.engine.warmup(dataset, **kwargs)
+
+    # -- submission --------------------------------------------------------
+
+    def _note(self, w, stream_chunk: Optional[int] = None) -> None:
+        if self.record is not None:
+            self.record.record(w, self.engine.config.buckets, stream_chunk=stream_chunk)
+
+    def submit(self, workload):
+        """One workload in; transport-appropriate handle out
+        (response / Future / awaitable)."""
+        w = as_workload(workload)
+        self._note(w)
+        if self.transport == "sync":
+            (resp,) = run_workloads(self.engine, [w])
+            return resp
+        if self.transport == "thread":
+            return self._thread_server().submit(w)
+        return self._async_server().submit(w)
+
+    def gather(self, workloads: Sequence):
+        """Submit a batch; return (or await) the aligned response list.
+
+        The sync transport coalesces the whole batch through one driver
+        call (maximal micro-batching); thread/async submit individually so
+        the batch interleaves with other clients' traffic.
+        """
+        ws = [as_workload(w) for w in workloads]
+        for w in ws:
+            self._note(w)
+        if self.transport == "sync":
+            return run_workloads(self.engine, ws)
+        if self.transport == "thread":
+            futures = [self._thread_server().submit(w) for w in ws]
+            return [f.result() for f in futures]
+
+        async def _gather():
+            server = self._async_server()
+            return list(await asyncio.gather(*(server.submit(w) for w in ws)))
+
+        return _gather()
+
+    def stream(self, workload):
+        """Progress events for one workload: a generator (sync/thread
+        transports) or an async iterator (async transport)."""
+        w = as_workload(workload)
+        self._note(w, stream_chunk=self.stream_chunk)
+        if self.transport == "async":
+            return self._async_server().stream(w)
+        return stream_workload(self.engine, w, chunk=self.stream_chunk)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _thread_server(self) -> EngineServer:
+        if self._server is None:
+            self._server = EngineServer(
+                self.engine, max_batch=self.max_batch, max_wait_ms=self.gather_window_ms
+            ).start()
+        return self._server
+
+    def _async_server(self) -> AsyncEngineServer:
+        if self._server is None:
+            raise RuntimeError(
+                "async Client must be entered first: `async with Client(engine, "
+                "transport='async') as client:`"
+            )
+        return self._server
+
+    def close(self) -> None:
+        if self.transport == "thread" and self._server is not None:
+            self._server.stop()
+            self._server = None
+
+    def __enter__(self) -> "Client":
+        if self.transport == "async":
+            raise RuntimeError("async Client needs `async with`, not `with`")
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    async def __aenter__(self) -> "Client":
+        if self.transport != "async":
+            raise RuntimeError(f"`async with` needs transport='async', not {self.transport!r}")
+        self._server = await AsyncEngineServer(
+            self.engine,
+            max_batch=self.max_batch,
+            gather_window_ms=self.gather_window_ms,
+            stream_chunk=self.stream_chunk,
+        ).start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        if self._server is not None:
+            await self._server.stop()
+            self._server = None
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def server(self):
+        """The backing server (None for the sync transport)."""
+        return self._server
+
+    def stats(self) -> dict:
+        return self.engine.stats()

@@ -6,10 +6,23 @@ The engine is the multi-tenant core of ``repro.serve``. It owns
     :class:`~repro.core.fastcv.CVPlan` per (dataset × folds × λ × mode),
     LRU-evicted under a byte budget, so repeated requests against the same
     features never re-factorise;
-  * a fixed family of *jitted evaluators* (binary LDA, multi-class LDA,
-    ridge regression, permutation-null metrics, RSA pairwise-contrast
-    dissimilarities and model-RDM scoring), created once per engine so
-    their jit caches — and hence compile counts — are observable;
+  * a **dataset registry** — :meth:`CVEngine.register` fingerprints a
+    dataset once and returns a
+    :class:`~repro.serve.workload.DatasetHandle`; workloads carry the
+    handle instead of re-shipping the feature matrix, evicted plans
+    rebuild transparently, and :meth:`datasets` exposes residency /
+    pinning / traffic per registration;
+  * the CV *jitted evaluators*, drawn from the least-squares **estimator
+    registry** (:mod:`repro.serve.workload`): one compiled program per
+    (eval family × static options × shape bucket), created lazily but
+    exactly once per engine so jit caches — and hence compile counts —
+    are observable. Binary LDA, multi-class LDA, ridge, and multi-target
+    ridge are registrations; :meth:`eval_estimator` serves any newly
+    registered model with zero engine changes. Permutation-null metrics
+    and RSA scoring keep their own jit families;
+  * an **RDM memo** (:class:`repro.rsa.rdm.RDMCache`): empirical RDMs
+    keyed by (plan, labels fingerprint), so repeat model scoring against
+    the same data skips the fold solves (``stats()["rdm_hits"]``);
   * *shape buckets* for the label-batch dimension: every batch is padded up
     to a static bucket size before hitting jit, so an engine serving ragged
     traffic compiles at most ``len(buckets)`` programs per eval path and
@@ -44,11 +57,29 @@ from repro.rsa import compare as rsa_compare
 from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
 from repro.serve.cache import PlanCache
+from repro.serve.workload import DatasetHandle, get_estimator
 
-__all__ = ["EngineConfig", "CVEngine"]
+__all__ = ["EngineConfig", "CVEngine", "DatasetHandle"]
 
 _GRAM_IMPLS = ("auto", "xla", "pallas", "distributed")
 _WARMUP_TASKS = ("binary", "ridge", "multiclass", "permutation", "rsa")
+
+
+@dataclasses.dataclass
+class _DatasetRecord:
+    """Registry entry behind a :class:`DatasetHandle`.
+
+    Keeps the actual feature matrix and folds so plans evicted under cache
+    pressure can be rebuilt from the handle alone — clients never re-ship
+    the bytes.
+    """
+
+    handle: DatasetHandle
+    x: jax.Array
+    folds: Folds
+    lam: float
+    mode: str
+    served: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,18 +125,21 @@ class CVEngine:
         self.config = config or EngineConfig()
         self.cache = PlanCache(self.config.cache_bytes)
         self.batcher = MicroBatcher(self.config.buckets)
+        self.rdm_cache = rsa_rdm.RDMCache()
         self._donate = bool(self.config.donate)
         # Eval paths are created lazily but exactly once per static
         # signature and held forever: the dict entry IS the jit cache the
-        # no-recompile guarantee rests on.
-        self._eval_binary = {}  # adjust_bias -> jit[(plan, y(N,B)) -> (K,m,B)]
-        self._eval_ridge = fastcv.make_eval_cv(donate=self._donate)
-        self._eval_multiclass = {}  # num_classes -> jit[(plan, y(B,N)) -> (B,K,m)]
+        # no-recompile guarantee rests on. CV evals come from the
+        # least-squares estimator registry (repro.serve.workload): one
+        # jitted program per (eval_key, static options) — registered
+        # estimators sharing an eval_key (ridge / ridge_multi) share it.
+        self._evals = {}  # (eval_key, static opts) -> jit[(plan, batch) -> out]
         self._perm_binary = {}  # (metric, adjust_bias) -> jit -> (B,)
         self._perm_multiclass = {}  # num_classes -> jit -> (B,)
         self._rsa_pairs = {}  # (dissimilarity, adjust_bias) -> jit -> (B,)
         self._rsa_score = {}  # method -> jit[(emp, models) -> (M,)]
         self._rsa_null = {}  # method -> jit[(emp, models, perms) -> (M,T)]
+        self._datasets = {}  # handle key -> _DatasetRecord
         self.plans_built = 0
         self.labels_evaluated = 0
 
@@ -161,14 +195,100 @@ class CVEngine:
 
         return distributed_gram(x, self.config.mesh, feature_axis=self.config.feature_axis)
 
+    # ------------------------------------------------------------------
+    # Dataset registry: register once, serve by handle
+    # ------------------------------------------------------------------
+
+    def register(self, x: jax.Array, folds, lam: float, mode: str = "auto") -> DatasetHandle:
+        """Register a dataset; returns a :class:`DatasetHandle`.
+
+        The handle is keyed by the same content fingerprint the plan cache
+        uses (``fastcv.plan_key``), so registering identical bytes twice
+        yields the same handle. Workloads carry the handle instead of
+        re-shipping the feature matrix; the engine keeps the features so a
+        plan evicted under byte pressure rebuilds transparently on next
+        use. Handle-scoped operations: :meth:`warmup` (accepts a handle),
+        :meth:`pin`/:meth:`unpin` (via ``handle.key``), :meth:`evict`, and
+        the :meth:`datasets` introspection view.
+        """
+        folds = as_folds(folds)
+        key = fastcv.plan_key(x, folds, lam, mode, True)
+        rec = self._datasets.get(key)
+        if rec is None:
+            handle = DatasetHandle(
+                key=key, n=int(x.shape[0]), p=int(x.shape[1]), lam=float(lam), mode=mode
+            )
+            rec = self._datasets[key] = _DatasetRecord(handle, x, folds, float(lam), mode)
+        return rec.handle
+
+    def dataset_record(self, handle: DatasetHandle) -> _DatasetRecord:
+        rec = self._datasets.get(handle.key)
+        if rec is None:
+            raise KeyError(f"dataset handle {handle.key[0][:8]} is not registered on this engine")
+        return rec
+
+    def resolve(self, dataset, with_train_block: bool = True):
+        """(key, plan) for a :class:`DatasetHandle` or inline spec.
+
+        Handles resolve through the registry (rebuilding the plan if it
+        was evicted); anything with ``x`` / ``folds`` / ``lam`` attributes
+        — e.g. :class:`repro.serve.workload.DatasetSpec` — is planned
+        directly.
+        """
+        if isinstance(dataset, DatasetHandle):
+            rec = self.dataset_record(dataset)
+            rec.served += 1
+            return self.plan(
+                rec.x, rec.folds, rec.lam, mode=rec.mode, with_train_block=with_train_block
+            )
+        folds = as_folds(dataset.folds)
+        mode = getattr(dataset, "mode", "auto")
+        return self.plan(
+            dataset.x, folds, dataset.lam, mode=mode, with_train_block=with_train_block
+        )
+
+    def evict(self, handle: DatasetHandle, *, deregister: bool = False) -> bool:
+        """Drop a registered dataset's cached plans (both train-block
+        variants); with ``deregister`` also forget the registration."""
+        rec = self._datasets.get(handle.key)
+        removed = self.cache.remove(handle.key)
+        no_train = handle.key[:-1] + (False,)
+        removed = self.cache.remove(no_train) or removed
+        if deregister and rec is not None:
+            del self._datasets[handle.key]
+        return removed
+
+    def datasets(self) -> tuple:
+        """Introspection view: one dict per registered dataset."""
+        out = []
+        for key, rec in self._datasets.items():
+            plan = self.cache.peek(key) or self.cache.peek(key[:-1] + (False,))
+            out.append(
+                {
+                    "handle": rec.handle,
+                    "n": rec.handle.n,
+                    "p": rec.handle.p,
+                    "lam": rec.lam,
+                    "mode": rec.mode,
+                    "served": rec.served,
+                    "resident": plan is not None,
+                    "pinned": key in self.cache.pinned_keys(),
+                    "nbytes": plan.nbytes if plan is not None else 0,
+                }
+            )
+        return tuple(out)
+
     # -- pinning (PlanCache passthrough) -------------------------------
 
     def pin(self, key) -> bool:
-        """Exempt a cached plan from eviction; see :meth:`PlanCache.pin`."""
-        return self.cache.pin(key)
+        """Exempt a cached plan from eviction; see :meth:`PlanCache.pin`.
+
+        Accepts a raw plan key or a :class:`DatasetHandle`.
+        """
+        return self.cache.pin(key.key if isinstance(key, DatasetHandle) else key)
 
     def unpin(self, key) -> bool:
-        return self.cache.unpin(key)
+        return self.cache.unpin(key.key if isinstance(key, DatasetHandle) else key)
 
     # ------------------------------------------------------------------
     # Warm-up: pre-build plans, pre-compile the bucketed eval family
@@ -215,9 +335,9 @@ class CVEngine:
             raise ValueError(f"unknown warmup tasks {unknown}; expected {_WARMUP_TASKS}")
         if "multiclass" in tasks and num_classes < 2:
             raise ValueError("warmup of 'multiclass' needs num_classes >= 2")
-        folds = as_folds(spec.folds)
-        mode = getattr(spec, "mode", "auto")
-        key, plan = self.plan(spec.x, folds, spec.lam, mode=mode, with_train_block=True)
+        if isinstance(spec, DatasetHandle):
+            spec = self.dataset_record(spec)
+        key, plan = self.resolve(spec, with_train_block=True)
         wanted = sorted(
             {bucket_size(b, self.config.buckets) for b in (buckets or self.config.buckets)}
         )
@@ -298,46 +418,47 @@ class CVEngine:
             y = jnp.concatenate([y, jnp.broadcast_to(y[:1], (padded - b,) + y.shape[1:])], 0)
         return y, b
 
-    def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array, adjust_bias: bool = True) -> jax.Array:
-        """Binary-LDA decision values. y: (N,) or (N, B) ±1 labels."""
-        squeeze = y.ndim == 1
-        yb = y[:, None] if squeeze else y
-        fn = self._eval_binary.get(adjust_bias)
-        if fn is None:
-            fn = self._eval_binary[adjust_bias] = fastcv.make_eval_binary(
-                adjust_bias=adjust_bias, donate=self._donate
-            )
-        if not adjust_bias:
+    def eval_estimator(self, plan: fastcv.CVPlan, y: jax.Array, estimator: str, **opts):
+        """Shape-bucketed eval through the least-squares estimator registry.
+
+        ``estimator`` names a registered
+        :class:`~repro.serve.workload.LeastSquaresSpec`; the spec supplies
+        the targets encoding, batch layout, jitted-eval factory, and
+        train-block requirement — this one method is the engine's entire
+        CV eval surface, so a newly registered estimator (multi-target
+        ridge, optimal-scoring variants, …) is served, bucketed, and
+        compile-counted with zero engine changes.
+        """
+        spec = get_estimator(estimator)
+        opts = spec.resolve_opts(opts)
+        if not spec.needs_train(opts):
             plan = self._strip_train(plan)
-        yb = yb.astype(plan.h.dtype)
-        padded, b = self._pad_cols(yb)
-        out = fn(plan, padded)[..., :b]
-        self.labels_evaluated += b
-        return out[..., 0] if squeeze else out
-
-    def eval_ridge(self, plan: fastcv.CVPlan, y: jax.Array) -> jax.Array:
-        """Exact CV ridge predictions ẏ_Te. y: (N,) or (N, B) responses."""
-        plan = self._strip_train(plan)
-        squeeze = y.ndim == 1
-        yb = (y[:, None] if squeeze else y).astype(plan.h.dtype)
-        padded, b = self._pad_cols(yb)
-        out = self._eval_ridge(plan, padded)[..., :b]
-        self.labels_evaluated += b
-        return out[..., 0] if squeeze else out
-
-    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array, num_classes: int) -> jax.Array:
-        """Multi-class LDA CV predictions. y: int (N,) or (B, N)."""
-        squeeze = y.ndim == 1
-        yb = y[None, :] if squeeze else y
-        fn = self._eval_multiclass.get(num_classes)
+        batch, squeeze = spec.encode(y, plan.h.dtype, opts)
+        key = (spec.eval_key, spec.static_key(opts))
+        fn = self._evals.get(key)
         if fn is None:
-            fn = self._eval_multiclass[num_classes] = multiclass.make_eval_multiclass(
-                num_classes, donate=self._donate
-            )
-        padded, b = self._pad_rows(yb)
+            fn = self._evals[key] = spec.make_eval(opts, self._donate)
+        if spec.layout == "columns":
+            padded, b = self._pad_cols(batch)
+            out = fn(plan, padded)[..., :b]
+            self.labels_evaluated += b
+            return out[..., 0] if squeeze else out
+        padded, b = self._pad_rows(batch)
         out = fn(plan, padded)[:b]
         self.labels_evaluated += b
         return out[0] if squeeze else out
+
+    def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array, adjust_bias: bool = True) -> jax.Array:
+        """Binary-LDA decision values. y: (N,) or (N, B) ±1 labels."""
+        return self.eval_estimator(plan, y, "binary", adjust_bias=adjust_bias)
+
+    def eval_ridge(self, plan: fastcv.CVPlan, y: jax.Array) -> jax.Array:
+        """Exact CV ridge predictions ẏ_Te. y: (N,) or (N, B) responses."""
+        return self.eval_estimator(plan, y, "ridge")
+
+    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array, num_classes: int) -> jax.Array:
+        """Multi-class LDA CV predictions. y: int (N,) or (B, N)."""
+        return self.eval_estimator(plan, y, "multiclass", num_classes=num_classes)
 
     # ------------------------------------------------------------------
     # RSA serving (pairwise-contrast RDMs + model scoring, §4.2)
@@ -484,16 +605,38 @@ class CVEngine:
         """Null metrics for an explicit (B, N) permutation batch → (B,).
 
         The chunk-level building block under both :meth:`permutation_binary`
-        and the streaming front-end: callers choose the permutation rows
-        (e.g. prefix-stable chunks of ``permutation_indices``), the batch
-        pads up to a shape bucket, and repeats never recompile.
+        and the streaming front-end. On a mesh-configured engine the batch
+        shards over ``perm_axes`` via ``sharded_null_from_plan`` (padded up
+        to a whole number of shards, trimmed back) — so *streamed* null
+        chunks use the mesh exactly like monolithic requests, with
+        identical draws. Locally, the batch pads up to a shape bucket and
+        repeats never recompile.
         """
         if not adjust_bias:
             plan = self._strip_train(plan)
         y = y.astype(plan.h.dtype)
-        fn = self._perm_binary_fn(metric, adjust_bias)
-        padded, b = self._pad_rows(perms)
-        out = fn(plan, y, padded)[:b]
+        b = perms.shape[0]
+        if self.config.mesh is not None:
+            from repro.core.distributed import sharded_null_from_plan
+
+            n_shards = 1
+            for a in self.config.perm_axes:
+                n_shards *= self.config.mesh.shape[a]
+            t_pad = -(-b // n_shards) * n_shards
+            if t_pad > b:
+                perms = jnp.pad(perms, ((0, t_pad - b), (0, 0)), mode="edge")
+            out = sharded_null_from_plan(
+                plan,
+                y,
+                perms,
+                self.config.mesh,
+                metric=metric,
+                perm_axes=self.config.perm_axes,
+                adjust_bias=adjust_bias,
+            )[:b]
+        else:
+            fn = self._perm_binary_fn(metric, adjust_bias)
+            out = fn(plan, y, self._pad_rows(perms)[0])[:b]
         self.labels_evaluated += b
         return out
 
@@ -530,9 +673,6 @@ class CVEngine:
         mesh's ``perm_axes``; otherwise it runs through the bucketed local
         eval path (padded to a static shape, so repeats never recompile).
         """
-        if not adjust_bias:
-            plan = self._strip_train(plan)
-        y = y.astype(plan.h.dtype)
         n = y.shape[0]
         observed = self.observed_binary(plan, y, metric=metric, adjust_bias=adjust_bias)
         # Generate directly at the bucket size: permutation_indices jits on
@@ -540,28 +680,10 @@ class CVEngine:
         # client-chosen n_perm from compiling a fresh generator each time.
         t_gen = bucket_size(n_perm, self.config.buckets)
         perms = perm_lib.permutation_indices(key, n, t_gen)
-        if self.config.mesh is not None:
-            from repro.core.distributed import sharded_null_from_plan
-
-            n_shards = 1
-            for a in self.config.perm_axes:
-                n_shards *= self.config.mesh.shape[a]
-            t_pad = -(-t_gen // n_shards) * n_shards
-            perms = jnp.pad(perms, ((0, t_pad - t_gen), (0, 0)), mode="edge")
-            null = sharded_null_from_plan(
-                plan,
-                y,
-                perms,
-                self.config.mesh,
-                metric=metric,
-                perm_axes=self.config.perm_axes,
-                adjust_bias=adjust_bias,
-            )[:n_perm]
-            self.labels_evaluated += n_perm
-        else:
-            fn = self._perm_binary_fn(metric, adjust_bias)
-            null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
-            self.labels_evaluated += n_perm
+        null = self.null_binary(plan, y, perms, metric=metric, adjust_bias=adjust_bias)[:n_perm]
+        # null_binary counted the bucketed batch; this API's contract (and
+        # the multiclass path) counts the *requested* draws only.
+        self.labels_evaluated -= t_gen - n_perm
         return perm_lib.PermutationResult(observed, null, perm_lib.p_value(observed, null))
 
     def permutation_multiclass(
@@ -599,9 +721,7 @@ class CVEngine:
 
         Stable compile_count across requests == zero recompiles."""
         fns = (
-            [self._eval_ridge]
-            + list(self._eval_binary.values())
-            + list(self._eval_multiclass.values())
+            list(self._evals.values())
             + list(self._perm_binary.values())
             + list(self._perm_multiclass.values())
             + list(self._rsa_pairs.values())
@@ -616,5 +736,8 @@ class CVEngine:
             plans_built=self.plans_built,
             labels_evaluated=self.labels_evaluated,
             compiles=self.compile_count(),
+            datasets_registered=len(self._datasets),
+            rdm_hits=self.rdm_cache.hits,
+            rdm_entries=len(self.rdm_cache),
         )
         return s

@@ -1,0 +1,1206 @@
+"""One workload API: registered datasets, Workload specs, estimator registry.
+
+The paper's central claim (Treder 2018, §2) is that the analytical-CV
+identity holds for *every* ridge-regularised least-squares model. This
+module makes the public surface say the same thing: instead of one request
+class and one engine code path per model, there is
+
+  * a **least-squares estimator registry** — :class:`LeastSquaresSpec`
+    describes a model family by its targets encoding, batch layout,
+    jitted-eval factory, and metric family. Binary LDA, multi-class LDA,
+    ridge regression, and multi-target ridge are *registrations*, not
+    engine forks; adding e.g. optimal-scoring LDA is one
+    :func:`register_estimator` call away.
+  * a **unified, versioned** :class:`Workload` spec — one dataclass schema
+    (``kind``: ``cv | permutation | rsa | tune | grid``) that normalises
+    and validates eagerly at construction, so malformed traffic fails with
+    a clear message instead of a shape error deep inside jit.
+    ``to_dict``/``from_dict`` round-trip the schema (version-stamped) for
+    logging, replay, and cross-process submission.
+  * **dataset handles** — :meth:`repro.serve.engine.CVEngine.register`
+    fingerprints a dataset once and returns a :class:`DatasetHandle`;
+    workloads carry the handle instead of re-shipping the feature matrix.
+  * the **unified driver** :func:`run_workloads` — same-plan CV label
+    queries coalesce through the engine's
+    :class:`~repro.serve.batching.MicroBatcher` (one padded jitted eval
+    per group), RSA contrast columns ride the identical column path with
+    empirical-RDM memoisation, and permutation / tune / grid workloads
+    route to their engine entry points.
+  * a **synchronous streaming generator** :func:`stream_workload` — the
+    single implementation of chunked permutation/RSA progress events; the
+    asyncio front-end (:mod:`repro.serve.aio`) drives the same generator
+    on its executor thread.
+  * a :class:`TrafficLog` — records the (task, bucket) set a serving
+    session actually hit, serialisable to JSON, replayable at boot through
+    :meth:`~repro.serve.engine.CVEngine.warmup`.
+
+The legacy request classes (``CVRequest``/``PermutationRequest``/
+``RSARequest``/``TuneRequest`` in :mod:`repro.serve.api`) are deprecated
+shims that convert to :class:`Workload` via :func:`as_workload`; the
+``core/`` convenience functions (``binary_cv``, ``analytical_cv``,
+``analytical_cv_multiclass``, ``tune_ridge``, ``cv_grid``) remain the
+library-level reference implementations, with parity tests pinning them
+to this path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastcv, metrics, multidim, tuning
+from repro.core import permutation as perm_lib
+from repro.rsa import rdm as rsa_rdm
+from repro.serve.batching import as_folds, bucket_size
+
+__all__ = [
+    "WORKLOAD_SCHEMA_VERSION",
+    "KINDS",
+    "DatasetSpec",
+    "DatasetHandle",
+    "LeastSquaresSpec",
+    "register_estimator",
+    "get_estimator",
+    "estimators",
+    "Workload",
+    "as_workload",
+    "CVResponse",
+    "PermutationResponse",
+    "RSAResponse",
+    "TuneResponse",
+    "GridResponse",
+    "run_workloads",
+    "ProgressEvent",
+    "stream_workload",
+    "TrafficLog",
+]
+
+WORKLOAD_SCHEMA_VERSION = 1
+KINDS = ("cv", "permutation", "rsa", "tune", "grid")
+
+_PERM_ESTIMATORS = ("binary", "multiclass")
+_BINARY_METRICS = ("accuracy", "auc")
+_CONTRASTS = ("binary", "multiclass")
+_DISSIMILARITIES = ("accuracy", "contrast")
+_COMPARISONS = ("spearman", "kendall", "pearson", "cosine")
+_CRITERIA = ("mse", "error")
+
+
+# ---------------------------------------------------------------------------
+# Datasets: inline specs and registered handles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DatasetSpec:
+    """The label-invariant half of a workload: features, folds, λ.
+
+    ``folds`` is a :class:`~repro.core.folds.Folds` or a raw
+    ``(te_idx, tr_idx)`` index pair (normalised via ``Folds.with_indices``).
+    ``x`` may be None for ``kind="grid"`` workloads, which carry their own
+    feature grid and only borrow the spec's folds and λ.
+    """
+
+    x: Optional[jax.Array]
+    folds: object
+    lam: float
+    mode: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetHandle:
+    """Opaque reference to a dataset registered on a :class:`CVEngine`.
+
+    ``key`` is the content fingerprint ``plan_key(x, folds, λ, mode,
+    with_train_block=True)`` — the same identity the
+    :class:`~repro.serve.cache.PlanCache` uses — so a handle survives
+    serialisation (:meth:`Workload.to_dict` emits the key) and resolves on
+    any engine that registered the same bytes. Workloads carry the handle
+    instead of re-shipping the feature matrix.
+    """
+
+    key: tuple
+    n: int = 0
+    p: int = 0
+    lam: float = 0.0
+    mode: str = "auto"
+
+    def to_dict(self) -> dict:
+        return {
+            "__handle__": list(self.key),
+            "n": self.n,
+            "p": self.p,
+            "lam": self.lam,
+            "mode": self.mode,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DatasetHandle":
+        return cls(
+            key=tuple(d["__handle__"]),
+            n=int(d.get("n", 0)),
+            p=int(d.get("p", 0)),
+            lam=float(d.get("lam", 0.0)),
+            mode=d.get("mode", "auto"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Least-squares estimator registry
+# ---------------------------------------------------------------------------
+
+
+def _columns_encode(y, dtype, opts):
+    yb = jnp.asarray(y)
+    squeeze = yb.ndim == 1
+    yb = yb[:, None] if squeeze else yb
+    return yb.astype(dtype), squeeze
+
+
+def _columns_test_targets(y, plan, opts):
+    return y[plan.te_idx]
+
+
+def _rows_encode(y, dtype, opts):
+    yb = jnp.asarray(y)
+    squeeze = yb.ndim == 1
+    return (yb[None, :] if squeeze else yb), squeeze
+
+
+def _rows_test_targets(y, plan, opts):
+    return y[plan.te_idx] if y.ndim == 1 else y[:, plan.te_idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastSquaresSpec:
+    """One registered least-squares model family.
+
+    The registry turns "add a model" from an engine fork into a data
+    declaration: how targets are encoded into the shared label-batch
+    layout, which jitted evaluator serves it, whether the plan's Eq. 15
+    train block is needed, and which metric family scores it.
+
+    Attributes:
+      name:         registry key; ``Workload.estimator`` refers to it.
+      layout:       "columns" (targets stack along a trailing batch dim,
+                    binary/ridge style) or "rows" (label vectors stack
+                    along a leading batch dim, multi-class style).
+      make_eval:    ``(opts, donate) -> jit[(plan, batch) -> out]`` — a
+                    fresh, independently-cached jitted evaluator (the
+                    engine memoises one per (eval_key, static opts) and
+                    counts its compiles).
+      encode:       ``(y, dtype, opts) -> (batch2d, squeeze)`` target
+                    normalisation into the layout.
+      test_targets: ``(y, plan, opts) -> y_te`` matching test targets.
+      score:        ``(values, y_te, opts) -> scalar`` metric family.
+      needs_train:  ``(opts) -> bool`` — True if the eval consumes the
+                    plan's H_{Tr,Te} block (paper Eq. 15).
+      validate:     ``(y, n, opts) -> None``, raising ValueError with a
+                    clear message on malformed targets (eager, pre-jit).
+      static_opts:  Workload option names that are static to the jitted
+                    program (part of the eval-cache identity).
+      defaults:     default option values.
+      eval_key:     jit-cache identity; estimators sharing an evaluator
+                    (e.g. ridge and multi-target ridge both run Eq. 14)
+                    share one compiled program by sharing this key.
+    """
+
+    name: str
+    layout: str
+    make_eval: Callable
+    encode: Callable = _columns_encode
+    test_targets: Callable = _columns_test_targets
+    score: Callable = None
+    needs_train: Callable = lambda opts: False
+    validate: Callable = lambda y, n, opts: None
+    static_opts: tuple = ()
+    defaults: dict = dataclasses.field(default_factory=dict)
+    eval_key: str = ""
+
+    def __post_init__(self):
+        if self.layout not in ("columns", "rows"):
+            raise ValueError(f"layout must be 'columns' or 'rows', got {self.layout!r}")
+        if not self.eval_key:
+            object.__setattr__(self, "eval_key", self.name)
+
+    def resolve_opts(self, opts: dict) -> dict:
+        merged = dict(self.defaults)
+        merged.update({k: v for k, v in opts.items() if k in self.defaults})
+        return merged
+
+    def static_key(self, opts: dict) -> tuple:
+        return tuple((k, opts[k]) for k in self.static_opts)
+
+
+_ESTIMATORS: dict = {}
+
+
+def register_estimator(spec: LeastSquaresSpec, *, overwrite: bool = False) -> LeastSquaresSpec:
+    """Register a least-squares model family under ``spec.name``.
+
+    Registration is the *entire* integration surface: every driver
+    (sync/thread/async), the micro-batcher, the shape-bucketed eval cache,
+    and the warm-up API pick the new estimator up from here.
+    """
+    if spec.name in _ESTIMATORS and not overwrite:
+        raise ValueError(f"estimator {spec.name!r} already registered (pass overwrite=True)")
+    _ESTIMATORS[spec.name] = spec
+    return spec
+
+
+def get_estimator(name: str) -> LeastSquaresSpec:
+    spec = _ESTIMATORS.get(name)
+    if spec is None:
+        known = tuple(sorted(_ESTIMATORS))
+        raise ValueError(f"unknown estimator {name!r}; registered: {known}")
+    return spec
+
+
+def estimators() -> tuple:
+    """Names of all registered least-squares estimators."""
+    return tuple(sorted(_ESTIMATORS))
+
+
+# -- built-in registrations: the paper's three models + multi-target ridge --
+
+
+def _validate_binary(y, n, opts):
+    arr = np.asarray(y)
+    if arr.ndim not in (1, 2) or arr.shape[0] != n:
+        raise ValueError(f"binary targets must be (N,) or (N, B) with N={n}, got {arr.shape}")
+    if not np.all((arr == 1) | (arr == -1)):
+        raise ValueError(
+            "binary targets must be coded ±1 (paper §2.2); "
+            "use estimator='ridge' for continuous responses"
+        )
+
+
+def _validate_ridge(y, n, opts):
+    arr = np.asarray(y)
+    if arr.ndim not in (1, 2) or arr.shape[0] != n:
+        raise ValueError(f"ridge responses must be (N,) or (N, B) with N={n}, got {arr.shape}")
+
+
+def _validate_multiclass(y, n, opts):
+    arr = np.asarray(y)
+    c = opts.get("num_classes", 0)
+    if c < 2:
+        raise ValueError("multiclass workloads need num_classes >= 2")
+    if arr.ndim not in (1, 2) or arr.shape[-1] != n:
+        raise ValueError(f"multiclass labels must be (N,) or (B, N) with N={n}, got {arr.shape}")
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(f"multiclass labels must be integers, got dtype {arr.dtype}")
+    if arr.size and (arr.min() < 0 or arr.max() >= c):
+        raise ValueError(
+            f"multiclass labels must lie in [0, {c}), got range [{arr.min()}, {arr.max()}]"
+        )
+
+
+def _validate_ridge_multi(y, n, opts):
+    arr = np.asarray(y)
+    if arr.ndim != 2 or arr.shape[0] != n:
+        raise ValueError(f"multi-target ridge needs (N, Q) targets with N={n}, got {arr.shape}")
+
+
+def _score_ridge_multi(values, y_te, opts):
+    # Variance-weighted multi-target R² — a genuinely different metric
+    # family from single-target MSE, which is the point of the registry.
+    v = jnp.reshape(values, (-1, values.shape[-1]))
+    t = jnp.reshape(y_te, (-1, y_te.shape[-1]))
+    ss_res = jnp.sum((t - v) ** 2, axis=0)
+    ss_tot = jnp.sum((t - jnp.mean(t, axis=0)) ** 2, axis=0)
+    return jnp.mean(1.0 - ss_res / jnp.maximum(ss_tot, jnp.finfo(t.dtype).tiny))
+
+
+def _make_eval_binary(opts, donate):
+    return fastcv.make_eval_binary(adjust_bias=opts["adjust_bias"], donate=donate)
+
+
+def _make_eval_ridge(opts, donate):
+    return fastcv.make_eval_cv(donate=donate)
+
+
+def _make_eval_multiclass(opts, donate):
+    from repro.core import multiclass
+
+    return multiclass.make_eval_multiclass(opts["num_classes"], donate=donate)
+
+
+def _score_binary(values, y_te, opts):
+    return metrics.binary_accuracy(values, y_te)
+
+
+def _score_ridge(values, y_te, opts):
+    return metrics.mse(values, y_te)
+
+
+def _score_multiclass(values, y_te, opts):
+    return metrics.multiclass_accuracy(values, y_te)
+
+
+def _needs_train_binary(opts):
+    return bool(opts["adjust_bias"])
+
+
+def _needs_train_always(opts):
+    return True
+
+
+register_estimator(
+    LeastSquaresSpec(
+        name="binary",
+        layout="columns",
+        make_eval=_make_eval_binary,
+        score=_score_binary,
+        needs_train=_needs_train_binary,
+        validate=_validate_binary,
+        static_opts=("adjust_bias",),
+        defaults={"adjust_bias": True},
+    )
+)
+
+register_estimator(
+    LeastSquaresSpec(
+        name="ridge",
+        layout="columns",
+        make_eval=_make_eval_ridge,
+        score=_score_ridge,
+        validate=_validate_ridge,
+    )
+)
+
+register_estimator(
+    LeastSquaresSpec(
+        name="multiclass",
+        layout="rows",
+        make_eval=_make_eval_multiclass,
+        encode=_rows_encode,
+        test_targets=_rows_test_targets,
+        score=_score_multiclass,
+        needs_train=_needs_train_always,
+        validate=_validate_multiclass,
+        static_opts=("num_classes",),
+        defaults={"num_classes": 0},
+    )
+)
+
+# Multi-target ridge shares the ridge evaluator (Eq. 14 over trailing
+# columns) — and hence its compiled programs — via eval_key; only the
+# targets contract and the metric family differ.
+register_estimator(
+    LeastSquaresSpec(
+        name="ridge_multi",
+        layout="columns",
+        make_eval=_make_eval_ridge,
+        score=_score_ridge_multi,
+        validate=_validate_ridge_multi,
+        eval_key="ridge",
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# Responses
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CVResponse:
+    task: str  # estimator name
+    values: object  # dvals / ẏ_Te (K, m[, B]) or preds — host np.ndarray
+    #                 from the batched driver (MicroBatcher un-pads on the
+    #                 host), jax.Array from direct engine calls
+    y_te: jax.Array  # matching test labels/responses
+    score: jax.Array  # the estimator's metric family (accuracy / mse / R²)
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class PermutationResponse:
+    observed: jax.Array
+    null: jax.Array
+    p: jax.Array
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class RSAResponse:
+    rdm: jax.Array  # (C, C) empirical RDM
+    pair_values: Optional[object]  # (B,) pair dissimilarities (binary);
+    #                                np.ndarray from the batched driver
+    model_scores: Optional[jax.Array]  # (M,) or None
+    null: Optional[jax.Array]  # (M, n_perm) or None
+    p: Optional[jax.Array]  # (M,) or None
+    plan_key: tuple
+
+
+@dataclasses.dataclass
+class TuneResponse:
+    result: tuning.RidgeTuneResult
+
+
+@dataclasses.dataclass
+class GridResponse:
+    accuracies: jax.Array  # (Q,) per-grid-point CV accuracy
+
+
+# ---------------------------------------------------------------------------
+# The Workload spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Workload:
+    """One versioned, eagerly-validated unit of work against the engine.
+
+    ``kind`` selects the workload family; the remaining fields are that
+    family's sub-spec (unused fields are ignored by the driver but still
+    validated for coherence):
+
+      cv           dataset + y + estimator (+ estimator options)
+      permutation  dataset + y + estimator (binary|multiclass) + null spec
+                   (n_perm, seed, metric)
+      rsa          dataset + y (condition labels) + contrast spec
+                   (num_classes, contrast, dissimilarity, adjust_bias) +
+                   optional model spec (model_rdms, comparison, n_perm, seed)
+      tune         x + y + lambdas/criterion (exact-LOO ridge tuning; no
+                   plan, so no dataset)
+      grid         xs (Q, N, P) + y + dataset for folds/λ (the spec's own
+                   ``x`` may be None)
+
+    ``dataset`` is a :class:`DatasetHandle` (registered; carries no
+    feature bytes) or an inline :class:`DatasetSpec`. Validation runs at
+    construction: shape/coding errors surface here with a clear message,
+    never as a jit shape failure mid-serve.
+    """
+
+    kind: str
+    dataset: object = None  # DatasetHandle | DatasetSpec | None
+    y: object = None
+    estimator: str = "binary"
+    num_classes: int = 0
+    adjust_bias: bool = True
+    # null / permutation spec
+    n_perm: int = 0
+    seed: int = 0
+    metric: str = "accuracy"
+    # rsa contrast + model spec
+    contrast: str = "binary"
+    dissimilarity: str = "accuracy"
+    model_rdms: object = None
+    comparison: str = "spearman"
+    # tune spec
+    lambdas: object = None
+    criterion: str = "mse"
+    x: object = None  # tune-kind features
+    xs: object = None  # grid-kind (Q, N, P) feature grid
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- validation --------------------------------------------------------
+
+    def _dataset_n(self) -> Optional[int]:
+        if isinstance(self.dataset, DatasetHandle):
+            return self.dataset.n or None
+        if self.dataset is not None and getattr(self.dataset, "x", None) is not None:
+            return int(self.dataset.x.shape[0])
+        return None
+
+    def estimator_opts(self) -> dict:
+        spec = get_estimator(self.estimator)
+        opts = {"adjust_bias": self.adjust_bias, "num_classes": self.num_classes}
+        return spec.resolve_opts(opts)
+
+    def validate(self) -> "Workload":
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown workload kind {self.kind!r}; expected one of {KINDS}")
+        getattr(self, f"_validate_{self.kind}")()
+        return self
+
+    def _require_dataset(self):
+        if self.dataset is None:
+            raise ValueError(
+                f"kind={self.kind!r} workloads need a dataset (DatasetHandle or DatasetSpec)"
+            )
+        if not isinstance(self.dataset, DatasetHandle) and not hasattr(self.dataset, "folds"):
+            raise TypeError(
+                f"dataset must be a DatasetHandle or DatasetSpec-like, "
+                f"got {type(self.dataset).__name__}"
+            )
+
+    def _validate_cv(self):
+        self._require_dataset()
+        if self.y is None:
+            raise ValueError("cv workloads need targets y")
+        spec = get_estimator(self.estimator)
+        n = self._dataset_n()
+        if n is not None:
+            spec.validate(self.y, n, self.estimator_opts())
+
+    def _validate_permutation(self):
+        self._require_dataset()
+        if self.y is None:
+            raise ValueError("permutation workloads need targets y")
+        if self.estimator not in _PERM_ESTIMATORS:
+            raise ValueError(
+                f"permutation workloads support estimators {_PERM_ESTIMATORS}, "
+                f"got {self.estimator!r}"
+            )
+        if self.n_perm <= 0:
+            raise ValueError("permutation workloads need n_perm > 0")
+        if np.ndim(self.y) != 1:
+            raise ValueError("permutation workloads need a single (N,) target vector y")
+        if self.estimator == "binary" and self.metric not in _BINARY_METRICS:
+            raise ValueError(
+                f"binary permutation metric must be one of {_BINARY_METRICS}, "
+                f"got {self.metric!r}"
+            )
+        n = self._dataset_n()
+        if n is not None:
+            spec = get_estimator(self.estimator)
+            spec.validate(self.y, n, self.estimator_opts())
+
+    def _validate_rsa(self):
+        self._require_dataset()
+        if self.y is None:
+            raise ValueError("rsa workloads need condition labels y")
+        if self.num_classes < 2:
+            raise ValueError("rsa workloads need num_classes >= 2")
+        if self.contrast not in _CONTRASTS:
+            raise ValueError(f"unknown RSA contrast {self.contrast!r}; expected {_CONTRASTS}")
+        if self.dissimilarity not in _DISSIMILARITIES:
+            raise ValueError(
+                f"unknown RSA dissimilarity {self.dissimilarity!r}; "
+                f"expected one of {_DISSIMILARITIES}"
+            )
+        if self.comparison not in _COMPARISONS:
+            raise ValueError(
+                f"unknown RDM comparison {self.comparison!r}; expected one of {_COMPARISONS}"
+            )
+        arr = np.asarray(self.y)
+        if arr.ndim != 1:
+            raise ValueError(f"rsa condition labels must be (N,), got shape {arr.shape}")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"rsa condition labels must be integers, got {arr.dtype}")
+        if arr.size and (arr.min() < 0 or arr.max() >= self.num_classes):
+            raise ValueError(f"rsa condition labels must lie in [0, {self.num_classes})")
+        if self.model_rdms is not None:
+            m = np.shape(self.model_rdms)
+            if len(m) != 3 or m[1] != self.num_classes or m[2] != self.num_classes:
+                raise ValueError(
+                    f"model_rdms must be (M, C, C) with C={self.num_classes}, got shape {m}"
+                )
+
+    def _validate_tune(self):
+        x = self.x if self.x is not None else getattr(self.dataset, "x", None)
+        if x is None:
+            raise ValueError("tune workloads need features (x=... or a dataset with x)")
+        if self.y is None:
+            raise ValueError("tune workloads need targets y")
+        if self.criterion not in _CRITERIA:
+            raise ValueError(f"tune criterion must be one of {_CRITERIA}, got {self.criterion!r}")
+        if np.shape(self.y)[0] != np.shape(x)[0]:
+            raise ValueError(f"tune targets length {np.shape(self.y)[0]} != N={np.shape(x)[0]}")
+
+    def _validate_grid(self):
+        self._require_dataset()
+        if self.xs is None or self.y is None:
+            raise ValueError("grid workloads need xs (Q, N, P) and y")
+        shape = np.shape(self.xs)
+        if len(shape) != 3:
+            raise ValueError(f"grid xs must be (Q, N, P), got shape {shape}")
+        if shape[1] != np.shape(self.y)[0]:
+            raise ValueError(f"grid xs second dim {shape[1]} != len(y) {np.shape(self.y)[0]}")
+
+    # -- versioned serialisation -------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Versioned plain-dict form (JSON-serialisable)."""
+        d = {
+            "schema": WORKLOAD_SCHEMA_VERSION,
+            "kind": self.kind,
+            "estimator": self.estimator,
+            "num_classes": self.num_classes,
+            "adjust_bias": self.adjust_bias,
+            "n_perm": self.n_perm,
+            "seed": self.seed,
+            "metric": self.metric,
+            "contrast": self.contrast,
+            "dissimilarity": self.dissimilarity,
+            "comparison": self.comparison,
+            "criterion": self.criterion,
+        }
+        for field in ("y", "model_rdms", "lambdas", "x", "xs"):
+            d[field] = _encode_array(getattr(self, field))
+        d["dataset"] = _encode_dataset(self.dataset)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Workload":
+        schema = d.get("schema")
+        if schema != WORKLOAD_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported workload schema version {schema!r} "
+                f"(this build speaks {WORKLOAD_SCHEMA_VERSION})"
+            )
+        return cls(
+            kind=d["kind"],
+            dataset=_decode_dataset(d.get("dataset")),
+            y=_decode_array(d.get("y")),
+            estimator=d.get("estimator", "binary"),
+            num_classes=int(d.get("num_classes", 0)),
+            adjust_bias=bool(d.get("adjust_bias", True)),
+            n_perm=int(d.get("n_perm", 0)),
+            seed=int(d.get("seed", 0)),
+            metric=d.get("metric", "accuracy"),
+            contrast=d.get("contrast", "binary"),
+            dissimilarity=d.get("dissimilarity", "accuracy"),
+            model_rdms=_decode_array(d.get("model_rdms")),
+            comparison=d.get("comparison", "spearman"),
+            lambdas=_decode_array(d.get("lambdas")),
+            criterion=d.get("criterion", "mse"),
+            x=_decode_array(d.get("x")),
+            xs=_decode_array(d.get("xs")),
+        )
+
+
+def _encode_array(a):
+    if a is None:
+        return None
+    arr = np.asarray(a)
+    return {"__array__": arr.tolist(), "dtype": str(arr.dtype)}
+
+
+def _decode_array(d):
+    if d is None:
+        return None
+    return jnp.asarray(np.asarray(d["__array__"], dtype=np.dtype(d["dtype"])))
+
+
+def _encode_dataset(ds):
+    if ds is None:
+        return None
+    if isinstance(ds, DatasetHandle):
+        return ds.to_dict()
+    folds = ds.folds
+    if folds is not None:
+        folds = as_folds(folds)
+        folds = {
+            "te_idx": np.asarray(folds.te_idx).tolist(),
+            "tr_idx": np.asarray(folds.tr_idx).tolist(),
+        }
+    return {
+        "__dataset__": {
+            "x": _encode_array(ds.x),
+            "folds": folds,
+            "lam": float(ds.lam),
+            "mode": getattr(ds, "mode", "auto"),
+        }
+    }
+
+
+def _decode_dataset(d):
+    if d is None:
+        return None
+    if "__handle__" in d:
+        return DatasetHandle.from_dict(d)
+    spec = d["__dataset__"]
+    folds = spec["folds"]
+    if folds is not None:
+        folds = (np.asarray(folds["te_idx"], np.int32), np.asarray(folds["tr_idx"], np.int32))
+        folds = as_folds(folds)
+    return DatasetSpec(_decode_array(spec["x"]), folds, spec["lam"], spec.get("mode", "auto"))
+
+
+def as_workload(obj) -> Workload:
+    """Normalise: a Workload passes through; legacy requests convert."""
+    if isinstance(obj, Workload):
+        return obj
+    to_workload = getattr(obj, "to_workload", None)
+    if to_workload is not None:
+        return to_workload()
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a Workload")
+
+
+# ---------------------------------------------------------------------------
+# Unified driver
+# ---------------------------------------------------------------------------
+
+
+def _rdm_memo_key(plan_key, w: Workload):
+    diss = w.dissimilarity if w.contrast == "binary" else None
+    adj = w.adjust_bias if w.contrast == "binary" else None
+    # Drop the trailing with-train-block flag: the same workload may be
+    # served from either plan variant (the superset plan satisfies
+    # train-block-free requests once resident) with identical RDMs.
+    base = plan_key[:-1]
+    return (base, fastcv.fingerprint(jnp.asarray(w.y)), w.contrast, diss, adj, w.num_classes)
+
+
+def run_workloads(engine, workloads: Sequence) -> list:
+    """Serve a batch of workloads; responses align with ``workloads``.
+
+    Same-plan CV label queries coalesce into one padded jitted eval per
+    (plan, estimator, static-options) group; RSA contrast columns ride the
+    same column path with empirical-RDM memoisation (repeat scoring of the
+    same (plan, labels) skips the fold solves entirely); permutation, tune,
+    and grid workloads route to their engine entry points. Legacy request
+    objects are accepted and converted via :func:`as_workload`.
+    """
+    workloads = [as_workload(w) for w in workloads]
+    responses: list = [None] * len(workloads)
+    plan_memo: dict = {}
+
+    def plan_for(dataset, with_train_block: bool):
+        if isinstance(dataset, DatasetHandle):
+            memo_key = (dataset.key, with_train_block)
+        else:
+            memo_key = (
+                id(dataset.x),
+                id(dataset.folds),
+                float(dataset.lam),
+                dataset.mode,
+                with_train_block,
+            )
+        hit = plan_memo.get(memo_key)
+        if hit is None:
+            hit = plan_memo[memo_key] = engine.resolve(dataset, with_train_block)
+        return hit
+
+    # -- group CV workloads by (plan, estimator, static opts) --------------
+    groups: dict = {}
+    rsa_groups: dict = {}
+    for i, w in enumerate(workloads):
+        if w.kind == "cv":
+            spec = get_estimator(w.estimator)
+            opts = w.estimator_opts()
+            key, plan = plan_for(w.dataset, spec.needs_train(opts))
+            gkey = (key, w.estimator, spec.static_key(opts))
+            groups.setdefault(gkey, (plan, spec, opts, []))[3].append((i, w))
+        elif w.kind == "rsa":
+            needs_train = w.contrast == "multiclass" or w.adjust_bias
+            key, plan = plan_for(w.dataset, needs_train)
+            if w.contrast == "binary":
+                gkey = (key, "binary", w.dissimilarity, w.adjust_bias, w.num_classes)
+            else:
+                gkey = (key, "multiclass", None, None, w.num_classes)
+            rsa_groups.setdefault(gkey, (plan, []))[1].append((i, w))
+        elif w.kind == "permutation":
+            needs_train = w.estimator == "multiclass" or w.adjust_bias
+            key, plan = plan_for(w.dataset, needs_train)
+            if w.estimator == "multiclass":
+                res = engine.permutation_multiclass(
+                    plan,
+                    jnp.asarray(w.y),
+                    w.n_perm,
+                    jax.random.PRNGKey(w.seed),
+                    num_classes=w.num_classes,
+                )
+            else:
+                res = engine.permutation_binary(
+                    plan,
+                    jnp.asarray(w.y),
+                    w.n_perm,
+                    jax.random.PRNGKey(w.seed),
+                    metric=w.metric,
+                    adjust_bias=w.adjust_bias,
+                )
+            responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
+        elif w.kind == "tune":
+            x = w.x if w.x is not None else w.dataset.x
+            responses[i] = TuneResponse(
+                engine.tune(x, w.y, lambdas=w.lambdas, criterion=w.criterion)
+            )
+        elif w.kind == "grid":
+            folds, lam = _grid_folds_lam(engine, w.dataset)
+            xs, yv = jnp.asarray(w.xs), jnp.asarray(w.y)
+            grid = multidim.cv_grid(xs, yv, folds, lam, adjust_bias=w.adjust_bias)
+            responses[i] = GridResponse(grid)
+        else:  # unreachable: validate() gates kinds
+            raise ValueError(f"unknown workload kind {w.kind!r}")
+
+    # -- one coalesced eval per CV group -----------------------------------
+    batcher = engine.batcher
+    for (key, estimator, _static), (plan, spec, opts, members) in groups.items():
+        ys = [jnp.asarray(w.y) for _, w in members]
+        run = batcher.run_columns if spec.layout == "columns" else batcher.run_rows
+        outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, **opts))
+        for (i, w), values in zip(members, outs):
+            y = jnp.asarray(w.y)
+            y_te = spec.test_targets(y, plan, opts)
+            responses[i] = CVResponse(estimator, values, y_te, spec.score(values, y_te, opts), key)
+
+    # -- RSA: contrast columns ride the same coalesced label-batch path ----
+    for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
+        rdms = _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members)
+        for (i, w), (rdm, vals) in zip(members, rdms):
+            scores = null = p = None
+            if w.model_rdms is not None:
+                scores, null, p = engine.compare_rdms(
+                    rdm,
+                    jnp.asarray(w.model_rdms),
+                    w.comparison,
+                    w.n_perm,
+                    jax.random.PRNGKey(w.seed),
+                )
+            responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
+    return responses
+
+
+def _grid_folds_lam(engine, dataset):
+    if isinstance(dataset, DatasetHandle):
+        rec = engine.dataset_record(dataset)
+        return rec.folds, rec.lam
+    return as_folds(dataset.folds), float(dataset.lam)
+
+
+def _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members):
+    """(rdm, pair_values) per member, with engine-level RDM memoisation.
+
+    Only cache misses pay fold solves — and they still coalesce into one
+    padded batch; hits are filled from
+    :attr:`~repro.serve.engine.CVEngine.rdm_cache` (ROADMAP "RDM caching").
+    """
+    out: list = [None] * len(members)
+    misses = []
+    for j, (_i, w) in enumerate(members):
+        memo_key = _rdm_memo_key(key, w)
+        hit = engine.rdm_cache.get(memo_key)
+        if hit is not None:
+            out[j] = hit
+        else:
+            misses.append((j, w, memo_key))
+    if misses:
+        batcher = engine.batcher
+        if contrast == "binary":
+            cols = [
+                rsa_rdm.pair_contrast_columns(jnp.asarray(w.y), c, plan.h.dtype)
+                for _, w, _ in misses
+            ]
+            vals_list = batcher.run_columns(
+                cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj)
+            )
+            built = [(rsa_rdm.rdm_from_pair_values(vals, c), vals) for vals in vals_list]
+        else:
+            ys = [jnp.asarray(w.y) for _, w, _ in misses]
+            preds = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, c))
+            built = [
+                (rsa_rdm.rdm_from_confusion(pred, jnp.asarray(w.y)[plan.te_idx], c), None)
+                for pred, (_, w, _) in zip(preds, misses)
+            ]
+        for (j, _w, memo_key), value in zip(misses, built):
+            engine.rdm_cache.put(memo_key, value)
+            out[j] = value
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming (synchronous generator; repro.serve.aio drives it async)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProgressEvent:
+    """One step of a streamed workload.
+
+    kind:    "plan" (payload: plan key), "observed" (payload: observed
+             metric), "rdm" (payload: empirical RDM), "scores" (payload:
+             model scores), "null" (payload: the new null chunk), or
+             "done" (payload: the final response object).
+    done:    permutations finished so far (0 for pre-null events).
+    total:   total permutations the stream will produce.
+    payload: kind-specific value; always the full response on "done".
+    """
+
+    kind: str
+    done: int
+    total: int
+    payload: object
+
+
+def _chunk_plan(engine, total: int, chunk: int) -> tuple[int, int]:
+    buckets = engine.config.buckets
+    t_gen = bucket_size(total, buckets)
+    chunk = min(bucket_size(chunk, buckets), t_gen)
+    # whole chunks, same prefix (permutation_indices is prefix-stable)
+    return -(-t_gen // chunk) * chunk, chunk
+
+
+def _null_chunks(engine, total: int, n_items: int, seed: int, chunk: int, eval_chunk):
+    """Shared streaming loop: yield (done, null_block) chunk by chunk.
+
+    Permutations of ``n_items`` are generated once at the bucketed total —
+    rounded up to a whole number of chunks, so every slice is a full chunk
+    with one static shape even under non-nested custom buckets — and
+    evaluated ``chunk`` rows at a time; repeats never recompile, and the
+    rounding preserves the prefix, so the stream's first ``total`` draws
+    match the monolithic path exactly. ``eval_chunk(block, keep)`` trims
+    its own output to ``keep``.
+    """
+    t_gen, chunk = _chunk_plan(engine, total, chunk)
+    perms = perm_lib.permutation_indices(jax.random.PRNGKey(seed), n_items, t_gen)
+    for lo in range(0, total, chunk):
+        hi = min(lo + chunk, total)
+        yield hi, eval_chunk(perms[lo : min(lo + chunk, t_gen)], hi - lo)
+
+
+def stream_workload(engine, workload, chunk: int = 64) -> Iterator[ProgressEvent]:
+    """Generator of :class:`ProgressEvent`\\ s for one workload.
+
+    Permutation workloads emit their null distribution in prefix-stable
+    bucket-sized chunks (identical draws to the monolithic path — on a
+    mesh-configured engine the chunks shard over ``perm_axes`` exactly
+    like :meth:`~repro.serve.engine.CVEngine.permutation_binary`); RSA
+    workloads emit the empirical RDM, then model scores, then null chunks.
+    Any other kind degenerates to a single "done" event wrapping the
+    batched response.
+    """
+    w = as_workload(workload)
+    if w.kind == "permutation":
+        yield from _stream_permutation(engine, w, chunk)
+    elif w.kind == "rsa":
+        yield from _stream_rsa(engine, w, chunk)
+    else:
+        (resp,) = run_workloads(engine, [w])
+        yield ProgressEvent("done", 1, 1, resp)
+
+
+def _stream_permutation(engine, w: Workload, chunk: int):
+    total = w.n_perm
+    needs_train = w.estimator == "multiclass" or w.adjust_bias
+    key, plan = engine.resolve(w.dataset, needs_train)
+    yield ProgressEvent("plan", 0, total, key)
+    y = jnp.asarray(w.y)
+    if w.estimator == "multiclass":
+        observed = engine.observed_multiclass(plan, y, num_classes=w.num_classes)
+
+        def eval_chunk(block, keep):
+            return engine.null_multiclass(plan, y, block, num_classes=w.num_classes)[:keep]
+
+    else:
+        observed = engine.observed_binary(plan, y, metric=w.metric, adjust_bias=w.adjust_bias)
+
+        def eval_chunk(block, keep):
+            return engine.null_binary(
+                plan, y, block, metric=w.metric, adjust_bias=w.adjust_bias
+            )[:keep]
+
+    yield ProgressEvent("observed", 0, total, observed)
+    chunks = []
+    for hi, null_block in _null_chunks(engine, total, int(y.shape[0]), w.seed, chunk, eval_chunk):
+        chunks.append(null_block)
+        yield ProgressEvent("null", hi, total, null_block)
+    null = jnp.concatenate(chunks)
+    p = perm_lib.p_value(observed, null)
+    yield ProgressEvent("done", total, total, PermutationResponse(observed, null, p, key))
+
+
+def _stream_rsa(engine, w: Workload, chunk: int):
+    c = w.num_classes
+    total = w.n_perm if w.model_rdms is not None else 0
+    needs_train = w.contrast == "multiclass" or w.adjust_bias
+    key, plan = engine.resolve(w.dataset, needs_train)
+    yield ProgressEvent("plan", 0, total, key)
+    y = jnp.asarray(w.y)
+    memo_key = _rdm_memo_key(key, w)
+    hit = engine.rdm_cache.get(memo_key)
+    if hit is not None:
+        rdm, vals = hit
+    elif w.contrast == "binary":
+        cols = rsa_rdm.pair_contrast_columns(y, c, plan.h.dtype)
+        vals = engine.eval_rsa_pairs(plan, cols, w.dissimilarity, w.adjust_bias)
+        rdm = rsa_rdm.rdm_from_pair_values(vals, c)
+        engine.rdm_cache.put(memo_key, (rdm, vals))
+    else:
+        preds = engine.eval_multiclass(plan, y, c)
+        rdm, vals = rsa_rdm.rdm_from_confusion(preds, y[plan.te_idx], c), None
+        engine.rdm_cache.put(memo_key, (rdm, vals))
+    yield ProgressEvent("rdm", 0, total, rdm)
+    if w.model_rdms is None:
+        yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, None, None, None, key))
+        return
+    models = jnp.asarray(w.model_rdms)
+    scores = engine.score_rdms(rdm, models, w.comparison)
+    yield ProgressEvent("scores", 0, total, scores)
+    if total <= 0:
+        yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, scores, None, None, key))
+        return
+
+    def eval_chunk(block, keep):
+        return engine.null_rdm_scores(rdm, models, block, w.comparison)[:, :keep]
+
+    chunks = []
+    for hi, null_block in _null_chunks(engine, total, c, w.seed, chunk, eval_chunk):
+        chunks.append(null_block)
+        yield ProgressEvent("null", hi, total, null_block)
+    null = jnp.concatenate(chunks, axis=1)
+    p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
+    yield ProgressEvent("done", total, total, RSAResponse(rdm, vals, scores, null, p, key))
+
+
+# ---------------------------------------------------------------------------
+# Traffic recording: the observed (task, bucket) set, replayable at boot
+# ---------------------------------------------------------------------------
+
+
+class TrafficLog:
+    """The (task, bucket) set a serving session actually hit.
+
+    The :class:`~repro.serve.client.Client` records every submitted
+    workload's warm-up coordinates — eval task, label-batch bucket, and
+    the static options the compiled program depends on — as a dedup'd
+    set. ``save``/``load`` round-trip it as JSON (``serve_cv
+    --record-traffic`` / ``--warmup-from``), and :meth:`replay` feeds it
+    back through :meth:`~repro.serve.engine.CVEngine.warmup`, so a boot
+    sequence pre-compiles what yesterday's traffic needed.
+
+    Buckets are recorded *per workload*. Batch paths that coalesce many
+    workloads into one padded eval (sync ``gather``, the thread/async
+    gather windows) compile at the coalesced width, which depends on
+    traffic timing — replaying a per-workload log warms every individual
+    shape (and the deterministic permutation/RSA buckets) but may still
+    leave a first compile for a novel coalesced batch composition.
+    """
+
+    _TASKS = {
+        "binary": "binary",
+        "ridge": "ridge",
+        "ridge_multi": "ridge",
+        "multiclass": "multiclass",
+    }
+
+    def __init__(self, entries: Optional[Sequence[dict]] = None):
+        self._entries: set = set()
+        for e in entries or ():
+            self._entries.add(tuple(sorted(e.items())))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> list[dict]:
+        return sorted((dict(e) for e in self._entries), key=lambda d: (d["task"], d["bucket"]))
+
+    def _add(self, **fields) -> None:
+        self._entries.add(tuple(sorted(fields.items())))
+
+    def record(
+        self, workload: Workload, buckets: Sequence[int], stream_chunk: Optional[int] = None
+    ) -> None:
+        """Record one workload's warm-up coordinates.
+
+        ``stream_chunk`` (set by ``Client.stream``) additionally records
+        the chunk-sized null bucket a *streamed* permutation/RSA workload
+        evaluates at, so replay also warms the chunk program.
+        """
+        w = as_workload(workload)
+        chunk = None
+        if stream_chunk is not None and w.n_perm > 0:
+            chunk = min(bucket_size(stream_chunk, buckets), bucket_size(w.n_perm, buckets))
+        if w.kind == "cv":
+            task = self._TASKS.get(w.estimator)
+            if task is None:
+                return  # third-party estimators: no warm-up task mapping
+            if np.ndim(w.y) == 1:
+                width = 1
+            elif get_estimator(w.estimator).layout == "columns":
+                width = np.shape(w.y)[1]
+            else:
+                width = np.shape(w.y)[0]
+            self._add(
+                task=task,
+                bucket=bucket_size(width, buckets),
+                num_classes=w.num_classes if task == "multiclass" else 0,
+                adjust_bias=w.adjust_bias if task == "binary" else True,
+            )
+        elif w.kind == "permutation":
+            entry = dict(
+                task="permutation",
+                num_classes=w.num_classes if w.estimator == "multiclass" else 0,
+                metric=w.metric if w.estimator == "binary" else "accuracy",
+                adjust_bias=w.adjust_bias if w.estimator == "binary" else True,
+            )
+            self._add(bucket=bucket_size(w.n_perm, buckets), **entry)
+            if chunk is not None:
+                self._add(bucket=chunk, **entry)
+        elif w.kind == "rsa":
+            n_pairs = w.num_classes * (w.num_classes - 1) // 2
+            entry = dict(
+                task="rsa",
+                num_classes=w.num_classes,
+                dissimilarity=w.dissimilarity,
+                adjust_bias=w.adjust_bias,
+            )
+            if w.contrast == "binary" and n_pairs:
+                self._add(bucket=bucket_size(n_pairs, buckets), **entry)
+            else:
+                # confusion contrast: one Algorithm-2 row through the
+                # multiclass eval — warm that program, not the pair path
+                self._add(task="multiclass", bucket=1, num_classes=w.num_classes, adjust_bias=True)
+            if w.model_rdms is not None and w.n_perm > 0:
+                model_entry = dict(
+                    comparison=w.comparison,
+                    num_model_rdms=int(np.shape(w.model_rdms)[0]),
+                    **entry,
+                )
+                self._add(bucket=bucket_size(w.n_perm, buckets), **model_entry)
+                if chunk is not None:
+                    self._add(bucket=chunk, **model_entry)
+        # tune/grid build no plans: nothing to warm
+
+    # -- persistence -------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps({"schema": WORKLOAD_SCHEMA_VERSION, "entries": self.entries()}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TrafficLog":
+        d = json.loads(text)
+        if d.get("schema") != WORKLOAD_SCHEMA_VERSION:
+            raise ValueError(f"unsupported traffic-log schema {d.get('schema')!r}")
+        return cls(d["entries"])
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "TrafficLog":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- replay ------------------------------------------------------------
+
+    def replay(self, engine, dataset, *, pin: bool = False) -> list[dict]:
+        """Warm ``engine`` for ``dataset`` from the recorded traffic.
+
+        One :meth:`~repro.serve.engine.CVEngine.warmup` call per recorded
+        entry (pre-compilation dedups shared programs); returns the
+        warm-up summaries.
+        """
+        summaries = []
+        for e in self.entries():
+            kw = dict(
+                tasks=(e["task"],),
+                buckets=(e["bucket"],),
+                pin=pin,
+                num_classes=e.get("num_classes", 0),
+                adjust_bias=e.get("adjust_bias", True),
+            )
+            if e["task"] == "permutation":
+                kw["metric"] = e.get("metric", "accuracy")
+            if e["task"] == "rsa":
+                kw.update(
+                    dissimilarity=e.get("dissimilarity", "accuracy"),
+                    comparison=e.get("comparison", "spearman"),
+                    num_model_rdms=e.get("num_model_rdms", 0),
+                )
+                if kw["num_model_rdms"] and kw["num_classes"] < 2:
+                    kw["num_classes"] = 2
+            summaries.append(engine.warmup(dataset, **kw))
+        return summaries

@@ -1,6 +1,11 @@
 """Tests for repro.serve.aio: concurrent ragged clients against the async
 server, streamed permutation/RSA responses, warm-up's zero-recompile
-guarantee, and plan pinning under cache pressure."""
+guarantee, and plan pinning under cache pressure.
+
+Like tests/test_serve.py, this suite exercises the *deprecated request
+shims* on purpose — the async server must keep accepting them unchanged
+while tests/test_workload.py pins their parity with the Workload path
+(including async stream == sync stream event-for-event)."""
 
 import asyncio
 

@@ -1,5 +1,11 @@
 """Tests for the repro.serve subsystem: engine exactness, plan-cache
-eviction, micro-batcher round-trips, and the no-recompile guarantee."""
+eviction, micro-batcher round-trips, and the no-recompile guarantee.
+
+Deliberately written against the *deprecated request shims* (CVRequest &
+co.) and the legacy engine entry points: together with
+tests/test_workload.py (which pins shim results bit-identical to the
+unified Workload path), this suite is the compatibility contract that the
+One-API migration must not break."""
 
 import jax
 import jax.numpy as jnp
