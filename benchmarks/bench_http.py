@@ -1,0 +1,140 @@
+"""HTTP edge benchmark: wire overhead over the in-process transports.
+
+What the wire costs: the edge adds JSON encode/decode and a loopback TCP
+round-trip on top of the async server's gather window, so the honest
+metrics are per-request latency percentiles against the in-process sync
+client on the *same* warmed engine, batched-gather amortisation (one
+POST, many workloads), and streamed time-to-first-chunk. Rows
+deliberately avoid the "warm" substring — wire latencies swing with
+process/socket state far past compare.py's merge gate, which should
+gate only the stable compute-bound rows. The HTTP smoke CI job publishes
+its own latency JSON next to the bench-smoke artifact
+(``benchmarks/http_smoke.py``).
+"""
+
+from __future__ import annotations
+
+import time
+from statistics import median
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import percentiles, row
+from repro.core import folds as foldlib
+from repro.data import synthetic
+from repro.serve import Client, CVEngine, EdgeThread, HTTPClient, Workload
+
+
+def run(fast: bool = False):
+    rows = []
+    n, p, t_perm, reps = (96, 512, 32, 24) if fast else (192, 2048, 64, 48)
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n, p, num_classes=2, class_sep=2.0)
+    y = jnp.where(yc % 2 == 0, -1.0, 1.0)
+    folds = foldlib.kfold(n, 6, seed=0)
+
+    engine = CVEngine()
+    local = Client(engine)
+    with EdgeThread(engine, stream_chunk=t_perm) as edge:
+        client = HTTPClient(edge.url)
+
+        t0 = time.perf_counter()
+        handle = client.register(
+            np.asarray(x), (np.asarray(folds.te_idx), np.asarray(folds.tr_idx)), 1.0
+        )
+        t_reg = time.perf_counter() - t0
+        rows.append(
+            row(
+                f"http_register_N{n}_P{p}",
+                t_reg,
+                "wire registration incl. feature upload + fingerprint",
+            )
+        )
+        engine.warmup(handle, tasks=("binary", "permutation"), buckets=(1, t_perm), pin=True)
+
+        ys = [jnp.roll(y, i) for i in range(reps)]
+        jax.block_until_ready(ys)
+
+        def one(i):
+            return Workload(kind="cv", dataset=handle, y=ys[i % reps])
+
+        # -- single-submit latency: wire vs in-process, same warm engine ---
+        # (separate loops: interleaving the transports makes each measure
+        # the other's thread contention instead of its own path)
+        local.submit(one(0))
+        t_local = []
+        for i in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(local.submit(one(i)).values)
+            t_local.append(time.perf_counter() - t0)
+        client.submit(one(0))
+        t_wire = []
+        for i in range(reps):
+            t0 = time.perf_counter()
+            client.submit(one(i))  # response is host-side numpy already
+            t_wire.append(time.perf_counter() - t0)
+        p_local = percentiles(t_local, (50, 95))
+        p_wire = percentiles(t_wire, (50, 95))
+        rows.append(
+            row(
+                f"http_submit_N{n}_P{p}",
+                p_wire["p50"],
+                f"p95={p_wire['p95'] * 1e3:.1f}ms vs in-process "
+                f"p50={p_local['p50'] * 1e3:.1f}ms "
+                f"({p_wire['p50'] / p_local['p50']:.1f}x wire overhead)",
+            )
+        )
+
+        # -- batched gather: one POST amortises the round-trip -------------
+        batch = [one(i) for i in range(16)]
+        client.gather(batch)
+        t_batch = median(_timed(client.gather, batch) for _ in range(3))
+        rows.append(
+            row(
+                f"http_gather_16_N{n}_P{p}",
+                t_batch,
+                f"{16 / t_batch:.0f} req/s through one POST "
+                f"({t_batch / 16 * 1e3:.2f}ms/workload amortised)",
+            )
+        )
+
+        # -- SSE streaming: time-to-first-null-chunk -----------------------
+        stream_w = Workload(kind="permutation", dataset=handle, y=y, n_perm=4 * t_perm, seed=5)
+        list(client.stream(stream_w))  # prime chunk programs
+
+        def first_chunk():
+            t0 = time.perf_counter()
+            t_first = t_full = None
+            for ev in client.stream(stream_w):
+                if ev.kind == "null" and t_first is None:
+                    t_first = time.perf_counter() - t0
+            t_full = time.perf_counter() - t0
+            return t_first, t_full
+
+        runs = [first_chunk() for _ in range(3)]
+        t_first = median(r[0] for r in runs)
+        t_full = median(r[1] for r in runs)
+        rows.append(
+            row(
+                f"http_stream_first_chunk_T{4 * t_perm}",
+                t_first,
+                f"first {t_perm}/{4 * t_perm} null draws over SSE; "
+                f"full stream {t_full * 1e3:.1f}ms",
+            )
+        )
+        rows.append(
+            row(
+                "http_stats_roundtrip",
+                _timed(client.stats),
+                f"ops GET /v1/stats; engine compiles={engine.compile_count()}",
+            )
+        )
+        client.close()
+    return rows
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0

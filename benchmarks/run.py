@@ -17,6 +17,7 @@ warm-row latencies against ``benchmarks/baseline.json`` via
   bench_serve       — serving engine cold/warm + batch throughput
   bench_rsa         — RSA serving cold/warm + pairdist kernel
   bench_async       — async server: concurrent clients, streaming chunks
+  bench_http        — HTTP/SSE edge: wire overhead, gather, first chunk
 """
 
 from __future__ import annotations
@@ -37,6 +38,7 @@ from benchmarks import (
     bench_complexity,
     bench_cv,
     bench_eeg,
+    bench_http,
     bench_kernels,
     bench_multiclass,
     bench_perm,
@@ -55,6 +57,7 @@ MODULES = [
     ("serve(engine)", bench_serve),
     ("rsa(serve+kernel)", bench_rsa),
     ("async(serve.aio)", bench_async),
+    ("http(serve.http)", bench_http),
 ]
 
 

@@ -6,6 +6,7 @@
     PYTHONPATH=src python -m repro.launch.serve_cv --warmup --pin --async 8
     PYTHONPATH=src python -m repro.launch.serve_cv --record-traffic t.json
     PYTHONPATH=src python -m repro.launch.serve_cv --warmup-from t.json
+    PYTHONPATH=src python -m repro.launch.serve_cv --http 8000 --warmup --pin
 
 Builds a :class:`repro.serve.CVEngine` fronted by the unified
 :class:`repro.serve.Client`, registers a small fleet of datasets
@@ -28,6 +29,14 @@ against eviction). ``--record-traffic FILE`` dumps the (task, bucket)
 set the session served; ``--warmup-from FILE`` replays a recorded set at
 boot, warming the per-workload shapes yesterday's traffic needed. Reports
 requests/s and the engine's cache / compile statistics.
+
+With ``--http PORT`` the process becomes a network service instead of a
+local replay: datasets register, warm-up runs as requested, then an
+:class:`repro.serve.HTTPEdge` serves ``Workload`` JSON over HTTP —
+batched results at ``POST /v1/workloads``, SSE progress streams at
+``POST /v1/workloads/stream``, wire-side dataset registration at ``POST
+/v1/datasets`` — until interrupted. ``--record-traffic`` composes: the
+(task, bucket) set observed *over the wire* is dumped on shutdown.
 """
 
 from __future__ import annotations
@@ -208,6 +217,40 @@ async def replay_async(engine, workloads, n_clients, perm_demo=None):
     assert all(r is not None for r in results)
 
 
+def serve_http(engine, args, record):
+    """Expose the engine over the HTTP/SSE edge until interrupted."""
+    import signal
+
+    from repro.serve.http import HTTPEdge
+
+    # Process supervisors (systemd, docker stop, k8s) stop services with
+    # SIGTERM; route it through KeyboardInterrupt so the shutdown path —
+    # including the --record-traffic dump below — runs either way.
+    signal.signal(signal.SIGTERM, signal.default_int_handler)
+
+    async def run_edge():
+        edge = HTTPEdge(engine, host=args.http_host, port=args.http,
+                        record=record)
+        await edge.start()
+        print(f"[serve_cv] http edge listening on {edge.url} "
+              f"(POST /v1/workloads, /v1/workloads/stream, /v1/datasets; "
+              f"GET /v1/stats, /v1/datasets, /healthz)", flush=True)
+        try:
+            await edge.serve_forever()
+        finally:
+            await edge.stop()
+
+    try:
+        asyncio.run(run_edge())
+    except KeyboardInterrupt:
+        print("[serve_cv] http edge shut down")
+    finally:
+        if args.record_traffic and record is not None:
+            record.save(args.record_traffic)
+            print(f"[serve_cv] recorded {len(record)} (task, bucket) "
+                  f"entries -> {args.record_traffic}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -238,6 +281,12 @@ def main():
                     help="replay a recorded traffic set at boot "
                     "(pre-builds plans + pre-compiles exactly the "
                     "programs that traffic needed)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the Workload API over HTTP/SSE on this "
+                    "port (after any --warmup/--warmup-from) instead of "
+                    "replaying a local stream; 0 picks a free port")
+    ap.add_argument("--http-host", default="127.0.0.1",
+                    help="bind address for --http (default loopback)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rsa", action="store_true",
@@ -264,6 +313,10 @@ def main():
         warmup_from_traffic(engine, args.warmup_from, datasets, args.pin)
     if args.warmup:
         warmup_engine(engine, args, datasets)
+
+    if args.http is not None:
+        serve_http(engine, args, record)
+        return
 
     def ready(rs):
         jax.block_until_ready([r.values for r in rs if hasattr(r, "values")]

@@ -25,8 +25,12 @@ productises that behind a single declarative surface:
             driver, threaded queue server.
   aio       AsyncEngineServer — asyncio front-end with gather-window
             micro-batching and streamed permutation/RSA responses.
+  http      HTTPEdge — the HTTP/SSE wire over the async server (Workload
+            JSON in, result-or-error batches and SSE ProgressEvent
+            streams out), plus the HTTPClient transport mirror.
 
-Entry point: ``python -m repro.launch.serve_cv``.
+Entry point: ``python -m repro.launch.serve_cv`` (``--http PORT`` for the
+network edge).
 """
 
 from repro.serve.aio import AsyncEngineServer, ProgressEvent  # noqa: F401
@@ -48,6 +52,12 @@ from repro.serve.batching import MicroBatcher, bucket_size  # noqa: F401
 from repro.serve.cache import CacheStats, PlanCache  # noqa: F401
 from repro.serve.client import Client  # noqa: F401
 from repro.serve.engine import CVEngine, EngineConfig  # noqa: F401
+from repro.serve.http import (  # noqa: F401
+    EdgeThread,
+    HTTPClient,
+    HTTPEdge,
+    WireError,
+)
 from repro.serve.workload import (  # noqa: F401
     WORKLOAD_SCHEMA_VERSION,
     DatasetHandle,

@@ -43,9 +43,9 @@ import functools
 from concurrent.futures import ThreadPoolExecutor
 from typing import AsyncIterator, Optional
 
-from repro.serve.api import Request, serve
+from repro.serve.api import Request
 from repro.serve.engine import CVEngine
-from repro.serve.workload import ProgressEvent, as_workload, stream_workload
+from repro.serve.workload import ProgressEvent, as_workload, run_workloads, stream_workload
 
 __all__ = ["ProgressEvent", "AsyncEngineServer"]
 
@@ -145,6 +145,17 @@ class AsyncEngineServer:
         await self._queue.put((request, fut))
         return await fut
 
+    async def register(self, x, folds, lam: float, mode: str = "auto"):
+        """Register a dataset on the engine thread; returns its handle.
+
+        Fingerprinting hashes the feature bytes, so it runs on the
+        executor like every other engine touch — the event loop never
+        blocks on a large registration (the HTTP edge's ``POST
+        /v1/datasets`` route lands here).
+        """
+        self._check_running()
+        return await self._run(self.engine.register, x, folds, lam, mode=mode)
+
     async def stream(self, request: Request) -> AsyncIterator[ProgressEvent]:
         """Async iterator of :class:`ProgressEvent`\\ s for one workload.
 
@@ -203,7 +214,10 @@ class AsyncEngineServer:
         requests = [req for req, _ in batch]
         futures = [fut for _, fut in batch]
         try:
-            responses = await self._run(serve, self.engine, requests)
+            # Per-entry result-or-error: a malformed workload (or an
+            # unknown/evicted dataset handle) fails only its own future,
+            # never sibling submitters sharing the gather window.
+            responses = await self._run(run_workloads, self.engine, requests, return_errors=True)
         except Exception as e:  # noqa: BLE001 - fanned out to submitters
             for fut in futures:
                 if not fut.done():
@@ -211,6 +225,9 @@ class AsyncEngineServer:
             return
         for fut, resp in zip(futures, responses):
             if not fut.done():
-                fut.set_result(resp)
+                if isinstance(resp, Exception):
+                    fut.set_exception(resp)
+                else:
+                    fut.set_result(resp)
         self.batches_served += 1
         self.requests_served += len(batch)

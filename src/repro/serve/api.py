@@ -316,12 +316,17 @@ class EngineServer:
             requests = [req for req, _ in batch]
             futures = [fut for _, fut in batch]
             try:
-                responses = serve(self.engine, requests)
+                # Per-entry result-or-error: one bad workload must not abort
+                # sibling submitters coalesced into the same batch.
+                responses = run_workloads(self.engine, requests, return_errors=True)
             except Exception as e:  # noqa: BLE001 - fanned out
                 for fut in futures:
                     fut.set_exception(e)
                 continue
             for fut, resp in zip(futures, responses):
-                fut.set_result(resp)
+                if isinstance(resp, Exception):
+                    fut.set_exception(resp)
+                else:
+                    fut.set_result(resp)
             self.batches_served += 1
             self.requests_served += len(batch)

@@ -113,25 +113,54 @@ class Client:
             return self._thread_server().submit(w)
         return self._async_server().submit(w)
 
-    def gather(self, workloads: Sequence):
+    def gather(self, workloads: Sequence, *, return_errors: bool = False):
         """Submit a batch; return (or await) the aligned response list.
 
         The sync transport coalesces the whole batch through one driver
         call (maximal micro-batching); thread/async submit individually so
         the batch interleaves with other clients' traffic.
+
+        With ``return_errors=True`` a failing workload yields its
+        exception object in the corresponding slot instead of aborting the
+        batch: sibling workloads still get real responses. The default
+        (``False``) keeps raise-on-first-error semantics.
         """
-        ws = [as_workload(w) for w in workloads]
-        for w in ws:
-            self._note(w)
+        conv: list = []
+        for w in workloads:
+            try:
+                wl = as_workload(w)
+                self._note(wl)
+                conv.append(wl)
+            except Exception as e:  # noqa: BLE001 - surfaced per entry
+                if not return_errors:
+                    raise
+                conv.append(e)
+        live = [(i, w) for i, w in enumerate(conv) if not isinstance(w, Exception)]
+        results = list(conv)  # conversion errors stay in their slots
+
         if self.transport == "sync":
-            return run_workloads(self.engine, ws)
+            out = run_workloads(self.engine, [w for _, w in live], return_errors=return_errors)
+            for (i, _), r in zip(live, out):
+                results[i] = r
+            return results
         if self.transport == "thread":
-            futures = [self._thread_server().submit(w) for w in ws]
-            return [f.result() for f in futures]
+            futures = [(i, self._thread_server().submit(w)) for i, w in live]
+            for i, f in futures:
+                if return_errors:
+                    e = f.exception()
+                    results[i] = e if e is not None else f.result()
+                else:
+                    results[i] = f.result()
+            return results
 
         async def _gather():
             server = self._async_server()
-            return list(await asyncio.gather(*(server.submit(w) for w in ws)))
+            out = await asyncio.gather(
+                *(server.submit(w) for _, w in live), return_exceptions=return_errors
+            )
+            for (i, _), r in zip(live, out):
+                results[i] = r
+            return results
 
         return _gather()
 

@@ -743,7 +743,7 @@ def _rdm_memo_key(plan_key, w: Workload):
     return (base, fastcv.fingerprint(jnp.asarray(w.y)), w.contrast, diss, adj, w.num_classes)
 
 
-def run_workloads(engine, workloads: Sequence) -> list:
+def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -> list:
     """Serve a batch of workloads; responses align with ``workloads``.
 
     Same-plan CV label queries coalesce into one padded jitted eval per
@@ -752,10 +752,25 @@ def run_workloads(engine, workloads: Sequence) -> list:
     same (plan, labels) skips the fold solves entirely); permutation, tune,
     and grid workloads route to their engine entry points. Legacy request
     objects are accepted and converted via :func:`as_workload`.
+
+    With ``return_errors=True`` a failing workload (conversion error,
+    unknown/evicted dataset handle, eval failure) yields its *exception
+    object* in the corresponding slot instead of aborting the batch, so
+    sibling workloads — including other clients' traffic coalesced into
+    the same gather window — still get served. The batch transports
+    (:class:`~repro.serve.api.EngineServer`,
+    :class:`~repro.serve.aio.AsyncEngineServer`, and the HTTP edge) run in
+    this mode and fan each entry's result-or-error back to its own
+    submitter.
     """
-    workloads = [as_workload(w) for w in workloads]
-    responses: list = [None] * len(workloads)
+    raw = list(workloads)
+    responses: list = [None] * len(raw)
     plan_memo: dict = {}
+
+    def fail(i, e: Exception):
+        if not return_errors:
+            raise e
+        responses[i] = e
 
     def plan_for(dataset, with_train_block: bool):
         if isinstance(dataset, DatasetHandle):
@@ -776,80 +791,101 @@ def run_workloads(engine, workloads: Sequence) -> list:
     # -- group CV workloads by (plan, estimator, static opts) --------------
     groups: dict = {}
     rsa_groups: dict = {}
-    for i, w in enumerate(workloads):
-        if w.kind == "cv":
-            spec = get_estimator(w.estimator)
-            opts = w.estimator_opts()
-            key, plan = plan_for(w.dataset, spec.needs_train(opts))
-            gkey = (key, w.estimator, spec.static_key(opts))
-            groups.setdefault(gkey, (plan, spec, opts, []))[3].append((i, w))
-        elif w.kind == "rsa":
-            needs_train = w.contrast == "multiclass" or w.adjust_bias
-            key, plan = plan_for(w.dataset, needs_train)
-            if w.contrast == "binary":
-                gkey = (key, "binary", w.dissimilarity, w.adjust_bias, w.num_classes)
-            else:
-                gkey = (key, "multiclass", None, None, w.num_classes)
-            rsa_groups.setdefault(gkey, (plan, []))[1].append((i, w))
-        elif w.kind == "permutation":
-            needs_train = w.estimator == "multiclass" or w.adjust_bias
-            key, plan = plan_for(w.dataset, needs_train)
-            if w.estimator == "multiclass":
-                res = engine.permutation_multiclass(
-                    plan,
-                    jnp.asarray(w.y),
-                    w.n_perm,
-                    jax.random.PRNGKey(w.seed),
-                    num_classes=w.num_classes,
+    for i, obj in enumerate(raw):
+        try:
+            w = as_workload(obj)
+            if w.kind == "cv":
+                spec = get_estimator(w.estimator)
+                opts = w.estimator_opts()
+                key, plan = plan_for(w.dataset, spec.needs_train(opts))
+                gkey = (key, w.estimator, spec.static_key(opts))
+                groups.setdefault(gkey, (plan, spec, opts, []))[3].append((i, w))
+            elif w.kind == "rsa":
+                needs_train = w.contrast == "multiclass" or w.adjust_bias
+                key, plan = plan_for(w.dataset, needs_train)
+                if w.contrast == "binary":
+                    gkey = (key, "binary", w.dissimilarity, w.adjust_bias, w.num_classes)
+                else:
+                    gkey = (key, "multiclass", None, None, w.num_classes)
+                rsa_groups.setdefault(gkey, (plan, []))[1].append((i, w))
+            elif w.kind == "permutation":
+                needs_train = w.estimator == "multiclass" or w.adjust_bias
+                key, plan = plan_for(w.dataset, needs_train)
+                if w.estimator == "multiclass":
+                    res = engine.permutation_multiclass(
+                        plan,
+                        jnp.asarray(w.y),
+                        w.n_perm,
+                        jax.random.PRNGKey(w.seed),
+                        num_classes=w.num_classes,
+                    )
+                else:
+                    res = engine.permutation_binary(
+                        plan,
+                        jnp.asarray(w.y),
+                        w.n_perm,
+                        jax.random.PRNGKey(w.seed),
+                        metric=w.metric,
+                        adjust_bias=w.adjust_bias,
+                    )
+                responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
+            elif w.kind == "tune":
+                x = w.x if w.x is not None else w.dataset.x
+                responses[i] = TuneResponse(
+                    engine.tune(x, w.y, lambdas=w.lambdas, criterion=w.criterion)
                 )
-            else:
-                res = engine.permutation_binary(
-                    plan,
-                    jnp.asarray(w.y),
-                    w.n_perm,
-                    jax.random.PRNGKey(w.seed),
-                    metric=w.metric,
-                    adjust_bias=w.adjust_bias,
-                )
-            responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
-        elif w.kind == "tune":
-            x = w.x if w.x is not None else w.dataset.x
-            responses[i] = TuneResponse(
-                engine.tune(x, w.y, lambdas=w.lambdas, criterion=w.criterion)
-            )
-        elif w.kind == "grid":
-            folds, lam = _grid_folds_lam(engine, w.dataset)
-            xs, yv = jnp.asarray(w.xs), jnp.asarray(w.y)
-            grid = multidim.cv_grid(xs, yv, folds, lam, adjust_bias=w.adjust_bias)
-            responses[i] = GridResponse(grid)
-        else:  # unreachable: validate() gates kinds
-            raise ValueError(f"unknown workload kind {w.kind!r}")
+            elif w.kind == "grid":
+                folds, lam = _grid_folds_lam(engine, w.dataset)
+                xs, yv = jnp.asarray(w.xs), jnp.asarray(w.y)
+                grid = multidim.cv_grid(xs, yv, folds, lam, adjust_bias=w.adjust_bias)
+                responses[i] = GridResponse(grid)
+            else:  # unreachable: validate() gates kinds
+                raise ValueError(f"unknown workload kind {w.kind!r}")
+        except Exception as e:  # noqa: BLE001 - isolated per workload
+            fail(i, e)
 
     # -- one coalesced eval per CV group -----------------------------------
     batcher = engine.batcher
     for (key, estimator, _static), (plan, spec, opts, members) in groups.items():
-        ys = [jnp.asarray(w.y) for _, w in members]
-        run = batcher.run_columns if spec.layout == "columns" else batcher.run_rows
-        outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, **opts))
+        try:
+            ys = [jnp.asarray(w.y) for _, w in members]
+            run = batcher.run_columns if spec.layout == "columns" else batcher.run_rows
+            outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, **opts))
+        except Exception as e:  # noqa: BLE001 - the whole group shares the eval
+            for i, _w in members:
+                fail(i, e)
+            continue
         for (i, w), values in zip(members, outs):
-            y = jnp.asarray(w.y)
-            y_te = spec.test_targets(y, plan, opts)
-            responses[i] = CVResponse(estimator, values, y_te, spec.score(values, y_te, opts), key)
+            try:
+                y = jnp.asarray(w.y)
+                y_te = spec.test_targets(y, plan, opts)
+                score = spec.score(values, y_te, opts)
+                responses[i] = CVResponse(estimator, values, y_te, score, key)
+            except Exception as e:  # noqa: BLE001 - per-member post-processing
+                fail(i, e)
 
     # -- RSA: contrast columns ride the same coalesced label-batch path ----
     for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
-        rdms = _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members)
+        try:
+            rdms = _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members)
+        except Exception as e:  # noqa: BLE001 - the whole group shares the eval
+            for i, _w in members:
+                fail(i, e)
+            continue
         for (i, w), (rdm, vals) in zip(members, rdms):
-            scores = null = p = None
-            if w.model_rdms is not None:
-                scores, null, p = engine.compare_rdms(
-                    rdm,
-                    jnp.asarray(w.model_rdms),
-                    w.comparison,
-                    w.n_perm,
-                    jax.random.PRNGKey(w.seed),
-                )
-            responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
+            try:
+                scores = null = p = None
+                if w.model_rdms is not None:
+                    scores, null, p = engine.compare_rdms(
+                        rdm,
+                        jnp.asarray(w.model_rdms),
+                        w.comparison,
+                        w.n_perm,
+                        jax.random.PRNGKey(w.seed),
+                    )
+                responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
+            except Exception as e:  # noqa: BLE001 - per-member model scoring
+                fail(i, e)
     return responses
 
 

@@ -1,0 +1,216 @@
+"""Property-based tests (hypothesis) for the Workload wire schema.
+
+Two invariants back the HTTP edge's claim that Workload JSON is *the*
+wire schema:
+
+  * round-trip exactness — for any valid spec (every kind, random
+    estimators / handles / options), ``from_dict(to_dict(w))`` through
+    real JSON text reproduces ``to_dict`` byte-for-byte;
+  * eager rejection — any corrupted dict raises a clear Python
+    exception at ``from_dict``/construction time, never a shape failure
+    inside jit.
+
+The builders and corruption table live above the hypothesis import on
+purpose: they are plain Python, exercised deterministically by the wire
+tests too, while hypothesis drives them across the whole option space
+in CI (the ``[test]`` extra installs it; environments without it skip).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import folds as foldlib
+from repro.serve import DatasetHandle, DatasetSpec, Workload
+from repro.serve.workload import KINDS
+
+N, P, K = 16, 5, 4
+_X = np.random.default_rng(0).normal(size=(N, P))
+_FOLDS = foldlib.kfold(N, K, seed=0)
+
+_ESTIMATORS = ("binary", "ridge", "multiclass", "ridge_multi")
+_MODES = ("auto", "primal", "dual")
+
+
+def _dataset(use_handle: bool, lam: float, mode: str, with_x: bool = True):
+    if use_handle:
+        return DatasetHandle(
+            key=("fp-x", "fp-te", "fp-tr", float(lam), mode, True),
+            n=N, p=P, lam=float(lam), mode=mode,
+        )
+    return DatasetSpec(_X if with_x else None, _FOLDS, float(lam), mode)
+
+
+def _build_workload(kind, *, seed, use_handle, lam, mode, estimator, width,
+                    num_classes, n_perm, wseed, metric, contrast,
+                    dissimilarity, comparison, with_models, criterion,
+                    adjust_bias) -> Workload:
+    """One *valid* Workload from drawn primitives (any kind/options)."""
+    rng = np.random.default_rng(seed)
+    ds = _dataset(use_handle, lam, mode)
+    if kind == "cv":
+        if estimator == "binary":
+            y = rng.choice([-1.0, 1.0], size=(N,) if width == 0 else (N, width))
+            return Workload(kind="cv", dataset=ds, y=y, adjust_bias=adjust_bias)
+        if estimator == "ridge":
+            y = rng.normal(size=(N,) if width == 0 else (N, width))
+            return Workload(kind="cv", dataset=ds, y=y, estimator="ridge")
+        if estimator == "multiclass":
+            y = rng.integers(0, num_classes, size=(N,))
+            return Workload(kind="cv", dataset=ds, y=y, estimator="multiclass",
+                            num_classes=num_classes)
+        y = rng.normal(size=(N, width + 1))  # ridge_multi: (N, Q) targets
+        return Workload(kind="cv", dataset=ds, y=y, estimator="ridge_multi")
+    if kind == "permutation":
+        if estimator in ("multiclass",):
+            y = rng.integers(0, num_classes, size=(N,))
+            return Workload(kind="permutation", dataset=ds, y=y,
+                            estimator="multiclass", num_classes=num_classes,
+                            n_perm=n_perm, seed=wseed)
+        y = rng.choice([-1.0, 1.0], size=(N,))
+        return Workload(kind="permutation", dataset=ds, y=y, n_perm=n_perm,
+                        seed=wseed, metric=metric, adjust_bias=adjust_bias)
+    if kind == "rsa":
+        y = rng.integers(0, num_classes, size=(N,))
+        models = rng.normal(size=(2, num_classes, num_classes)) if with_models else None
+        return Workload(kind="rsa", dataset=ds, y=y, num_classes=num_classes,
+                        contrast=contrast, dissimilarity=dissimilarity,
+                        comparison=comparison, model_rdms=models,
+                        n_perm=n_perm if with_models else 0, seed=wseed,
+                        adjust_bias=adjust_bias)
+    if kind == "tune":
+        y = rng.normal(size=(N,))
+        lambdas = rng.uniform(0.1, 5.0, size=4) if with_models else None
+        return Workload(kind="tune", x=_X, y=y, lambdas=lambdas,
+                        criterion=criterion)
+    xs = rng.normal(size=(2, N, P))
+    y = rng.choice([-1.0, 1.0], size=(N,))
+    return Workload(kind="grid", dataset=_dataset(use_handle, lam, mode, with_x=False),
+                    y=y, xs=xs, adjust_bias=adjust_bias)
+
+
+# -- corruptions: each mutation is invalid for EVERY workload kind ----------
+
+
+def _corrupt_schema(d):
+    d["schema"] = d.get("schema", 1) + 41
+
+
+def _corrupt_drop_schema(d):
+    d.pop("schema", None)
+
+
+def _corrupt_kind(d):
+    d["kind"] = "bogus-kind"
+
+
+def _corrupt_drop_kind(d):
+    d.pop("kind", None)
+
+
+def _corrupt_drop_targets(d):
+    d["y"] = None  # every kind requires targets / labels
+
+
+def _corrupt_drop_dataset(d):
+    d["dataset"] = None  # cv/permutation/rsa/grid need it...
+    d["x"] = None  # ...and tune needs inline features
+
+
+def _corrupt_malformed_y(d):
+    if d["kind"] == "cv":
+        # wrong length for every estimator; also breaks ±1 coding (binary),
+        # the integer dtype (multiclass), and the (N, Q) contract (ridge_multi)
+        d["y"] = {"__array__": [0.5] * 7, "dtype": "float64"}
+    elif d["kind"] == "permutation":
+        d["y"] = {"__array__": [[1.0, -1.0]] * 2, "dtype": "float64"}  # 2-D
+    elif d["kind"] == "rsa":
+        d["y"] = {"__array__": [0.5] * N, "dtype": "float64"}  # non-integer labels
+    elif d["kind"] == "tune":
+        d["y"] = {"__array__": [1.0] * (N + 3), "dtype": "float64"}  # length != N
+    else:  # grid
+        d["xs"] = {"__array__": [[1.0] * P] * N, "dtype": "float64"}  # not (Q, N, P)
+
+
+def _corrupt_options(d):
+    if d["kind"] == "cv":
+        d["estimator"] = "no-such-estimator"
+    elif d["kind"] == "permutation":
+        d["n_perm"] = 0
+    elif d["kind"] == "rsa":
+        d["num_classes"] = 0
+    elif d["kind"] == "tune":
+        d["criterion"] = "nonsense"
+    else:  # grid
+        d["y"] = None
+
+
+_CORRUPTIONS = (
+    ("wrong-schema-version", _corrupt_schema),
+    ("missing-schema", _corrupt_drop_schema),
+    ("unknown-kind", _corrupt_kind),
+    ("missing-kind", _corrupt_drop_kind),
+    ("missing-targets", _corrupt_drop_targets),
+    ("missing-dataset", _corrupt_drop_dataset),
+    ("malformed-targets", _corrupt_malformed_y),
+    ("malformed-options", _corrupt_options),
+)
+
+# ---------------------------------------------------------------------------
+# hypothesis drives the builders across the whole option space
+# ---------------------------------------------------------------------------
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_SETTINGS = dict(max_examples=30, deadline=None, derandomize=True)
+
+
+@st.composite
+def workloads(draw):
+    return _build_workload(
+        draw(st.sampled_from(KINDS)),
+        seed=draw(st.integers(min_value=0, max_value=2**16)),
+        use_handle=draw(st.booleans()),
+        lam=draw(st.floats(min_value=0.01, max_value=50.0)),
+        mode=draw(st.sampled_from(_MODES)),
+        estimator=draw(st.sampled_from(_ESTIMATORS)),
+        width=draw(st.integers(min_value=0, max_value=3)),
+        num_classes=draw(st.integers(min_value=2, max_value=4)),
+        n_perm=draw(st.integers(min_value=1, max_value=40)),
+        wseed=draw(st.integers(min_value=0, max_value=2**31 - 1)),
+        metric=draw(st.sampled_from(("accuracy", "auc"))),
+        contrast=draw(st.sampled_from(("binary", "multiclass"))),
+        dissimilarity=draw(st.sampled_from(("accuracy", "contrast"))),
+        comparison=draw(st.sampled_from(("spearman", "kendall", "pearson", "cosine"))),
+        with_models=draw(st.booleans()),
+        criterion=draw(st.sampled_from(("mse", "error"))),
+        adjust_bias=draw(st.booleans()),
+    )
+
+
+@given(workloads())
+@settings(**_SETTINGS)
+def test_workload_schema_roundtrips_exactly(w):
+    """∀ valid specs: from_dict(to_dict(w)) through real JSON text is a
+    byte-exact fixed point of to_dict (and preserves dataset handles)."""
+    d = w.to_dict()
+    wire = json.loads(json.dumps(d))  # through actual wire bytes
+    back = Workload.from_dict(wire)
+    assert back.to_dict() == d
+    assert back.kind == w.kind and back.estimator == w.estimator
+    if isinstance(w.dataset, DatasetHandle):
+        assert back.dataset == w.dataset
+
+
+@given(workloads(), st.integers(min_value=0, max_value=len(_CORRUPTIONS) - 1))
+@settings(**_SETTINGS)
+def test_fuzzed_invalid_dicts_raise_eager_validation(w, idx):
+    """∀ valid specs × corruptions: the mutated dict raises a clear eager
+    exception at from_dict — never an in-jit shape failure later."""
+    _name, corrupt = _CORRUPTIONS[idx]
+    d = json.loads(json.dumps(w.to_dict()))
+    corrupt(d)
+    with pytest.raises((ValueError, TypeError, KeyError)):
+        Workload.from_dict(d)
