@@ -130,6 +130,14 @@ def run(fast: bool = False):
                 f"ops GET /v1/stats; engine compiles={engine.compile_count()}",
             )
         )
+        text = client.metrics_text()
+        rows.append(
+            row(
+                "http_metrics_roundtrip",
+                _timed(client.metrics_text),
+                f"ops GET /v1/metrics; {len(text.splitlines())} exposition lines",
+            )
+        )
         client.close()
     return rows
 

@@ -1,0 +1,202 @@
+"""Latency-budget benchmark: warm per-stage stage breakdown via tracing.
+
+The observability layer answers "where do a request's milliseconds go?";
+this module turns that answer into benchmark rows. For every workload
+kind (cv, permutation, rsa, tune, grid) it submits warm requests with
+tracing enabled and reports the end-to-end median plus the median of
+every traced stage, so a regression is attributable to *a stage* —
+plan_build leaking into the warm path, eval losing its compiled program,
+encode suddenly copying — rather than to an opaque total.
+
+Row naming is deliberate: ``latency_{kind}_warm_total`` and
+``latency_{kind}_warm_eval`` carry the "warm" tag so compare.py gates
+them (stable, compute-bound); the per-stage rows
+(``latency_{kind}_stage_{stage}``) and the wire set
+(``latency_http_...``) avoid it — micro-stage and socket timings swing
+far past the 1.5x gate on shared CI runners and are for attribution,
+not gating. The ``latency_tracing_overhead`` row pins the acceptance
+claim that tracing-off submissions pay no measurable cost.
+
+Standalone (CI's bench-smoke artifact):
+
+    PYTHONPATH=src:. python benchmarks/bench_latency.py --fast --json out.json
+"""
+
+from __future__ import annotations
+
+import time
+from statistics import median
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import folds as foldlib
+from repro.data import synthetic
+from repro.serve import Client, CVEngine, DatasetSpec, Workload
+from repro.serve.http import EdgeThread, HTTPClient
+
+
+def _kind_workloads(handle, f, x, y, yc, t_perm, lam):
+    return {
+        "cv": Workload(kind="cv", dataset=handle, y=y, estimator="binary"),
+        "permutation": Workload(
+            kind="permutation", dataset=handle, y=y, n_perm=t_perm, seed=0
+        ),
+        "rsa": Workload(
+            kind="rsa",
+            dataset=handle,
+            y=yc,
+            num_classes=3,
+            model_rdms=jnp.ones((1, 3, 3)),
+            n_perm=t_perm,
+            seed=1,
+        ),
+        "tune": Workload(kind="tune", x=x, y=y),
+        "grid": Workload(
+            kind="grid", dataset=DatasetSpec(None, f, lam), y=y, xs=jnp.stack([x])
+        ),
+    }
+
+
+def _stage_rows(prefix, reps_timings, totals, rows, gate_total=True):
+    """Median total + per-stage medians over a list of timings dicts."""
+    t_total = median(totals)
+    stages = sorted({s for t in reps_timings for s in t})
+    budget = {s: median(t.get(s, 0.0) for t in reps_timings) for s in stages}
+    covered = sum(budget.values()) / t_total if t_total else 0.0
+    if gate_total:
+        rows.append(
+            row(
+                f"{prefix}_warm_total",
+                t_total,
+                f"stage sum covers {covered * 100:.1f}% of end-to-end",
+            )
+        )
+        eval_s = budget.get("eval", 0.0) + budget.get("null_chunk", 0.0)
+        rows.append(
+            row(
+                f"{prefix}_warm_eval",
+                eval_s,
+                f"eval+null_chunk share {eval_s / t_total * 100:.0f}%",
+            )
+        )
+    else:
+        rows.append(
+            row(
+                f"{prefix}_total",
+                t_total,
+                f"stage sum covers {covered * 100:.1f}% of end-to-end",
+            )
+        )
+    for stage in stages:
+        rows.append(
+            row(
+                f"{prefix}_stage_{stage}",
+                budget[stage],
+                f"{budget[stage] / t_total * 100:.1f}% of {prefix} budget",
+            )
+        )
+
+
+def run(fast: bool = False):
+    rows = []
+    n, p, t_perm, reps = (96, 512, 32, 12) if fast else (192, 2048, 128, 32)
+    k, lam = 6, 1.0
+    x, yc = synthetic.make_classification(
+        jax.random.PRNGKey(0), n, p, num_classes=3, class_sep=2.0
+    )
+    y = jnp.where(yc % 2 == 0, -1.0, 1.0)
+    f = foldlib.kfold(n, k, seed=0)
+
+    engine = CVEngine()
+    client = Client(engine)
+    handle = client.register(x, f, lam)
+    kinds = _kind_workloads(handle, f, x, y, yc, t_perm, lam)
+
+    # Warm every plan + program with tracing OFF, then measure the
+    # tracing-off warm path as the overhead reference.
+    for w in kinds.values():
+        client.submit(w)
+    t_off = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(client.submit(kinds["cv"]).values)
+        t_off.append(time.perf_counter() - t0)
+
+    engine.enable_tracing(ring=max(64, reps * len(kinds)))
+    compiles = engine.compile_count()
+    for kind, w in kinds.items():
+        timings, totals = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            resp = client.submit(w)
+            totals.append(time.perf_counter() - t0)
+            timings.append(resp.timings)
+        _stage_rows(f"latency_{kind}", timings, totals, rows)
+    assert engine.compile_count() == compiles, "tracing must not add compiles"
+
+    # Overhead of the *instrumentation points* with tracing back off:
+    # the acceptance bar is <2% on warm medians.
+    engine.disable_tracing()
+    t_off2 = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(client.submit(kinds["cv"]).values)
+        t_off2.append(time.perf_counter() - t0)
+    rows.append(
+        row(
+            "latency_tracing_overhead",
+            abs(median(t_off2) - median(t_off)),
+            f"off-before={median(t_off) * 1e3:.2f}ms "
+            f"off-after={median(t_off2) * 1e3:.2f}ms "
+            f"(ratio {median(t_off2) / median(t_off):.3f})",
+        )
+    )
+
+    # -- the same budget over the wire (not gated: socket-noisy) ----------
+    http_engine = CVEngine()
+    with EdgeThread(http_engine) as edge, HTTPClient(edge.url) as hclient:
+        hh = hclient.register(
+            np.asarray(x), (np.asarray(f.te_idx), np.asarray(f.tr_idx)), lam
+        )
+        wcv = Workload(kind="cv", dataset=hh, y=y, estimator="binary")
+        hclient.submit(wcv)  # warm
+        http_engine.enable_tracing()
+        timings, totals = [], []
+        for _ in range(max(6, reps // 2)):
+            t0 = time.perf_counter()
+            resp = hclient.submit(wcv)
+            totals.append(time.perf_counter() - t0)
+            timings.append(resp.timings)
+        _stage_rows("latency_http_cv", timings, totals, rows, gate_total=False)
+    return rows
+
+
+def main() -> None:
+    """Standalone entry for CI's bench-smoke artifact (run.py embeds the
+    same rows under the ``latency(stage-budget)`` section)."""
+    import argparse
+    import json as json_mod
+
+    from benchmarks.common import print_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    print("name,us_per_call,derived")
+    print_rows(rows)
+    if args.json:
+        payload = {
+            "meta": {"backend": jax.default_backend(), "fast": bool(args.fast)},
+            "rows": [dict(section="latency(stage-budget)", **r) for r in rows],
+        }
+        with open(args.json, "w") as fh:
+            json_mod.dump(payload, fh, indent=2)
+
+
+if __name__ == "__main__":
+    main()

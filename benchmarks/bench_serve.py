@@ -72,4 +72,20 @@ def run(fast: bool = False):
 
         secs = timeit(cv_batch, warmup=1, repeats=5)
         rows.append(row(f"serve_cv_warm_batch{bs}_N{n}_P{p}", secs, f"{bs / secs:.0f} req/s"))
+
+    # -- handle-scoped stats: the per-dataset residency view ---------------
+    # (not gated: a dict walk, timed for the record; the derived column
+    # documents what the serving session actually held resident)
+    t0 = time.perf_counter()
+    per = engine.dataset_stats()
+    t_stats = time.perf_counter() - t0
+    (rec,) = per.values()
+    rows.append(
+        row(
+            "serve_handle_stats",
+            t_stats,
+            f"1 dataset: served={rec['served']} "
+            f"plan_bytes={rec['plan_bytes']} resident={rec['resident']}",
+        )
+    )
     return rows

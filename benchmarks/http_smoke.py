@@ -15,7 +15,10 @@ everything the in-process conformance suite (tests/test_http.py) pins:
   * the warmed eval families (binary/ridge/multiclass CV, permutation
     at the default chunk) serve first wire traffic with **0 compiles**
     (``--expect-warm``; proves ``--warmup`` covered real traffic), and a
-    full warm replay of every kind adds 0 compiles.
+    full warm replay of every kind adds 0 compiles;
+  * ``GET /v1/metrics`` renders parseable Prometheus text with every
+    stage-latency histogram pre-declared, and ``compile_events`` stays
+    flat across a scrape → warm submit → scrape cycle.
 
 Latency percentiles land in a ``run.py --json``-shaped artifact next to
 the bench-smoke one. Exit status: 0 conformant, 1 mismatch/regression.
@@ -26,6 +29,7 @@ from __future__ import annotations
 import argparse
 import datetime
 import json
+import re
 import sys
 import time
 
@@ -41,6 +45,14 @@ from repro.core import folds as foldlib
 from repro.data import synthetic
 from repro.serve import Client, CVEngine, HTTPClient, Workload
 from repro.serve.http import assert_responses_equal
+from repro.serve.trace import STAGES
+
+# Prometheus text format 0.0.4: HELP/TYPE comments + `name{labels} value`
+# sample lines (same shape tests/test_obs.py pins for the in-process edge).
+_PROM_LINE = re.compile(
+    r"^(# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* ?.*"
+    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? -?[0-9][0-9eE+.\-]*)$"
+)
 
 
 def _wait_healthy(client: HTTPClient, timeout_s: float) -> None:
@@ -174,6 +186,32 @@ def main() -> int:
     replay_delta = client.stats()["engine"]["compiles"] - before
     assert replay_delta == 0, f"{replay_delta} compiles on warm wire replay"
     print("[http_smoke] warm replay: 0 post-warmup compiles")
+
+    # /v1/metrics: exposition parses line by line, every stage histogram is
+    # pre-declared, and compile_events is flat across scrape → submit → scrape
+    text = client.metrics_text()
+    for line in text.splitlines():
+        if not line:
+            continue
+        assert _PROM_LINE.match(line), f"malformed exposition line: {line!r}"
+    for stage in STAGES:
+        needle = f'stage_latency_seconds_bucket{{stage="{stage}"'
+        assert needle in text, f"stage histogram missing from /v1/metrics: {stage}"
+    m = re.search(r"^compile_events (\d+)$", text, re.M)
+    assert m, "compile_events missing from /v1/metrics"
+    client.submit(warmed[0][1])
+    m2 = re.search(r"^compile_events (\d+)$", client.metrics_text(), re.M)
+    assert m2 and m2.group(1) == m.group(1), (
+        f"compile_events moved on a warm scrape replay: {m.group(1)} -> "
+        f"{m2.group(1) if m2 else 'missing'}"
+    )
+    trace_view = client.trace(n=8)
+    assert {"enabled", "ring", "traces", "summary"} <= trace_view.keys()
+    print(
+        f"[http_smoke] /v1/metrics conformant ({len(text.splitlines())} lines, "
+        f"compile_events={m.group(1)} flat); /v1/trace "
+        f"{'enabled' if trace_view['enabled'] else 'disabled'}"
+    )
 
     # latency rows (the artifact CI publishes next to bench-smoke)
     lat = []

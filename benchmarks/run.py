@@ -18,6 +18,7 @@ warm-row latencies against ``benchmarks/baseline.json`` via
   bench_rsa         — RSA serving cold/warm + pairdist kernel
   bench_async       — async server: concurrent clients, streaming chunks
   bench_http        — HTTP/SSE edge: wire overhead, gather, first chunk
+  bench_latency     — warm per-stage latency budget (tracing-derived)
 """
 
 from __future__ import annotations
@@ -40,6 +41,7 @@ from benchmarks import (
     bench_eeg,
     bench_http,
     bench_kernels,
+    bench_latency,
     bench_multiclass,
     bench_perm,
     bench_rsa,
@@ -58,6 +60,7 @@ MODULES = [
     ("rsa(serve+kernel)", bench_rsa),
     ("async(serve.aio)", bench_async),
     ("http(serve.http)", bench_http),
+    ("latency(stage-budget)", bench_latency),
 ]
 
 

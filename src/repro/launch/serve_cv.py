@@ -217,6 +217,47 @@ async def replay_async(engine, workloads, n_clients, perm_demo=None):
     assert all(r is not None for r in results)
 
 
+def start_profile(profile_dir):
+    """Begin a jax.profiler capture; returns True when it actually started.
+
+    Failures (unsupported backend, missing tensorboard plugin, already
+    active) degrade to a warning — profiling is an extra, never a
+    prerequisite for serving.
+    """
+    if not profile_dir:
+        return False
+    try:
+        jax.profiler.start_trace(profile_dir)
+        print(f"[serve_cv] profiling -> {profile_dir}")
+        return True
+    except Exception as e:  # noqa: BLE001 - best-effort tooling
+        print(f"[serve_cv] warning: profiler failed to start: {e}")
+        return False
+
+
+def stop_profile(started):
+    if not started:
+        return
+    try:
+        jax.profiler.stop_trace()
+        print("[serve_cv] profile capture complete")
+    except Exception as e:  # noqa: BLE001 - best-effort tooling
+        print(f"[serve_cv] warning: profiler failed to stop: {e}")
+
+
+def print_stage_summary(engine):
+    """Per-stage p50/p95 over the tracer ring (with --metrics)."""
+    summary = engine.tracer.summary()
+    if not summary:
+        print("[serve_cv] no traces recorded")
+        return
+    print("[serve_cv] stage latency (over last "
+          f"{len(engine.tracer.last(engine.tracer.ring_size))} traces):")
+    for stage, s in summary.items():
+        print(f"[serve_cv]   {stage:<12} n={s['count']:<5} "
+              f"p50={s['p50_s'] * 1e3:8.3f}ms  p95={s['p95_s'] * 1e3:8.3f}ms")
+
+
 def serve_http(engine, args, record):
     """Expose the engine over the HTTP/SSE edge until interrupted."""
     import signal
@@ -234,7 +275,8 @@ def serve_http(engine, args, record):
         await edge.start()
         print(f"[serve_cv] http edge listening on {edge.url} "
               f"(POST /v1/workloads, /v1/workloads/stream, /v1/datasets; "
-              f"GET /v1/stats, /v1/datasets, /healthz)", flush=True)
+              f"GET /v1/stats, /v1/datasets, /v1/metrics, /v1/trace, "
+              f"/healthz)", flush=True)
         try:
             await edge.serve_forever()
         finally:
@@ -287,6 +329,18 @@ def main():
                     "replaying a local stream; 0 picks a free port")
     ap.add_argument("--http-host", default="127.0.0.1",
                     help="bind address for --http (default loopback)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable request tracing + per-stage latency "
+                    "histograms (served at GET /v1/metrics and /v1/trace "
+                    "with --http; printed as a p50/p95 stage summary "
+                    "otherwise)")
+    ap.add_argument("--trace-ring", type=int, default=256, metavar="N",
+                    help="finished traces kept for /v1/trace and the "
+                    "stage summary (with --metrics; default 256)")
+    ap.add_argument("--profile-dir", metavar="DIR", default=None,
+                    help="capture a jax.profiler trace of warm-up plus "
+                    "the first timed pass into DIR (view with "
+                    "TensorBoard or Perfetto)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rsa", action="store_true",
@@ -296,6 +350,8 @@ def main():
     args = ap.parse_args()
 
     engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
+    if args.metrics:
+        engine.enable_tracing(ring=args.trace_ring)
     record = TrafficLog() if args.record_traffic else None
     client = Client(engine, record=record)
     if args.rsa:
@@ -309,12 +365,17 @@ def main():
               f"datasets ({args.data}), λ={args.lam}, K={args.k}, "
               f"T={args.perm}")
 
+    # Profile window: warm-up (plan builds + compiles) plus the first
+    # timed pass — the region where all the interesting XLA work happens.
+    profiling = start_profile(args.profile_dir)
+
     if args.warmup_from:
         warmup_from_traffic(engine, args.warmup_from, datasets, args.pin)
     if args.warmup:
         warmup_engine(engine, args, datasets)
 
     if args.http is not None:
+        stop_profile(profiling)
         serve_http(engine, args, record)
         return
 
@@ -326,6 +387,7 @@ def main():
     responses = client.gather(workloads)
     ready(responses)
     t_cold = time.perf_counter() - t0
+    stop_profile(profiling)
 
     compiles_after_cold = engine.compile_count()
     t0 = time.perf_counter()
@@ -400,6 +462,8 @@ def main():
         print(f"[serve_cv] RSA: best-model score mean "
               f"{sum(best)/len(best):.3f} over {len(rsa_scored)} scored "
               f"workloads" + (f", min p {min(sig):.4f}" if sig else ""))
+    if args.metrics:
+        print_stage_summary(engine)
 
 
 if __name__ == "__main__":

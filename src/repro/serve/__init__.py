@@ -27,7 +27,17 @@ productises that behind a single declarative surface:
             micro-batching and streamed permutation/RSA responses.
   http      HTTPEdge — the HTTP/SSE wire over the async server (Workload
             JSON in, result-or-error batches and SSE ProgressEvent
-            streams out), plus the HTTPClient transport mirror.
+            streams out), plus the HTTPClient transport mirror — and the
+            ``GET /v1/metrics`` (Prometheus text) / ``GET /v1/trace``
+            exposition routes.
+  obs       MetricsRegistry — zero-dependency counters, gauges, and
+            fixed-bucket histograms over the whole request path, rendered
+            in Prometheus text format.
+  trace     Tracer / Trace / Span — request-scoped stage timing
+            (decode → validate → plan_build → cache_lookup → batch_wait →
+            eval → null_chunk → encode) attached to responses as an
+            optional ``timings`` dict; off by default, zero overhead when
+            disabled (``engine.enable_tracing()``).
 
 Entry point: ``python -m repro.launch.serve_cv`` (``--http PORT`` for the
 network edge).
@@ -58,6 +68,8 @@ from repro.serve.http import (  # noqa: F401
     HTTPEdge,
     WireError,
 )
+from repro.serve.obs import MetricsRegistry  # noqa: F401
+from repro.serve.trace import STAGES, Span, Trace, Tracer  # noqa: F401
 from repro.serve.workload import (  # noqa: F401
     WORKLOAD_SCHEMA_VERSION,
     DatasetHandle,

@@ -40,11 +40,13 @@ from __future__ import annotations
 
 import asyncio
 import functools
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import AsyncIterator, Optional
 
 from repro.serve.api import Request
 from repro.serve.engine import CVEngine
+from repro.serve.trace import attach_trace, trace_of
 from repro.serve.workload import ProgressEvent, as_workload, run_workloads, stream_workload
 
 __all__ = ["ProgressEvent", "AsyncEngineServer"]
@@ -141,6 +143,15 @@ class AsyncEngineServer:
     async def submit(self, request: Request):
         """Submit one workload (or legacy request); awaits its response."""
         self._check_running()
+        # Trace from the submit side so gather-window queue time is a
+        # measured batch_wait stage; the trace rides the workload object
+        # onto the engine thread (run_in_executor does not copy context).
+        tracer = self.engine.tracer
+        if tracer.enabled and trace_of(request) is None:
+            attach_trace(request, tracer.trace())
+        trace = trace_of(request)
+        if trace is not None:
+            trace.mark_enqueue()
         fut = self._loop.create_future()
         await self._queue.put((request, fut))
         return await fut
@@ -213,6 +224,14 @@ class AsyncEngineServer:
     async def _serve_batch(self, batch) -> None:
         requests = [req for req, _ in batch]
         futures = [fut for _, fut in batch]
+        # One dequeue timestamp for the whole gather window: each member's
+        # submit->here latency becomes its batch_wait stage.
+        now = time.perf_counter()
+        for req in requests:
+            trace = trace_of(req)
+            if trace is not None:
+                trace.note_dequeue(now)
+        self.engine.metrics.observe("gather_window_occupancy", len(batch))
         try:
             # Per-entry result-or-error: a malformed workload (or an
             # unknown/evicted dataset handle) fails only its own future,

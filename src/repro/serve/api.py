@@ -41,6 +41,7 @@ from typing import Optional, Sequence, Union
 import jax
 
 from repro.serve.engine import CVEngine
+from repro.serve.trace import attach_trace, trace_of
 from repro.serve.workload import (  # noqa: F401  (re-exported compat surface)
     CVResponse,
     DatasetSpec,
@@ -285,6 +286,17 @@ class EngineServer:
         with self._submit_lock:
             if self._stop.is_set() or self._thread is None:
                 raise RuntimeError("server is not running")
+            # Tracing starts on the *submit* side so queue time is a real,
+            # measured stage (batch_wait) instead of silently inflating
+            # eval time. The trace rides the workload object across the
+            # thread boundary (context vars do not).
+            tracer = self.engine.tracer
+            if tracer.enabled and trace_of(request) is None:
+                trace = tracer.trace()
+                attach_trace(request, trace)
+            trace = trace_of(request)
+            if trace is not None:
+                trace.mark_enqueue()
             fut: Future = Future()
             self._queue.put((request, fut))
             return fut
@@ -315,6 +327,14 @@ class EngineServer:
                 continue
             requests = [req for req, _ in batch]
             futures = [fut for _, fut in batch]
+            # One dequeue timestamp for the whole batch: every member's
+            # submit->here latency is its batch_wait stage.
+            now = time.perf_counter()
+            for req in requests:
+                trace = trace_of(req)
+                if trace is not None:
+                    trace.note_dequeue(now)
+            self.engine.metrics.observe("gather_window_occupancy", len(batch))
             try:
                 # Per-entry result-or-error: one bad workload must not abort
                 # sibling submitters coalesced into the same batch.

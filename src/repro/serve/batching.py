@@ -72,10 +72,21 @@ class _Segment:
 
 
 class MicroBatcher:
-    """Coalesce ragged label queries; un-pad per-request on the way out."""
+    """Coalesce ragged label queries; un-pad per-request on the way out.
 
-    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS):
+    ``metrics``, when given, is a :class:`repro.serve.obs.MetricsRegistry`
+    with a ``batch_coalesced_size`` histogram: each coalesce observes the
+    *unpadded* total width, so the distribution shows how full batches run
+    relative to their shape buckets (padding waste = bucket − observed).
+    """
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS, metrics=None):
         self.buckets = tuple(buckets)
+        self.metrics = metrics
+
+    def _observe(self, offset: int) -> None:
+        if self.metrics is not None:
+            self.metrics.observe("batch_coalesced_size", offset)
 
     # -- columns layout: binary / ridge ------------------------------------
 
@@ -90,6 +101,7 @@ class MicroBatcher:
             cols.append(yc)
             offset += yc.shape[1]
         batch = np.concatenate(cols, axis=1)
+        self._observe(offset)
         padded = bucket_size(offset, self.buckets)
         if padded > offset:
             batch = np.pad(batch, ((0, 0), (0, padded - offset)))
@@ -126,6 +138,7 @@ class MicroBatcher:
             rows.append(yr)
             offset += yr.shape[0]
         batch = np.concatenate(rows, axis=0)
+        self._observe(offset)
         padded = bucket_size(offset, self.buckets)
         if padded > offset:
             batch = np.concatenate(

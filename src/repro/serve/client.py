@@ -228,3 +228,11 @@ class Client:
 
     def stats(self) -> dict:
         return self.engine.stats()
+
+    def metrics(self):
+        """The engine's :class:`~repro.serve.obs.MetricsRegistry` (live view)."""
+        return self.engine.metrics
+
+    def trace_summary(self) -> dict:
+        """Per-stage {count, p50_s, p95_s} over the tracer's ring buffer."""
+        return self.engine.tracer.summary()

@@ -45,6 +45,7 @@ sub-request granularity — the streaming front-end
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -57,6 +58,8 @@ from repro.rsa import compare as rsa_compare
 from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
 from repro.serve.cache import PlanCache
+from repro.serve.obs import SIZE_BUCKETS, MetricsRegistry
+from repro.serve.trace import STAGES, Tracer
 from repro.serve.workload import DatasetHandle, get_estimator
 
 __all__ = ["EngineConfig", "CVEngine", "DatasetHandle"]
@@ -80,6 +83,7 @@ class _DatasetRecord:
     lam: float
     mode: str
     served: int = 0
+    last_used: float = 0.0  # wall-clock (time.time) — display only, never a deadline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,8 +128,11 @@ class CVEngine:
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
         self.cache = PlanCache(self.config.cache_bytes)
-        self.batcher = MicroBatcher(self.config.buckets)
         self.rdm_cache = rsa_rdm.RDMCache()
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(registry=self.metrics)
+        self._declare_metrics()
+        self.batcher = MicroBatcher(self.config.buckets, metrics=self.metrics)
         self._donate = bool(self.config.donate)
         # Eval paths are created lazily but exactly once per static
         # signature and held forever: the dict entry IS the jit cache the
@@ -142,6 +149,77 @@ class CVEngine:
         self._datasets = {}  # handle key -> _DatasetRecord
         self.plans_built = 0
         self.labels_evaluated = 0
+
+    def _declare_metrics(self) -> None:
+        """Declare the engine's metric vocabulary up front.
+
+        Counters/histograms are created empty (stage histograms with every
+        stage label pre-declared, so the ``/v1/metrics`` exposition lists
+        the full vocabulary before any traffic). Cache / jit / memo health
+        is exported through *callback* gauges over the existing counters —
+        the registry is a view, never a second copy, which is what keeps
+        ``stats()`` bit-for-bit identical to its pre-observability schema.
+        """
+        m = self.metrics
+        m.counter(
+            "requests_total",
+            "Workloads served, by kind and estimator",
+            labels=("kind", "estimator"),
+        )
+        stage_hist = m.histogram(
+            "stage_latency_seconds",
+            "Per-stage request latency (traced requests only)",
+            labels=("stage",),
+        )
+        for stage in STAGES:
+            stage_hist.declare(stage=stage)
+        m.histogram(
+            "gather_window_occupancy",
+            "Requests coalesced per server gather window",
+            buckets=SIZE_BUCKETS,
+        )
+        m.histogram(
+            "batch_coalesced_size",
+            "Unpadded label-batch width per coalesced eval",
+            buckets=SIZE_BUCKETS,
+        )
+        m.gauge("plan_cache_hits", "Plan cache hits", fn=lambda: self.cache.stats.hits)
+        m.gauge(
+            "plan_cache_misses", "Plan cache misses (builds)", fn=lambda: self.cache.stats.misses
+        )
+        m.gauge(
+            "plan_cache_evictions", "Plan cache evictions", fn=lambda: self.cache.stats.evictions
+        )
+        m.gauge(
+            "plan_cache_oversized",
+            "Builds served un-cached (over byte budget)",
+            fn=lambda: self.cache.stats.oversized,
+        )
+        m.gauge(
+            "plan_cache_bytes_in_use",
+            "Plan cache resident bytes",
+            fn=lambda: self.cache.stats.bytes_in_use,
+        )
+        m.gauge("compile_events", "jit cache entries across every eval path", fn=self.compile_count)
+        m.gauge("rdm_hits", "Empirical-RDM memo hits", fn=lambda: self.rdm_cache.hits)
+        m.gauge("plans_built", "CVPlans built by this engine", fn=lambda: self.plans_built)
+        m.gauge("labels_evaluated", "Label vectors evaluated", fn=lambda: self.labels_evaluated)
+        m.gauge("datasets_registered", "Registered dataset handles", fn=lambda: len(self._datasets))
+
+    def enable_tracing(self, ring: int = 256) -> None:
+        """Turn on request-scoped span tracing (``serve_cv --metrics``).
+
+        Every subsequent workload gets a span tree (decode → encode),
+        attached to its response as ``timings`` and kept in a bounded ring
+        of ``ring`` traces (``GET /v1/trace``, :meth:`Tracer.summary`).
+        Tracing adds per-stage clock reads and a ``block_until_ready``
+        per span — leave it off for peak-throughput serving.
+        """
+        self.tracer.enable(ring=ring)
+
+    def disable_tracing(self) -> None:
+        """Back to zero-overhead mode (finished traces stay in the ring)."""
+        self.tracer.disable()
 
     # ------------------------------------------------------------------
     # Plans
@@ -160,24 +238,31 @@ class CVEngine:
         A plan *with* the train block is a superset of the one without
         (same H, same factors, extra H_{Tr,Te}), so a ridge request is
         happily served from a cached bias-adjust plan."""
-        key = fastcv.plan_key(x, folds, lam, mode, with_train_block)
-        if not with_train_block:
-            superset = key[:-1] + (True,)
-            plan = self.cache.get(superset)
-            if plan is not None:
-                return superset, plan
+        with self.tracer.span("cache_lookup"):
+            key = fastcv.plan_key(x, folds, lam, mode, with_train_block)
+            if not with_train_block:
+                superset = key[:-1] + (True,)
+                plan = self.cache.get(superset)
+                if plan is not None:
+                    return superset, plan
         plan, _ = self.cache.get_or_build(
             key, lambda: self._build_plan(x, folds, lam, mode, with_train_block)
         )
         return key, plan
 
     def _build_plan(self, x, folds, lam, mode, with_train_block):
-        n, p = x.shape
-        resolved = ("dual" if p >= n else "primal") if mode == "auto" else mode
-        gram = self._build_gram(x) if resolved == "dual" else None
-        plan = fastcv.prepare(
-            x, folds, lam, mode=resolved, with_train_block=with_train_block, gram=gram
-        )
+        # Top-level span (not nested under cache_lookup) so the build cost
+        # lands in its own stage_latency_seconds series — plan_build is the
+        # budget the next perf PR (kernel fusion) is judged against.
+        with self.tracer.span("plan_build"):
+            n, p = x.shape
+            resolved = ("dual" if p >= n else "primal") if mode == "auto" else mode
+            gram = self._build_gram(x) if resolved == "dual" else None
+            plan = self.tracer.sync(
+                fastcv.prepare(
+                    x, folds, lam, mode=resolved, with_train_block=with_train_block, gram=gram
+                )
+            )
         self.plans_built += 1
         return plan
 
@@ -238,6 +323,7 @@ class CVEngine:
         if isinstance(dataset, DatasetHandle):
             rec = self.dataset_record(dataset)
             rec.served += 1
+            rec.last_used = time.time()
             return self.plan(
                 rec.x, rec.folds, rec.lam, mode=rec.mode, with_train_block=with_train_block
             )
@@ -440,11 +526,13 @@ class CVEngine:
             fn = self._evals[key] = spec.make_eval(opts, self._donate)
         if spec.layout == "columns":
             padded, b = self._pad_cols(batch)
-            out = fn(plan, padded)[..., :b]
+            with self.tracer.span("eval"):
+                out = self.tracer.sync(fn(plan, padded)[..., :b])
             self.labels_evaluated += b
             return out[..., 0] if squeeze else out
         padded, b = self._pad_rows(batch)
-        out = fn(plan, padded)[:b]
+        with self.tracer.span("eval"):
+            out = self.tracer.sync(fn(plan, padded)[:b])
         self.labels_evaluated += b
         return out[0] if squeeze else out
 
@@ -486,7 +574,8 @@ class CVEngine:
             plan = self._strip_train(plan)
         cols = cols.astype(plan.h.dtype)
         padded, b = self._pad_cols(cols)
-        out = fn(plan, padded)[:b]
+        with self.tracer.span("eval"):
+            out = self.tracer.sync(fn(plan, padded)[:b])
         self.labels_evaluated += b
         return out
 
@@ -497,7 +586,8 @@ class CVEngine:
         fn = self._rsa_score.get(method)
         if fn is None:
             fn = self._rsa_score[method] = rsa_compare.make_compare(method)
-        return fn(empirical, model_rdms)
+        with self.tracer.span("eval"):
+            return self.tracer.sync(fn(empirical, model_rdms))
 
     def null_rdm_scores(
         self,
@@ -512,11 +602,12 @@ class CVEngine:
         batched path, so chunked (streaming) nulls never recompile after
         one warm-up per chunk bucket.
         """
-        fn = self._rsa_null.get(method)
-        if fn is None:
-            fn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
-        padded, b = self._pad_rows(perms)
-        return fn(empirical, model_rdms, padded)[:, :b]
+        with self.tracer.span("null_chunk"):
+            fn = self._rsa_null.get(method)
+            if fn is None:
+                fn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
+            padded, b = self._pad_rows(perms)
+            return self.tracer.sync(fn(empirical, model_rdms, padded)[:, :b])
 
     def compare_rdms(
         self,
@@ -539,9 +630,18 @@ class CVEngine:
         t_gen = bucket_size(n_perm, self.config.buckets)
         if key is None:
             key = jax.random.PRNGKey(0)
-        perms = perm_lib.permutation_indices(key, empirical.shape[0], t_gen)
-        null = self.null_rdm_scores(empirical, model_rdms, perms, method)[:, :n_perm]
-        p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + n_perm)
+        # Draw generation and the p-value are null-distribution work: they
+        # count toward the null_chunk stage like the CV permutation path.
+        with self.tracer.span("null_chunk"):
+            perms = self.tracer.sync(
+                perm_lib.permutation_indices(key, empirical.shape[0], t_gen)
+            )
+        null = self.null_rdm_scores(empirical, model_rdms, perms, method)
+        with self.tracer.span("null_chunk"):
+            null = null[:, :n_perm]
+            p = self.tracer.sync(
+                (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + n_perm)
+            )
         return scores, null, p
 
     # ------------------------------------------------------------------
@@ -586,12 +686,16 @@ class CVEngine:
         adjust_bias: bool = True,
     ) -> jax.Array:
         """Observed (unpermuted) binary metric through the permutation path."""
-        if not adjust_bias:
-            plan = self._strip_train(plan)
-        y = y.astype(plan.h.dtype)
-        fn = self._perm_binary_fn(metric, adjust_bias)
-        identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
-        return fn(plan, y, self._pad_rows(identity)[0])[0]
+        # The span covers the dispatch preamble (dtype cast, identity
+        # batch, padding) too — each is a device dispatch that would
+        # otherwise show up as an untraced gap in the span timeline.
+        with self.tracer.span("eval"):
+            if not adjust_bias:
+                plan = self._strip_train(plan)
+            y = y.astype(plan.h.dtype)
+            fn = self._perm_binary_fn(metric, adjust_bias)
+            identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
+            return self.tracer.sync(fn(plan, y, self._pad_rows(identity)[0])[0])
 
     def null_binary(
         self,
@@ -612,48 +716,52 @@ class CVEngine:
         identical draws. Locally, the batch pads up to a shape bucket and
         repeats never recompile.
         """
-        if not adjust_bias:
-            plan = self._strip_train(plan)
-        y = y.astype(plan.h.dtype)
         b = perms.shape[0]
-        if self.config.mesh is not None:
-            from repro.core.distributed import sharded_null_from_plan
+        with self.tracer.span("null_chunk"):
+            if not adjust_bias:
+                plan = self._strip_train(plan)
+            y = y.astype(plan.h.dtype)
+            if self.config.mesh is not None:
+                from repro.core.distributed import sharded_null_from_plan
 
-            n_shards = 1
-            for a in self.config.perm_axes:
-                n_shards *= self.config.mesh.shape[a]
-            t_pad = -(-b // n_shards) * n_shards
-            if t_pad > b:
-                perms = jnp.pad(perms, ((0, t_pad - b), (0, 0)), mode="edge")
-            out = sharded_null_from_plan(
-                plan,
-                y,
-                perms,
-                self.config.mesh,
-                metric=metric,
-                perm_axes=self.config.perm_axes,
-                adjust_bias=adjust_bias,
-            )[:b]
-        else:
-            fn = self._perm_binary_fn(metric, adjust_bias)
-            out = fn(plan, y, self._pad_rows(perms)[0])[:b]
+                n_shards = 1
+                for a in self.config.perm_axes:
+                    n_shards *= self.config.mesh.shape[a]
+                t_pad = -(-b // n_shards) * n_shards
+                if t_pad > b:
+                    perms = jnp.pad(perms, ((0, t_pad - b), (0, 0)), mode="edge")
+                out = sharded_null_from_plan(
+                    plan,
+                    y,
+                    perms,
+                    self.config.mesh,
+                    metric=metric,
+                    perm_axes=self.config.perm_axes,
+                    adjust_bias=adjust_bias,
+                )[:b]
+            else:
+                fn = self._perm_binary_fn(metric, adjust_bias)
+                out = fn(plan, y, self._pad_rows(perms)[0])[:b]
+            self.tracer.sync(out)
         self.labels_evaluated += b
         return out
 
     def observed_multiclass(
         self, plan: fastcv.CVPlan, y: jax.Array, *, num_classes: int
     ) -> jax.Array:
-        fn = self._perm_multiclass_fn(num_classes)
-        identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
-        return fn(plan, y, self._pad_rows(identity)[0])[0]
+        with self.tracer.span("eval"):
+            fn = self._perm_multiclass_fn(num_classes)
+            identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
+            return self.tracer.sync(fn(plan, y, self._pad_rows(identity)[0])[0])
 
     def null_multiclass(
         self, plan: fastcv.CVPlan, y: jax.Array, perms: jax.Array, *, num_classes: int
     ) -> jax.Array:
         """Multi-class analogue of :meth:`null_binary` → (B,) accuracies."""
-        fn = self._perm_multiclass_fn(num_classes)
-        padded, b = self._pad_rows(perms)
-        out = fn(plan, y, padded)[:b]
+        with self.tracer.span("null_chunk"):
+            fn = self._perm_multiclass_fn(num_classes)
+            padded, b = self._pad_rows(perms)
+            out = self.tracer.sync(fn(plan, y, padded)[:b])
         self.labels_evaluated += b
         return out
 
@@ -678,13 +786,20 @@ class CVEngine:
         # Generate directly at the bucket size: permutation_indices jits on
         # static (n, T), so bucketing T here is what keeps arbitrary
         # client-chosen n_perm from compiling a fresh generator each time.
+        # Draw generation and the p-value are null-distribution work, so
+        # they count toward the null_chunk stage (timings() sums same-name
+        # top-level spans) — leaving them untraced would break the
+        # stage-sum ≈ end-to-end acceptance invariant.
         t_gen = bucket_size(n_perm, self.config.buckets)
-        perms = perm_lib.permutation_indices(key, n, t_gen)
+        with self.tracer.span("null_chunk"):
+            perms = self.tracer.sync(perm_lib.permutation_indices(key, n, t_gen))
         null = self.null_binary(plan, y, perms, metric=metric, adjust_bias=adjust_bias)[:n_perm]
         # null_binary counted the bucketed batch; this API's contract (and
         # the multiclass path) counts the *requested* draws only.
         self.labels_evaluated -= t_gen - n_perm
-        return perm_lib.PermutationResult(observed, null, perm_lib.p_value(observed, null))
+        with self.tracer.span("null_chunk"):
+            p = self.tracer.sync(perm_lib.p_value(observed, null))
+        return perm_lib.PermutationResult(observed, null, p)
 
     def permutation_multiclass(
         self,
@@ -700,17 +815,22 @@ class CVEngine:
         n = y.shape[0]
         observed = self.observed_multiclass(plan, y, num_classes=num_classes)
         t_gen = bucket_size(n_perm, self.config.buckets)
-        perms = perm_lib.permutation_indices(key, n, t_gen)
-        null = fn(plan, y, self._pad_rows(perms)[0])[:n_perm]
+        with self.tracer.span("null_chunk"):
+            perms = self.tracer.sync(perm_lib.permutation_indices(key, n, t_gen))
+            null = self.tracer.sync(fn(plan, y, self._pad_rows(perms)[0])[:n_perm])
         self.labels_evaluated += n_perm
-        return perm_lib.PermutationResult(observed, null, perm_lib.p_value(observed, null))
+        with self.tracer.span("null_chunk"):
+            p = self.tracer.sync(perm_lib.p_value(observed, null))
+        return perm_lib.PermutationResult(observed, null, p)
 
     # ------------------------------------------------------------------
     # Tuning (routed to the eigendecomposition-based LOO machinery)
     # ------------------------------------------------------------------
 
     def tune(self, x: jax.Array, y: jax.Array, lambdas=None, criterion: str = "mse"):
-        return tuning.tune_ridge(x, y, lambdas=lambdas, criterion=criterion)
+        with self.tracer.span("eval"):
+            # RidgeTuneResult is a NamedTuple, i.e. a pytree — sync whole.
+            return self.tracer.sync(tuning.tune_ridge(x, y, lambdas=lambdas, criterion=criterion))
 
     # ------------------------------------------------------------------
     # Observability
@@ -730,7 +850,39 @@ class CVEngine:
         )
         return int(sum(f._cache_size() for f in fns))
 
+    def dataset_stats(self) -> dict:
+        """JSON-safe per-registered-dataset breakdown.
+
+        Keyed by the first 12 hex chars of the content fingerprint (the
+        same prefix ``/v1/datasets`` shows). ``plan_bytes`` counts the
+        resident plan (either train-block variant), 0 when evicted;
+        ``last_used`` is a wall-clock timestamp (0.0 = never served by
+        handle). This is the handle-scoped view behind
+        ``stats()["per_dataset"]`` and the bench_serve residency row.
+        """
+        out = {}
+        for key, rec in self._datasets.items():
+            plan = self.cache.peek(key) or self.cache.peek(key[:-1] + (False,))
+            out[str(key[0])[:12]] = {
+                "n": rec.handle.n,
+                "p": rec.handle.p,
+                "served": rec.served,
+                "plan_bytes": plan.nbytes if plan is not None else 0,
+                "resident": plan is not None,
+                "pinned": key in self.cache.pinned_keys(),
+                "last_used": rec.last_used,
+            }
+        return out
+
     def stats(self) -> dict:
+        """Flat engine/cache counters plus a ``per_dataset`` breakdown.
+
+        The pre-observability keys (cache stats, plans_built,
+        labels_evaluated, compiles, datasets_registered, rdm_hits,
+        rdm_entries) are preserved bit-for-bit — the metrics registry
+        reads *these* counters through callback gauges, never the other
+        way round. ``per_dataset`` is :meth:`dataset_stats`.
+        """
         s = self.cache.stats.as_dict()
         s.update(
             plans_built=self.plans_built,
@@ -740,4 +892,5 @@ class CVEngine:
             rdm_hits=self.rdm_cache.hits,
             rdm_entries=len(self.rdm_cache),
         )
+        s["per_dataset"] = self.dataset_stats()
         return s

@@ -36,6 +36,13 @@ Routes (all payloads are JSON):
   ``GET /v1/datasets``           the registry introspection view.
   ``GET /v1/stats``              engine stats + async-server + edge
                                  counters.
+  ``GET /v1/metrics``            Prometheus text exposition (format
+                                 0.0.4) of the engine's metrics
+                                 registry — counters, gauges, and
+                                 per-stage latency histograms.
+  ``GET /v1/trace``              last-``n`` finished request span trees
+                                 (``?n=`` query, default 32) plus the
+                                 per-stage p50/p95 summary; JSON.
   ``GET /healthz``               liveness.
 
 Errors are structured JSON — ``{"error": {"type", "status", "message"}}``
@@ -63,6 +70,7 @@ import dataclasses
 import http.client
 import json
 import threading
+import time
 import urllib.parse
 from typing import Iterator, Optional
 
@@ -71,6 +79,7 @@ import numpy as np
 from repro.core import tuning
 from repro.serve.aio import AsyncEngineServer
 from repro.serve.engine import CVEngine
+from repro.serve.trace import attach_trace
 from repro.serve.workload import (
     CVResponse,
     DatasetHandle,
@@ -127,7 +136,7 @@ def response_to_dict(resp) -> dict:
     wire-conformance suite's bit-identical assertions rest on.
     """
     if isinstance(resp, CVResponse):
-        return {
+        d = {
             "type": "cv",
             "task": resp.task,
             "values": _encode_array(resp.values),
@@ -135,16 +144,16 @@ def response_to_dict(resp) -> dict:
             "score": _encode_array(resp.score),
             "plan_key": list(resp.plan_key),
         }
-    if isinstance(resp, PermutationResponse):
-        return {
+    elif isinstance(resp, PermutationResponse):
+        d = {
             "type": "permutation",
             "observed": _encode_array(resp.observed),
             "null": _encode_array(resp.null),
             "p": _encode_array(resp.p),
             "plan_key": list(resp.plan_key),
         }
-    if isinstance(resp, RSAResponse):
-        return {
+    elif isinstance(resp, RSAResponse):
+        d = {
             "type": "rsa",
             "rdm": _encode_array(resp.rdm),
             "pair_values": _encode_array(resp.pair_values),
@@ -153,40 +162,47 @@ def response_to_dict(resp) -> dict:
             "p": _encode_array(resp.p),
             "plan_key": list(resp.plan_key),
         }
-    if isinstance(resp, TuneResponse):
+    elif isinstance(resp, TuneResponse):
         r = resp.result
-        return {
+        d = {
             "type": "tune",
             "best_lambda": _encode_array(r.best_lambda),
             "best_score": _encode_array(r.best_score),
             "lambdas": _encode_array(r.lambdas),
             "scores": _encode_array(r.scores),
         }
-    if isinstance(resp, GridResponse):
-        return {"type": "grid", "accuracies": _encode_array(resp.accuracies)}
-    raise TypeError(f"cannot encode response of type {type(resp).__name__}")
+    elif isinstance(resp, GridResponse):
+        d = {"type": "grid", "accuracies": _encode_array(resp.accuracies)}
+    else:
+        raise TypeError(f"cannot encode response of type {type(resp).__name__}")
+    # Optional, tracing-only: absent when tracing is off, so the wire
+    # payload is byte-identical to the pre-observability schema (and the
+    # conformance fields never include it).
+    if getattr(resp, "timings", None) is not None:
+        d["timings"] = resp.timings
+    return d
 
 
 def response_from_dict(d: dict):
     """Invert :func:`response_to_dict` back into the response dataclass."""
     t = d.get("type")
     if t == "cv":
-        return CVResponse(
+        resp = CVResponse(
             d["task"],
             _decode_array(d["values"]),
             _decode_array(d["y_te"]),
             _decode_array(d["score"]),
             tuple(d["plan_key"]),
         )
-    if t == "permutation":
-        return PermutationResponse(
+    elif t == "permutation":
+        resp = PermutationResponse(
             _decode_array(d["observed"]),
             _decode_array(d["null"]),
             _decode_array(d["p"]),
             tuple(d["plan_key"]),
         )
-    if t == "rsa":
-        return RSAResponse(
+    elif t == "rsa":
+        resp = RSAResponse(
             _decode_array(d["rdm"]),
             _decode_array(d["pair_values"]),
             _decode_array(d["model_scores"]),
@@ -194,8 +210,8 @@ def response_from_dict(d: dict):
             _decode_array(d["p"]),
             tuple(d["plan_key"]),
         )
-    if t == "tune":
-        return TuneResponse(
+    elif t == "tune":
+        resp = TuneResponse(
             tuning.RidgeTuneResult(
                 _decode_array(d["best_lambda"]),
                 _decode_array(d["best_score"]),
@@ -203,9 +219,13 @@ def response_from_dict(d: dict):
                 _decode_array(d["scores"]),
             )
         )
-    if t == "grid":
-        return GridResponse(_decode_array(d["accuracies"]))
-    raise ValueError(f"unknown response type {t!r}")
+    elif t == "grid":
+        resp = GridResponse(_decode_array(d["accuracies"]))
+    else:
+        raise ValueError(f"unknown response type {t!r}")
+    if "timings" in d:
+        resp.timings = dict(d["timings"])
+    return resp
 
 
 def event_to_dict(ev: ProgressEvent) -> dict:
@@ -558,6 +578,21 @@ class HTTPEdge:
                     self._respond(writer, 200, await self._offload(self._stats))
                 elif path == "/v1/datasets":
                     self._respond(writer, 200, await self._offload(self._datasets_payload))
+                elif path == "/v1/metrics":
+                    # Prometheus text exposition; rendering walks every
+                    # series under the registry lock, so it runs on the
+                    # engine thread like any other engine-state read.
+                    text = await self._offload(self.engine.metrics.render_prometheus)
+                    self._respond(
+                        writer,
+                        200,
+                        text.encode("utf-8"),
+                        content_type="text/plain; version=0.0.4; charset=utf-8",
+                    )
+                elif path == "/v1/trace":
+                    query = urllib.parse.parse_qs(req.path.partition("?")[2])
+                    n = int(query.get("n", ["32"])[0])
+                    self._respond(writer, 200, await self._offload(self._trace_payload, n))
                 else:
                     raise _NotFound(f"no route for GET {path}")
                 return True
@@ -584,12 +619,19 @@ class HTTPEdge:
             self._respond(writer, status, _error_body(etype, status, _exc_message(e)))
             return True
 
-    def _respond(self, writer, status: int, payload, keep_alive: bool = True) -> None:
-        """Write one JSON response; ``payload`` is a dict or pre-encoded bytes."""
+    def _respond(
+        self,
+        writer,
+        status: int,
+        payload,
+        keep_alive: bool = True,
+        content_type: str = "application/json",
+    ) -> None:
+        """Write one response; ``payload`` is a dict or pre-encoded bytes."""
         body = payload if isinstance(payload, bytes) else json.dumps(payload).encode("utf-8")
         head = (
             f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
-            "Content-Type: application/json\r\n"
+            f"Content-Type: {content_type}\r\n"
             f"Content-Length: {len(body)}\r\n"
             f"Connection: {'keep-alive' if keep_alive else 'close'}\r\n"
             "\r\n"
@@ -622,7 +664,18 @@ class HTTPEdge:
         return results, live
 
     async def _serve_batch(self, body: bytes) -> bytes:
+        tracer = self.engine.tracer
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         results, live = await self._offload(self._decode_batch, body)
+        if tracer.enabled:
+            # Wire decode is shared by the whole batch; attribute the full
+            # duration to each member (exact for the single-workload case,
+            # which is how latency budgets are measured).
+            dt_decode = time.perf_counter() - t0
+            for _i, w in live:
+                tr = tracer.trace()
+                tr.add("decode", dt_decode)
+                attach_trace(w, tr)
         self.http_errors += sum(r is not None for r in results)
         for _i, w in live:
             self._note(w)
@@ -632,12 +685,22 @@ class HTTPEdge:
         self.http_errors += sum(isinstance(o, BaseException) for o in outs)
 
         def encode() -> bytes:
+            # Traces are already finished by run_workloads, so the wire
+            # encode goes straight into the stage histogram rather than a
+            # span (the "encode" span inside the trace covers response
+            # construction; this covers JSON serialisation).
+            t_enc = time.perf_counter() if tracer.enabled else 0.0
             for (i, _), out in zip(live, outs):
                 if isinstance(out, BaseException):
                     results[i] = _error_entry(out, phase="serve")
                 else:
                     results[i] = {"ok": True, "response": response_to_dict(out)}
-            return json.dumps({"results": results}).encode("utf-8")
+            encoded = json.dumps({"results": results}).encode("utf-8")
+            if tracer.enabled:
+                self.engine.metrics.observe(
+                    "stage_latency_seconds", time.perf_counter() - t_enc, stage="encode"
+                )
+            return encoded
 
         return await self._offload(encode)
 
@@ -667,7 +730,13 @@ class HTTPEdge:
     async def _serve_stream(self, body: bytes, writer) -> bool:
         # Decode + validate *before* committing to SSE, so malformed input
         # gets a structured JSON error via the generic handler.
+        tracer = self.engine.tracer
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         w = await self._offload(self._decode_workload, body)
+        if tracer.enabled:
+            tr = tracer.trace()
+            tr.add("decode", time.perf_counter() - t0)
+            attach_trace(w, tr)
         self._note(w, stream_chunk=self.server.stream_chunk)
         self.http_streams += 1
         head = (
@@ -705,6 +774,15 @@ class HTTPEdge:
         return True
 
     # -- introspection -----------------------------------------------------
+
+    def _trace_payload(self, n: int) -> dict:
+        tracer = self.engine.tracer
+        return {
+            "enabled": tracer.enabled,
+            "ring": tracer.ring_size,
+            "traces": tracer.last(n),
+            "summary": tracer.summary(),
+        }
 
     def _stats(self) -> dict:
         return {
@@ -851,7 +929,7 @@ class HTTPClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def _request(self, method: str, path: str, payload=None) -> dict:
+    def _request(self, method: str, path: str, payload=None, *, decode: bool = True):
         body = None if payload is None else json.dumps(payload).encode("utf-8")
         headers = {"Content-Type": "application/json"} if body is not None else {}
         resp = raw = None
@@ -884,6 +962,8 @@ class HTTPClient:
             raise WireError(
                 resp.status, err.get("type", "http"), err.get("message", f"HTTP {resp.status}")
             )
+        if not decode:  # non-JSON routes (e.g. Prometheus text)
+            return raw.decode("utf-8")
         return data
 
     @staticmethod
@@ -918,6 +998,14 @@ class HTTPClient:
     def stats(self) -> dict:
         """Remote stats: {"engine": ..., "server": ..., "edge": ...}."""
         return self._request("GET", "/v1/stats")
+
+    def metrics_text(self) -> str:
+        """Raw Prometheus text from ``GET /v1/metrics`` (format 0.0.4)."""
+        return self._request("GET", "/v1/metrics", decode=False)
+
+    def trace(self, n: int = 32) -> dict:
+        """Last-``n`` span trees + per-stage summary from ``GET /v1/trace``."""
+        return self._request("GET", f"/v1/trace?n={int(n)}")
 
     def submit(self, workload):
         """One workload in; its decoded response out (raises WireError)."""

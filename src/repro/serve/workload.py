@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from typing import Callable, Iterator, Optional, Sequence
 
 import jax
@@ -57,6 +58,7 @@ from repro.core import fastcv, metrics, multidim, tuning
 from repro.core import permutation as perm_lib
 from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import as_folds, bucket_size
+from repro.serve.trace import NULL_TRACER, attach_trace, trace_of
 
 __all__ = [
     "WORKLOAD_SCHEMA_VERSION",
@@ -418,6 +420,7 @@ class CVResponse:
     y_te: jax.Array  # matching test labels/responses
     score: jax.Array  # the estimator's metric family (accuracy / mse / R²)
     plan_key: tuple
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
 @dataclasses.dataclass
@@ -426,6 +429,7 @@ class PermutationResponse:
     null: jax.Array
     p: jax.Array
     plan_key: tuple
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
 @dataclasses.dataclass
@@ -437,16 +441,19 @@ class RSAResponse:
     null: Optional[jax.Array]  # (M, n_perm) or None
     p: Optional[jax.Array]  # (M,) or None
     plan_key: tuple
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
 @dataclasses.dataclass
 class TuneResponse:
     result: tuning.RidgeTuneResult
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
 @dataclasses.dataclass
 class GridResponse:
     accuracies: jax.Array  # (Q,) per-grid-point CV accuracy
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
 # ---------------------------------------------------------------------------
@@ -762,9 +769,21 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     :class:`~repro.serve.aio.AsyncEngineServer`, and the HTTP edge) run in
     this mode and fan each entry's result-or-error back to its own
     submitter.
+
+    Observability: when the engine's tracer is enabled, every workload
+    carries (or gets) a :class:`~repro.serve.trace.Trace`; engine-internal
+    spans (cache_lookup, plan_build, eval, null_chunk) fire while that
+    trace is *activated* around the calls below, the shared coalesced
+    group eval is timed once and attributed to every member as an ``eval``
+    span, and the finished trace's per-stage sums attach to the response
+    as ``timings``. Tracing off ⇒ all hooks are no-ops and ``timings``
+    stays None.
     """
     raw = list(workloads)
     responses: list = [None] * len(raw)
+    tracer = getattr(engine, "tracer", None) or NULL_TRACER
+    metrics_reg = getattr(engine, "metrics", None)
+    traces: list = [None] * len(raw)
     plan_memo: dict = {}
 
     def fail(i, e: Exception):
@@ -792,55 +811,76 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     groups: dict = {}
     rsa_groups: dict = {}
     for i, obj in enumerate(raw):
+        tr = trace_of(obj)
+        if tr is None and tracer.enabled:
+            tr = tracer.trace()
+        traces[i] = tr
         try:
-            w = as_workload(obj)
-            if w.kind == "cv":
-                spec = get_estimator(w.estimator)
-                opts = w.estimator_opts()
-                key, plan = plan_for(w.dataset, spec.needs_train(opts))
-                gkey = (key, w.estimator, spec.static_key(opts))
-                groups.setdefault(gkey, (plan, spec, opts, []))[3].append((i, w))
-            elif w.kind == "rsa":
-                needs_train = w.contrast == "multiclass" or w.adjust_bias
-                key, plan = plan_for(w.dataset, needs_train)
-                if w.contrast == "binary":
-                    gkey = (key, "binary", w.dissimilarity, w.adjust_bias, w.num_classes)
-                else:
-                    gkey = (key, "multiclass", None, None, w.num_classes)
-                rsa_groups.setdefault(gkey, (plan, []))[1].append((i, w))
-            elif w.kind == "permutation":
-                needs_train = w.estimator == "multiclass" or w.adjust_bias
-                key, plan = plan_for(w.dataset, needs_train)
-                if w.estimator == "multiclass":
-                    res = engine.permutation_multiclass(
-                        plan,
-                        jnp.asarray(w.y),
-                        w.n_perm,
-                        jax.random.PRNGKey(w.seed),
-                        num_classes=w.num_classes,
-                    )
-                else:
-                    res = engine.permutation_binary(
-                        plan,
-                        jnp.asarray(w.y),
-                        w.n_perm,
-                        jax.random.PRNGKey(w.seed),
-                        metric=w.metric,
-                        adjust_bias=w.adjust_bias,
-                    )
-                responses[i] = PermutationResponse(res.observed, res.null, res.p, key)
-            elif w.kind == "tune":
-                x = w.x if w.x is not None else w.dataset.x
-                responses[i] = TuneResponse(
-                    engine.tune(x, w.y, lambdas=w.lambdas, criterion=w.criterion)
-                )
-            elif w.kind == "grid":
-                folds, lam = _grid_folds_lam(engine, w.dataset)
-                xs, yv = jnp.asarray(w.xs), jnp.asarray(w.y)
-                grid = multidim.cv_grid(xs, yv, folds, lam, adjust_bias=w.adjust_bias)
-                responses[i] = GridResponse(grid)
-            else:  # unreachable: validate() gates kinds
-                raise ValueError(f"unknown workload kind {w.kind!r}")
+            with tracer.activate(tr):
+                with tracer.span("validate"):
+                    w = as_workload(obj)
+                    est = w.estimator if w.kind in ("cv", "permutation") else ""
+                    if tr is not None:
+                        tr.kind, tr.estimator = w.kind, est
+                    if metrics_reg is not None:
+                        metrics_reg.inc("requests_total", kind=w.kind, estimator=est)
+                if w.kind == "cv":
+                    with tracer.span("validate"):
+                        spec = get_estimator(w.estimator)
+                        opts = w.estimator_opts()
+                    key, plan = plan_for(w.dataset, spec.needs_train(opts))
+                    gkey = (key, w.estimator, spec.static_key(opts))
+                    groups.setdefault(gkey, (plan, spec, opts, []))[3].append((i, w))
+                elif w.kind == "rsa":
+                    needs_train = w.contrast == "multiclass" or w.adjust_bias
+                    key, plan = plan_for(w.dataset, needs_train)
+                    if w.contrast == "binary":
+                        gkey = (key, "binary", w.dissimilarity, w.adjust_bias, w.num_classes)
+                    else:
+                        gkey = (key, "multiclass", None, None, w.num_classes)
+                    rsa_groups.setdefault(gkey, (plan, []))[1].append((i, w))
+                elif w.kind == "permutation":
+                    needs_train = w.estimator == "multiclass" or w.adjust_bias
+                    key, plan = plan_for(w.dataset, needs_train)
+                    # Input normalisation (labels -> device array, seed ->
+                    # PRNG key) is validate-stage work; leaving it untraced
+                    # breaks the stage-sum ≈ end-to-end invariant.
+                    with tracer.span("validate"):
+                        yv = tracer.sync(jnp.asarray(w.y))
+                        pkey = tracer.sync(jax.random.PRNGKey(w.seed))
+                    if w.estimator == "multiclass":
+                        res = engine.permutation_multiclass(
+                            plan, yv, w.n_perm, pkey, num_classes=w.num_classes
+                        )
+                    else:
+                        res = engine.permutation_binary(
+                            plan,
+                            yv,
+                            w.n_perm,
+                            pkey,
+                            metric=w.metric,
+                            adjust_bias=w.adjust_bias,
+                        )
+                    with tracer.span("encode"):
+                        responses[i] = PermutationResponse(
+                            res.observed, res.null, tracer.sync(res.p), key
+                        )
+                elif w.kind == "tune":
+                    x = w.x if w.x is not None else w.dataset.x
+                    res = engine.tune(x, w.y, lambdas=w.lambdas, criterion=w.criterion)
+                    with tracer.span("encode"):
+                        responses[i] = TuneResponse(res)
+                elif w.kind == "grid":
+                    folds, lam = _grid_folds_lam(engine, w.dataset)
+                    xs, yv = jnp.asarray(w.xs), jnp.asarray(w.y)
+                    with tracer.span("eval"):
+                        grid = tracer.sync(
+                            multidim.cv_grid(xs, yv, folds, lam, adjust_bias=w.adjust_bias)
+                        )
+                    with tracer.span("encode"):
+                        responses[i] = GridResponse(grid)
+                else:  # unreachable: validate() gates kinds
+                    raise ValueError(f"unknown workload kind {w.kind!r}")
         except Exception as e:  # noqa: BLE001 - isolated per workload
             fail(i, e)
 
@@ -848,44 +888,74 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     batcher = engine.batcher
     for (key, estimator, _static), (plan, spec, opts, members) in groups.items():
         try:
+            # The coalesced eval is shared work: time it once — including
+            # the label device transfer, since that dispatch is part of the
+            # shared prep (the batcher un-pads through host numpy, which is
+            # the device sync) — and attribute the whole cost to every
+            # member's trace. No trace is active here, so the
+            # engine-internal eval span is a no-op — the cost is counted
+            # exactly once per trace.
+            t0 = time.perf_counter() if tracer.enabled else 0.0
             ys = [jnp.asarray(w.y) for _, w in members]
             run = batcher.run_columns if spec.layout == "columns" else batcher.run_rows
             outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, **opts))
+            if tracer.enabled:
+                dt = time.perf_counter() - t0
+                for i, _w in members:
+                    if traces[i] is not None:
+                        traces[i].add("eval", dt)
         except Exception as e:  # noqa: BLE001 - the whole group shares the eval
             for i, _w in members:
                 fail(i, e)
             continue
         for (i, w), values in zip(members, outs):
             try:
-                y = jnp.asarray(w.y)
-                y_te = spec.test_targets(y, plan, opts)
-                score = spec.score(values, y_te, opts)
-                responses[i] = CVResponse(estimator, values, y_te, score, key)
+                with tracer.activate(traces[i]), tracer.span("encode"):
+                    y = jnp.asarray(w.y)
+                    y_te = spec.test_targets(y, plan, opts)
+                    score = tracer.sync(spec.score(values, y_te, opts))
+                    responses[i] = CVResponse(estimator, values, y_te, score, key)
             except Exception as e:  # noqa: BLE001 - per-member post-processing
                 fail(i, e)
 
     # -- RSA: contrast columns ride the same coalesced label-batch path ----
     for (key, contrast, diss, adj, c), (plan, members) in rsa_groups.items():
         try:
+            t0 = time.perf_counter() if tracer.enabled else 0.0
             rdms = _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members)
+            if tracer.enabled:
+                dt = time.perf_counter() - t0
+                for i, _w in members:
+                    if traces[i] is not None:
+                        traces[i].add("eval", dt)
         except Exception as e:  # noqa: BLE001 - the whole group shares the eval
             for i, _w in members:
                 fail(i, e)
             continue
         for (i, w), (rdm, vals) in zip(members, rdms):
             try:
-                scores = null = p = None
-                if w.model_rdms is not None:
-                    scores, null, p = engine.compare_rdms(
-                        rdm,
-                        jnp.asarray(w.model_rdms),
-                        w.comparison,
-                        w.n_perm,
-                        jax.random.PRNGKey(w.seed),
-                    )
-                responses[i] = RSAResponse(rdm, vals, scores, null, p, key)
+                with tracer.activate(traces[i]):
+                    scores = null = p = None
+                    if w.model_rdms is not None:
+                        with tracer.span("validate"):
+                            models = tracer.sync(jnp.asarray(w.model_rdms))
+                            pkey = tracer.sync(jax.random.PRNGKey(w.seed))
+                        scores, null, p = engine.compare_rdms(
+                            rdm, models, w.comparison, w.n_perm, pkey
+                        )
+                    with tracer.span("encode"):
+                        responses[i] = RSAResponse(rdm, vals, tracer.sync(scores), null, p, key)
             except Exception as e:  # noqa: BLE001 - per-member model scoring
                 fail(i, e)
+
+    # -- close traces; attach per-stage sums to the responses --------------
+    for i, resp in enumerate(responses):
+        tr = traces[i]
+        if tr is None:
+            continue
+        tracer.finish(tr)
+        if resp is not None and not isinstance(resp, Exception):
+            resp.timings = tr.timings()
     return responses
 
 
@@ -996,52 +1066,103 @@ def stream_workload(engine, workload, chunk: int = 64) -> Iterator[ProgressEvent
     workloads emit the empirical RDM, then model scores, then null chunks.
     Any other kind degenerates to a single "done" event wrapping the
     batched response.
+
+    Tracing: the workload's attached trace (or a fresh one when the
+    engine's tracer is enabled) is *activated only around engine calls*,
+    never across a ``yield`` — a generator suspending inside an activation
+    would leak the context var into whatever its driver thread runs next.
+    The final "done" response carries ``timings`` like the batched path.
     """
-    w = as_workload(workload)
+    tracer = getattr(engine, "tracer", None) or NULL_TRACER
+    tr = trace_of(workload)
+    if tr is None and tracer.enabled:
+        tr = tracer.trace()
+    with tracer.activate(tr):
+        with tracer.span("validate"):
+            w = as_workload(workload)
     if w.kind == "permutation":
-        yield from _stream_permutation(engine, w, chunk)
+        if tr is not None:
+            tr.kind, tr.estimator = w.kind, w.estimator
+        _count_request(engine, w.kind, w.estimator)
+        yield from _stream_permutation(engine, w, chunk, tracer, tr)
     elif w.kind == "rsa":
-        yield from _stream_rsa(engine, w, chunk)
+        if tr is not None:
+            tr.kind = w.kind
+        _count_request(engine, w.kind, "")
+        yield from _stream_rsa(engine, w, chunk, tracer, tr)
     else:
+        # run_workloads counts the request, picks the trace up from the
+        # workload object, and attaches timings itself.
+        attach_trace(w, tr)
         (resp,) = run_workloads(engine, [w])
         yield ProgressEvent("done", 1, 1, resp)
 
 
-def _stream_permutation(engine, w: Workload, chunk: int):
+def _count_request(engine, kind: str, estimator: str) -> None:
+    metrics_reg = getattr(engine, "metrics", None)
+    if metrics_reg is not None:
+        metrics_reg.inc("requests_total", kind=kind, estimator=estimator)
+
+
+def _finish_stream(tracer, tr, build_response):
+    """Final-event helper: build the response under an ``encode`` span,
+    close the trace, and attach its per-stage sums."""
+    if tr is None:
+        return build_response()
+    with tracer.activate(tr), tracer.span("encode"):
+        resp = build_response()
+    tracer.finish(tr)
+    resp.timings = tr.timings()
+    return resp
+
+
+def _stream_permutation(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
     total = w.n_perm
     needs_train = w.estimator == "multiclass" or w.adjust_bias
-    key, plan = engine.resolve(w.dataset, needs_train)
+    with tracer.activate(tr):
+        key, plan = engine.resolve(w.dataset, needs_train)
     yield ProgressEvent("plan", 0, total, key)
     y = jnp.asarray(w.y)
     if w.estimator == "multiclass":
-        observed = engine.observed_multiclass(plan, y, num_classes=w.num_classes)
+        with tracer.activate(tr):
+            observed = engine.observed_multiclass(plan, y, num_classes=w.num_classes)
 
         def eval_chunk(block, keep):
-            return engine.null_multiclass(plan, y, block, num_classes=w.num_classes)[:keep]
+            with tracer.activate(tr):
+                return engine.null_multiclass(plan, y, block, num_classes=w.num_classes)[:keep]
 
     else:
-        observed = engine.observed_binary(plan, y, metric=w.metric, adjust_bias=w.adjust_bias)
+        with tracer.activate(tr):
+            observed = engine.observed_binary(
+                plan, y, metric=w.metric, adjust_bias=w.adjust_bias
+            )
 
         def eval_chunk(block, keep):
-            return engine.null_binary(
-                plan, y, block, metric=w.metric, adjust_bias=w.adjust_bias
-            )[:keep]
+            with tracer.activate(tr):
+                return engine.null_binary(
+                    plan, y, block, metric=w.metric, adjust_bias=w.adjust_bias
+                )[:keep]
 
     yield ProgressEvent("observed", 0, total, observed)
     chunks = []
     for hi, null_block in _null_chunks(engine, total, int(y.shape[0]), w.seed, chunk, eval_chunk):
         chunks.append(null_block)
         yield ProgressEvent("null", hi, total, null_block)
-    null = jnp.concatenate(chunks)
-    p = perm_lib.p_value(observed, null)
-    yield ProgressEvent("done", total, total, PermutationResponse(observed, null, p, key))
+
+    def build():
+        null = jnp.concatenate(chunks)
+        p = perm_lib.p_value(observed, null)
+        return PermutationResponse(observed, null, p, key)
+
+    yield ProgressEvent("done", total, total, _finish_stream(tracer, tr, build))
 
 
-def _stream_rsa(engine, w: Workload, chunk: int):
+def _stream_rsa(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
     c = w.num_classes
     total = w.n_perm if w.model_rdms is not None else 0
     needs_train = w.contrast == "multiclass" or w.adjust_bias
-    key, plan = engine.resolve(w.dataset, needs_train)
+    with tracer.activate(tr):
+        key, plan = engine.resolve(w.dataset, needs_train)
     yield ProgressEvent("plan", 0, total, key)
     y = jnp.asarray(w.y)
     memo_key = _rdm_memo_key(key, w)
@@ -1049,35 +1170,49 @@ def _stream_rsa(engine, w: Workload, chunk: int):
     if hit is not None:
         rdm, vals = hit
     elif w.contrast == "binary":
-        cols = rsa_rdm.pair_contrast_columns(y, c, plan.h.dtype)
-        vals = engine.eval_rsa_pairs(plan, cols, w.dissimilarity, w.adjust_bias)
-        rdm = rsa_rdm.rdm_from_pair_values(vals, c)
+        with tracer.activate(tr):
+            cols = rsa_rdm.pair_contrast_columns(y, c, plan.h.dtype)
+            vals = engine.eval_rsa_pairs(plan, cols, w.dissimilarity, w.adjust_bias)
+            rdm = rsa_rdm.rdm_from_pair_values(vals, c)
         engine.rdm_cache.put(memo_key, (rdm, vals))
     else:
-        preds = engine.eval_multiclass(plan, y, c)
-        rdm, vals = rsa_rdm.rdm_from_confusion(preds, y[plan.te_idx], c), None
+        with tracer.activate(tr):
+            preds = engine.eval_multiclass(plan, y, c)
+            rdm, vals = rsa_rdm.rdm_from_confusion(preds, y[plan.te_idx], c), None
         engine.rdm_cache.put(memo_key, (rdm, vals))
     yield ProgressEvent("rdm", 0, total, rdm)
     if w.model_rdms is None:
-        yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, None, None, None, key))
+        resp = _finish_stream(
+            tracer, tr, lambda: RSAResponse(rdm, vals, None, None, None, key)
+        )
+        yield ProgressEvent("done", 0, 0, resp)
         return
     models = jnp.asarray(w.model_rdms)
-    scores = engine.score_rdms(rdm, models, w.comparison)
+    with tracer.activate(tr):
+        scores = engine.score_rdms(rdm, models, w.comparison)
     yield ProgressEvent("scores", 0, total, scores)
     if total <= 0:
-        yield ProgressEvent("done", 0, 0, RSAResponse(rdm, vals, scores, None, None, key))
+        resp = _finish_stream(
+            tracer, tr, lambda: RSAResponse(rdm, vals, scores, None, None, key)
+        )
+        yield ProgressEvent("done", 0, 0, resp)
         return
 
     def eval_chunk(block, keep):
-        return engine.null_rdm_scores(rdm, models, block, w.comparison)[:, :keep]
+        with tracer.activate(tr):
+            return engine.null_rdm_scores(rdm, models, block, w.comparison)[:, :keep]
 
     chunks = []
     for hi, null_block in _null_chunks(engine, total, c, w.seed, chunk, eval_chunk):
         chunks.append(null_block)
         yield ProgressEvent("null", hi, total, null_block)
-    null = jnp.concatenate(chunks, axis=1)
-    p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
-    yield ProgressEvent("done", total, total, RSAResponse(rdm, vals, scores, null, p, key))
+
+    def build():
+        null = jnp.concatenate(chunks, axis=1)
+        p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
+        return RSAResponse(rdm, vals, scores, null, p, key)
+
+    yield ProgressEvent("done", total, total, _finish_stream(tracer, tr, build))
 
 
 # ---------------------------------------------------------------------------
