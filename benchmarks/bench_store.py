@@ -1,0 +1,126 @@
+"""Plan-store benchmark: checkpoint write/load and the warm-boot payoff.
+
+The plan store turns the paper's §2.7 economics *durable*: the O(N²P)
+plan build amortises across process restarts, not just requests. Rows:
+
+  store_write          — atomic serialize + commit of one plan
+  store_load_warm      — verified read (manifest + digest check +
+                         device_put) of the same plan; this is the cost a
+                         rebooted replica pays *instead of* the build, so
+                         it is gated like any warm row
+  coldboot_with_store  — fresh engine + register + first CV workload
+                         against a populated store (0 plan builds)
+  coldboot_no_store    — same boot with an empty store dir (full rebuild)
+
+``coldboot_*`` rows are wall-clock context, not gated (they include jit
+compile time, which the persistent XLA compilation cache — a separate
+process-level mechanism — removes in the real boot sequence).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import folds as foldlib
+from repro.data import synthetic
+from repro.serve import Client, CVEngine, EngineConfig, PlanStore, Workload
+
+
+def _boot_and_serve(store_dir, x, folds, lam, y):
+    engine = CVEngine(EngineConfig(plan_store=str(store_dir), save_plans=True))
+    client = Client(engine)
+    handle = client.register(x, folds, lam)
+    resp = client.submit(Workload(kind="cv", dataset=handle, y=y))
+    jax.block_until_ready(resp.score)
+    engine.flush_store()
+    return engine
+
+
+def run(fast: bool = False):
+    import tempfile
+
+    rows = []
+    n, p = (96, 512) if fast else (256, 4096)
+    k, lam = 8, 1.0
+
+    x, yc = synthetic.make_classification(jax.random.PRNGKey(0), n, p, class_sep=2.0)
+    y = jnp.where(yc == 0, -1.0, 1.0)
+    folds = foldlib.kfold(n, k, seed=0)
+
+    engine = CVEngine()
+    key, plan = engine.resolve(engine.register(x, folds, lam))
+
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+
+        def write_once():
+            store.save(key, plan)
+            # content-addressed: remove so every rep pays the full commit
+            import shutil
+
+            shutil.rmtree(store.path_for(key))
+
+        secs = timeit(write_once, warmup=1, repeats=5)
+        store.save(key, plan)
+        mib = store.total_bytes() / 2**20
+        rows.append(row(f"store_write_N{n}_P{p}", secs, f"{mib:.1f} MiB entry, atomic commit"))
+
+        def load_once():
+            loaded = store.load(key)
+            assert loaded is not None
+            jax.block_until_ready(loaded.h)
+
+        secs = timeit(load_once, warmup=1, repeats=5)
+        build = timeit(
+            lambda: jax.block_until_ready(engine._build_plan(x, folds, lam, "auto", True).h),
+            warmup=1,
+            repeats=3,
+        )
+        rows.append(
+            row(
+                f"store_load_warm_N{n}_P{p}",
+                secs,
+                f"verified read; {build / secs:.1f}x cheaper than rebuild",
+            )
+        )
+
+    # -- cold boot wall clock, with vs without a populated store -----------
+    with tempfile.TemporaryDirectory() as d:
+        seeded = _boot_and_serve(d, x, folds, lam, y)  # populates the store
+        assert seeded.plans_built == 1
+
+        t0 = time.perf_counter()
+        warm = _boot_and_serve(d, x, folds, lam, y)
+        t_with = time.perf_counter() - t0
+        assert warm.plans_built == 0, "populated store must satisfy the boot"
+        rows.append(
+            row(
+                f"coldboot_with_store_N{n}_P{p}",
+                t_with,
+                f"0 plan builds, {warm.stats()['store_hits']} store hits",
+            )
+        )
+
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        cold = _boot_and_serve(d, x, folds, lam, y)
+        t_without = time.perf_counter() - t0
+        assert cold.plans_built == 1
+        rows.append(
+            row(
+                f"coldboot_no_store_N{n}_P{p}",
+                t_without,
+                f"full rebuild; store saves {t_without - t_with:.3f}s/boot",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(fast=True))

@@ -15,6 +15,7 @@ warm-row latencies against ``benchmarks/baseline.json`` via
   bench_eeg         — paper Fig. 4        (EEG/MEG-style permutation run)
   bench_kernels     — CV hot-spot kernels (XLA path GFLOP/s)
   bench_serve       — serving engine cold/warm + batch throughput
+  bench_store       — plan-store write/load + cold-boot-with-store payoff
   bench_rsa         — RSA serving cold/warm + pairdist kernel
   bench_async       — async server: concurrent clients, streaming chunks
   bench_http        — HTTP/SSE edge: wire overhead, gather, first chunk
@@ -46,6 +47,7 @@ from benchmarks import (
     bench_perm,
     bench_rsa,
     bench_serve,
+    bench_store,
 )
 from benchmarks.common import print_rows
 
@@ -57,6 +59,7 @@ MODULES = [
     ("eeg(Fig4)", bench_eeg),
     ("kernels", bench_kernels),
     ("serve(engine)", bench_serve),
+    ("store(plan-store)", bench_store),
     ("rsa(serve+kernel)", bench_rsa),
     ("async(serve.aio)", bench_async),
     ("http(serve.http)", bench_http),

@@ -54,6 +54,8 @@ __all__ = [
     "binary_cv",
     "fingerprint",
     "plan_key",
+    "plan_to_arrays",
+    "plan_from_arrays",
     "make_eval_binary",
     "make_eval_cv",
 ]
@@ -294,9 +296,12 @@ def binary_cv(x: jax.Array, y: jax.Array, folds: Folds, lam: float = 0.0,
 
 _FINGERPRINT_SAMPLE_CAP = 1 << 20  # elements hashed exactly before sampling
 
-# id -> (weakref, digest). jax Arrays are immutable, so identity implies
-# content identity while the object is alive; the weakref callback evicts
-# the entry on GC so a recycled id can never alias a stale digest.
+# (id, sample_cap) -> (weakref, digest). jax Arrays are immutable, so
+# identity implies content identity while the object is alive; the weakref
+# callback evicts the entry on GC so a recycled id can never alias a stale
+# digest. The cap is part of the key because it changes the digest for
+# arrays above it — memoising on id alone would let a small-cap probe
+# poison every later default-cap lookup of the same array (and vice versa).
 _fingerprint_memo: dict = {}
 
 
@@ -306,12 +311,17 @@ def fingerprint(x, *, sample_cap: int = _FINGERPRINT_SAMPLE_CAP) -> str:
     Arrays up to ``sample_cap`` elements are hashed exactly; larger ones by
     a deterministic strided subsample plus a global f64 checksum — O(cap)
     regardless of dataset size, with astronomically unlikely collisions for
-    real feature matrices. Digests of (immutable) jax arrays are memoised
-    by object identity, so steady-state serving never re-hashes a dataset.
+    real feature matrices. The digest depends only on shape/dtype/values
+    (plus ``sample_cap`` above it), never on process state — plan keys are
+    stable across restarts, which is what lets the disk-backed plan store
+    address entries by key. Digests of (immutable) jax arrays are memoised
+    by (object identity, cap), so steady-state serving never re-hashes a
+    dataset.
     """
     memoable = isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
     if memoable:
-        hit = _fingerprint_memo.get(id(x))
+        memo_key = (id(x), sample_cap)
+        hit = _fingerprint_memo.get(memo_key)
         if hit is not None and hit[0]() is x:
             return hit[1]
     arr = np.asarray(jax.device_get(x))
@@ -326,9 +336,8 @@ def fingerprint(x, *, sample_cap: int = _FINGERPRINT_SAMPLE_CAP) -> str:
         h.update(np.float64(flat.sum(dtype=np.float64)).tobytes())
     digest = h.hexdigest()
     if memoable:
-        key_id = id(x)
-        ref = weakref.ref(x, lambda _, k=key_id: _fingerprint_memo.pop(k, None))
-        _fingerprint_memo[key_id] = (ref, digest)
+        ref = weakref.ref(x, lambda _, k=memo_key: _fingerprint_memo.pop(k, None))
+        _fingerprint_memo[memo_key] = (ref, digest)
     return digest
 
 
@@ -346,6 +355,47 @@ def plan_key(x, folds: Folds, lam: float, mode: str = "auto",
     return (fingerprint(x), fingerprint(folds.te_idx),
             fingerprint(folds.tr_idx), float(lam), mode,
             bool(with_train_block))
+
+
+#: Plan leaves in flattening order; ``h_tr_te`` is optional (None unless
+#: the plan was prepared with train blocks).
+PLAN_FIELDS = ("h", "te_idx", "tr_idx", "chol_ih", "h_tr_te")
+
+
+def plan_to_arrays(plan: CVPlan) -> dict:
+    """Host-side ``{leaf name: np.ndarray}`` snapshot of a plan.
+
+    The serialisation codec for :class:`repro.serve.store.PlanStore`: every
+    non-None leaf is fetched to host as-is (no dtype laundering — the store
+    round-trip must be bit-exact for the rehydrated plan to serve
+    bit-identical predictions). A None ``h_tr_te`` is simply omitted.
+    """
+    out = {}
+    for name in PLAN_FIELDS:
+        leaf = getattr(plan, name)
+        if leaf is not None:
+            out[name] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def plan_from_arrays(arrays) -> CVPlan:
+    """Rebuild a :class:`CVPlan` from a :func:`plan_to_arrays` mapping.
+
+    Leaves are placed on the default device; a mapping missing any of the
+    four required leaves is rejected (the store treats that as a corrupt
+    entry and quarantines it rather than serving a partial plan).
+    """
+    missing = [n for n in PLAN_FIELDS[:4] if n not in arrays]
+    if missing:
+        raise ValueError(f"plan arrays missing required leaves {missing}")
+    h_tr_te = arrays.get("h_tr_te")
+    return CVPlan(
+        h=jnp.asarray(arrays["h"]),
+        te_idx=jnp.asarray(arrays["te_idx"]),
+        tr_idx=jnp.asarray(arrays["tr_idx"]),
+        chol_ih=jnp.asarray(arrays["chol_ih"]),
+        h_tr_te=None if h_tr_te is None else jnp.asarray(h_tr_te),
+    )
 
 
 def make_eval_binary(adjust_bias: bool = True, donate: bool = False):

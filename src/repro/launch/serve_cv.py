@@ -30,6 +30,18 @@ set the session served; ``--warmup-from FILE`` replays a recorded set at
 boot, warming the per-workload shapes yesterday's traffic needed. Reports
 requests/s and the engine's cache / compile statistics.
 
+``--plan-store DIR`` adds the durable plan tier: cache misses read
+verified plans from DIR before rebuilding, and with ``--save-plans``
+every fresh build is persisted (write-behind) for the next boot.
+``--compilation-cache DIR`` turns on jax's persistent XLA compilation
+cache. Together they make the full warm-boot sequence::
+
+    serve_cv --http 0 --plan-store X --compilation-cache Y \\
+             --warmup-from traffic.json --save-plans
+
+reach 0-plan-build, ~0-compile-time steady state in seconds (CI's
+restart-smoke job SIGKILLs a warmed server and asserts exactly that).
+
 With ``--http PORT`` the process becomes a network service instead of a
 local replay: datasets register, warm-up runs as requested, then an
 :class:`repro.serve.HTTPEdge` serves ``Workload`` JSON over HTTP —
@@ -217,6 +229,30 @@ async def replay_async(engine, workloads, n_clients, perm_demo=None):
     assert all(r is not None for r in results)
 
 
+def setup_compilation_cache(path):
+    """Point jax's persistent compilation cache at ``path`` (opt-in).
+
+    Thresholds drop to zero so even this workload's small CPU programs
+    persist — the restart-smoke job needs every program cached, not just
+    the slow ones. Failures degrade to a warning: the persistent cache
+    is a warm-boot accelerator, never a serving prerequisite.
+    """
+    if not path:
+        return False
+    try:
+        from jax.experimental.compilation_cache import compilation_cache as cc
+
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+        cc.set_cache_dir(path)
+        print(f"[serve_cv] XLA compilation cache -> {path}")
+        return True
+    except Exception as e:  # noqa: BLE001 - best-effort accelerator
+        print(f"[serve_cv] warning: compilation cache unavailable: {e}")
+        return False
+
+
 def start_profile(profile_dir):
     """Begin a jax.profiler capture; returns True when it actually started.
 
@@ -287,6 +323,9 @@ def serve_http(engine, args, record):
     except KeyboardInterrupt:
         print("[serve_cv] http edge shut down")
     finally:
+        # The edge's stop path flushes too, but a KeyboardInterrupt can
+        # land before/after it — make write-behind durability explicit.
+        engine.flush_store()
         if args.record_traffic and record is not None:
             record.save(args.record_traffic)
             print(f"[serve_cv] recorded {len(record)} (task, bucket) "
@@ -341,6 +380,19 @@ def main():
                     help="capture a jax.profiler trace of warm-up plus "
                     "the first timed pass into DIR (view with "
                     "TensorBoard or Perfetto)")
+    ap.add_argument("--plan-store", metavar="DIR", default=None,
+                    help="durable plan-store directory: cache misses load "
+                    "verified plans from here before rebuilding")
+    ap.add_argument("--save-plans", action="store_true",
+                    help="with --plan-store: persist every freshly built "
+                    "plan (write-behind) for the next boot")
+    ap.add_argument("--compilation-cache", metavar="DIR", default=None,
+                    help="persistent XLA compilation cache directory "
+                    "(jax.experimental.compilation_cache); repeat boots "
+                    "skip compile time for already-seen programs")
+    ap.add_argument("--store-mb", type=int, default=4096,
+                    help="plan-store byte budget in MiB (GC evicts oldest "
+                    "entries over it; default 4096)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rsa", action="store_true",
@@ -349,7 +401,21 @@ def main():
                     help="RSA conditions per dataset (with --rsa)")
     args = ap.parse_args()
 
-    engine = CVEngine(EngineConfig(cache_bytes=args.cache_mb << 20))
+    if args.save_plans and not args.plan_store:
+        ap.error("--save-plans requires --plan-store DIR")
+    setup_compilation_cache(args.compilation_cache)
+
+    engine = CVEngine(EngineConfig(
+        cache_bytes=args.cache_mb << 20,
+        plan_store=args.plan_store,
+        save_plans=args.save_plans,
+        store_bytes=args.store_mb << 20,
+    ))
+    if args.plan_store:
+        print(f"[serve_cv] plan store -> {args.plan_store} "
+              f"({len(engine.store)} entries, "
+              f"{engine.store.stats.bytes_in_store / 2**20:.1f} MiB resident"
+              f"{', save-plans' if args.save_plans else ', read-only'})")
     if args.metrics:
         engine.enable_tracing(ring=args.trace_ring)
     record = TrafficLog() if args.record_traffic else None
@@ -441,7 +507,12 @@ def main():
         print(f"[serve_cv] recorded {len(record)} (task, bucket) entries "
               f"-> {args.record_traffic}")
 
+    engine.flush_store()
     stats = engine.stats()
+    if args.plan_store:
+        print(f"[serve_cv] plan store: {stats['store_hits']} hits / "
+              f"{stats['store_misses']} misses / {stats['store_writes']} "
+              f"writes, {stats['store_bytes'] / 2**20:.1f} MiB on disk")
     print(f"[serve_cv] cache: {stats['hits']} hits / {stats['misses']} misses "
           f"/ {stats['evictions']} evictions / {stats['pinned']} pinned, "
           f"{stats['bytes_in_use'] / 2**20:.1f} MiB in use "

@@ -16,6 +16,10 @@ productises that behind a single declarative surface:
   cache     PlanCache — LRU CVPlan store under a byte budget, with
             admission control for plans larger than the whole budget and
             pin/unpin for warm, never-evicted plans.
+  store     PlanStore — durable disk tier under the cache: atomic
+            content-addressed plan checkpoints with integrity-verified
+            loads, corrupt-entry quarantine, and byte-budget GC, so a
+            restarted replica warm-boots with zero plan builds.
   engine    CVEngine — dataset registry (register once, serve by handle),
             cached plans + shape-bucketed jitted eval paths from the
             estimator registry, RDM memoisation, and an explicit warmup()
@@ -34,10 +38,10 @@ productises that behind a single declarative surface:
             fixed-bucket histograms over the whole request path, rendered
             in Prometheus text format.
   trace     Tracer / Trace / Span — request-scoped stage timing
-            (decode → validate → plan_build → cache_lookup → batch_wait →
-            eval → null_chunk → encode) attached to responses as an
-            optional ``timings`` dict; off by default, zero overhead when
-            disabled (``engine.enable_tracing()``).
+            (decode → validate → plan_build → cache_lookup → store_load →
+            batch_wait → eval → null_chunk → encode) attached to responses
+            as an optional ``timings`` dict; off by default, zero overhead
+            when disabled (``engine.enable_tracing()``).
 
 Entry point: ``python -m repro.launch.serve_cv`` (``--http PORT`` for the
 network edge).
@@ -69,6 +73,7 @@ from repro.serve.http import (  # noqa: F401
     WireError,
 )
 from repro.serve.obs import MetricsRegistry  # noqa: F401
+from repro.serve.store import PlanStore, StoreStats  # noqa: F401
 from repro.serve.trace import STAGES, Span, Trace, Tracer  # noqa: F401
 from repro.serve.workload import (  # noqa: F401
     WORKLOAD_SCHEMA_VERSION,

@@ -116,6 +116,9 @@ class AsyncEngineServer:
                     fut.set_exception(RuntimeError("server stopped before serving"))
         self._executor.shutdown(wait=True)
         self._executor = None
+        # Write-behind plan saves must land before the process can exit —
+        # a SIGTERM'd replica's last builds are next boot's store hits.
+        self.engine.flush_store()
 
     async def __aenter__(self) -> "AsyncEngineServer":
         return await self.start()

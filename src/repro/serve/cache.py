@@ -192,8 +192,19 @@ class PlanCache:
             self.stats.bytes_in_use -= evicted.nbytes
             self.stats.evictions += 1
 
-    def get_or_build(self, key: Hashable, build: Callable[[], CVPlan]) -> tuple[CVPlan, bool]:
+    def get_or_build(
+        self,
+        key: Hashable,
+        build: Callable[[], CVPlan],
+        fetch: Optional[Callable[[], Optional[CVPlan]]] = None,
+    ) -> tuple[CVPlan, bool]:
         """Return ``(plan, was_hit)``; builds (single-flight) on miss.
+
+        ``fetch`` is the optional second tier between memory and build —
+        the engine passes the disk-backed plan store's verified ``load``.
+        A fetched plan is admitted like a fresh build (it *was* a cache
+        miss, just resolved cheaply) and returned with ``was_hit=False``,
+        so cache hit/miss stats keep meaning "resident in memory".
 
         An oversized build is still returned to the caller — the engine
         must serve it — it just never enters the cache (see ``put``).
@@ -202,6 +213,11 @@ class PlanCache:
             plan = self.get(key)
             if plan is not None:
                 return plan, True
+            if fetch is not None:
+                plan = fetch()
+                if plan is not None:
+                    self.put(key, plan)
+                    return plan, False
             plan = build()
             self.put(key, plan)
             return plan, False

@@ -5,7 +5,11 @@ The engine is the multi-tenant core of ``repro.serve``. It owns
   * a :class:`~repro.serve.cache.PlanCache` — one
     :class:`~repro.core.fastcv.CVPlan` per (dataset × folds × λ × mode),
     LRU-evicted under a byte budget, so repeated requests against the same
-    features never re-factorise;
+    features never re-factorise — optionally backed by a durable
+    :class:`~repro.serve.store.PlanStore` tier (``plan_store`` config):
+    cache misses read-through from disk before rebuilding, fresh builds
+    persist write-behind (``save_plans``), so a restarted replica
+    warm-boots with zero plan builds;
   * a **dataset registry** — :meth:`CVEngine.register` fingerprints a
     dataset once and returns a
     :class:`~repro.serve.workload.DatasetHandle`; workloads carry the
@@ -59,6 +63,7 @@ from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
 from repro.serve.cache import PlanCache
 from repro.serve.obs import SIZE_BUCKETS, MetricsRegistry
+from repro.serve.store import PlanStore
 from repro.serve.trace import STAGES, Tracer
 from repro.serve.workload import DatasetHandle, get_estimator
 
@@ -105,6 +110,13 @@ class EngineConfig:
                  label array is single-use (and on TPU/GPU, where
                  donation is actually implemented).
     buckets:     static label-batch sizes; ragged batches pad up to these.
+    plan_store:  optional directory for the durable plan tier
+                 (:class:`repro.serve.store.PlanStore`): cache misses try
+                 a verified disk read before the O(N²P) rebuild.
+    save_plans:  with ``plan_store``: write-behind every freshly built
+                 plan to the store (off = read-only warm-boot tier).
+    store_bytes: plan-store byte budget (GC evicts oldest entries over
+                 it, never those pinned in the in-memory cache).
     """
 
     cache_bytes: int = 512 << 20
@@ -114,12 +126,17 @@ class EngineConfig:
     perm_axes: tuple = ("data",)
     donate: Optional[bool] = None
     buckets: Sequence[int] = DEFAULT_BUCKETS
+    plan_store: Optional[str] = None
+    save_plans: bool = False
+    store_bytes: int = 4 << 30
 
     def __post_init__(self):
         if self.gram_impl not in _GRAM_IMPLS:
             raise ValueError(f"gram_impl must be one of {_GRAM_IMPLS}")
         if self.gram_impl == "distributed" and self.mesh is None:
             raise ValueError("gram_impl='distributed' requires a mesh")
+        if self.save_plans and not self.plan_store:
+            raise ValueError("save_plans=True requires a plan_store directory")
 
 
 class CVEngine:
@@ -128,6 +145,11 @@ class CVEngine:
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
         self.cache = PlanCache(self.config.cache_bytes)
+        self.store = (
+            PlanStore(self.config.plan_store, byte_budget=self.config.store_bytes)
+            if self.config.plan_store
+            else None
+        )
         self.rdm_cache = rsa_rdm.RDMCache()
         self.metrics = MetricsRegistry()
         self.tracer = Tracer(registry=self.metrics)
@@ -200,6 +222,26 @@ class CVEngine:
             "Plan cache resident bytes",
             fn=lambda: self.cache.stats.bytes_in_use,
         )
+        m.gauge(
+            "plan_store_hits",
+            "Plans loaded (verified) from the disk store",
+            fn=lambda: self.store.stats.hits if self.store else 0,
+        )
+        m.gauge(
+            "plan_store_misses",
+            "Disk-store probes that found nothing usable",
+            fn=lambda: self.store.stats.misses if self.store else 0,
+        )
+        m.gauge(
+            "plan_store_writes",
+            "Plans committed to the disk store",
+            fn=lambda: self.store.stats.writes if self.store else 0,
+        )
+        m.gauge(
+            "plan_store_bytes",
+            "Committed plan-store bytes on disk",
+            fn=lambda: self.store.stats.bytes_in_store if self.store else 0,
+        )
         m.gauge("compile_events", "jit cache entries across every eval path", fn=self.compile_count)
         m.gauge("rdm_hits", "Empirical-RDM memo hits", fn=lambda: self.rdm_cache.hits)
         m.gauge("plans_built", "CVPlans built by this engine", fn=lambda: self.plans_built)
@@ -235,9 +277,10 @@ class CVEngine:
     ):
         """Fetch-or-build the plan for (x, folds, λ). Returns (key, plan).
 
-        A plan *with* the train block is a superset of the one without
-        (same H, same factors, extra H_{Tr,Te}), so a ridge request is
-        happily served from a cached bias-adjust plan."""
+        Lookup order: memory (PlanCache) → disk (PlanStore, when
+        configured) → build. A plan *with* the train block is a superset
+        of the one without (same H, same factors, extra H_{Tr,Te}), so a
+        ridge request is happily served from a cached bias-adjust plan."""
         with self.tracer.span("cache_lookup"):
             key = fastcv.plan_key(x, folds, lam, mode, with_train_block)
             if not with_train_block:
@@ -246,11 +289,28 @@ class CVEngine:
                 if plan is not None:
                     return superset, plan
         plan, _ = self.cache.get_or_build(
-            key, lambda: self._build_plan(x, folds, lam, mode, with_train_block)
+            key,
+            lambda: self._build_plan(x, folds, lam, mode, with_train_block, key=key),
+            fetch=self._store_fetch(key),
         )
         return key, plan
 
-    def _build_plan(self, x, folds, lam, mode, with_train_block):
+    def _store_fetch(self, key):
+        """Read-through closure for the disk tier (None when no store).
+
+        ``store_load`` is its own trace stage: warm-boot budgets care
+        whether a miss cost a disk read or an O(N²P) rebuild.
+        """
+        if self.store is None:
+            return None
+
+        def fetch():
+            with self.tracer.span("store_load"):
+                return self.tracer.sync(self.store.load(key))
+
+        return fetch
+
+    def _build_plan(self, x, folds, lam, mode, with_train_block, key=None):
         # Top-level span (not nested under cache_lookup) so the build cost
         # lands in its own stage_latency_seconds series — plan_build is the
         # budget the next perf PR (kernel fusion) is judged against.
@@ -264,7 +324,17 @@ class CVEngine:
                 )
             )
         self.plans_built += 1
+        if key is not None and self.store is not None and self.config.save_plans:
+            # Write-behind: snapshot now, commit off the request path. The
+            # current pin set shields those entries from this write's GC.
+            self.store.save_async(key, plan, protect=self.cache.pinned_keys())
         return plan
+
+    def flush_store(self) -> None:
+        """Join outstanding write-behind plan saves (shutdown path);
+        no-op without a configured store."""
+        if self.store is not None:
+            self.store.flush()
 
     def _build_gram(self, x):
         impl = self.config.gram_impl
@@ -881,9 +951,13 @@ class CVEngine:
         labels_evaluated, compiles, datasets_registered, rdm_hits,
         rdm_entries) are preserved bit-for-bit — the metrics registry
         reads *these* counters through callback gauges, never the other
-        way round. ``per_dataset`` is :meth:`dataset_stats`.
+        way round. The ``store_*`` keys are always present (zero without
+        a configured plan store) so dashboards and the restart-smoke
+        assertions never branch on configuration. ``per_dataset`` is
+        :meth:`dataset_stats`.
         """
         s = self.cache.stats.as_dict()
+        st = self.store.stats if self.store is not None else None
         s.update(
             plans_built=self.plans_built,
             labels_evaluated=self.labels_evaluated,
@@ -891,6 +965,10 @@ class CVEngine:
             datasets_registered=len(self._datasets),
             rdm_hits=self.rdm_cache.hits,
             rdm_entries=len(self.rdm_cache),
+            store_hits=st.hits if st else 0,
+            store_misses=st.misses if st else 0,
+            store_writes=st.writes if st else 0,
+            store_bytes=st.bytes_in_store if st else 0,
         )
         s["per_dataset"] = self.dataset_stats()
         return s

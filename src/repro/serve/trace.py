@@ -63,6 +63,7 @@ STAGES = (
     "validate",  # as_workload normalisation + workload validation
     "plan_build",  # O(N^2 P) Gram + factorisations (cache miss only)
     "cache_lookup",  # plan_key fingerprint + cache probe
+    "store_load",  # disk plan-store read + integrity check (miss path)
     "batch_wait",  # submit -> dequeue latency (thread/async servers)
     "eval",  # bucketed jitted eval (scores, RDMs, tune sweeps)
     "null_chunk",  # permutation-null chunks (monolithic or streamed)

@@ -196,6 +196,10 @@ _GOLDEN_STATS_KEYS = {
     "datasets_registered",
     "rdm_hits",
     "rdm_entries",
+    "store_hits",
+    "store_misses",
+    "store_writes",
+    "store_bytes",
     "per_dataset",
 }
 

@@ -1,0 +1,329 @@
+"""Durable plan-store semantics (repro.serve.store.PlanStore).
+
+The warm-boot contract: a fresh engine pointed at yesterday's store dir
+serves every registered estimator bit-identically with *zero* plan
+builds; damage (corruption, truncation, schema skew) degrades to
+cold-boot behaviour via quarantine, never an exception; byte-budget GC
+never evicts entries whose plans are pinned in memory; and concurrent
+writers sharing one directory can't corrupt each other. Plus the key
+durability prerequisite: ``plan_key`` is stable across processes (the
+fingerprint memo is an in-process accelerator, never part of the
+digest).
+"""
+
+import json
+import subprocess
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastcv
+from repro.core import folds as foldlib
+from repro.serve import Client, CVEngine, EngineConfig, PlanStore, Workload
+from repro.serve.store import SCHEMA_VERSION, _MANIFEST
+
+N, P, K, LAM = 32, 48, 4, 1.0
+
+
+@pytest.fixture
+def problem():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, P), dtype=jnp.float64)
+    y_int = np.asarray(jnp.arange(N) % 3, dtype=np.int32)
+    y_bin = jnp.where(jnp.arange(N) % 2 == 0, -1.0, 1.0)
+    return x, y_bin, y_int, foldlib.kfold(N, K, seed=1)
+
+
+def _plan_and_key(x, folds, lam=LAM):
+    key = fastcv.plan_key(x, folds, lam, "auto", True)
+    return key, fastcv.prepare(x, folds, lam, with_train_block=True)
+
+
+def _workloads(handle, y_bin, y_int):
+    """One workload per registered estimator family."""
+    y_multi = jnp.stack([jnp.asarray(y_bin), 2.0 * jnp.asarray(y_bin)], axis=1)
+    return {
+        "binary": Workload(kind="cv", dataset=handle, y=y_bin),
+        "ridge": Workload(kind="cv", dataset=handle, y=y_bin, estimator="ridge"),
+        "multiclass": Workload(
+            kind="cv", dataset=handle, y=y_int, estimator="multiclass", num_classes=3
+        ),
+        "ridge_multi": Workload(
+            kind="cv", dataset=handle, y=y_multi, estimator="ridge_multi"
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Warm boot: rehydrated plans serve bit-identically, zero builds
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_bit_identical_all_estimators(problem, tmp_path):
+    x, y_bin, y_int, folds = problem
+    cold = CVEngine(EngineConfig(plan_store=str(tmp_path), save_plans=True))
+    handle = cold.register(x, folds, LAM)
+    expected = {
+        name: Client(cold).submit(w) for name, w in _workloads(handle, y_bin, y_int).items()
+    }
+    cold.flush_store()
+    assert cold.plans_built == 1
+    assert cold.store.stats.writes == 1
+
+    warm = CVEngine(EngineConfig(plan_store=str(tmp_path)))
+    handle2 = warm.register(x, folds, LAM)
+    assert handle2.key == handle.key
+    got = {
+        name: Client(warm).submit(w) for name, w in _workloads(handle2, y_bin, y_int).items()
+    }
+    assert warm.plans_built == 0, "warm boot must not rebuild any plan"
+    s = warm.stats()
+    assert s["store_hits"] == 1 and s["plans_built"] == 0
+    for name, resp in expected.items():
+        np.testing.assert_array_equal(
+            np.asarray(resp.values), np.asarray(got[name].values), err_msg=name
+        )
+        np.testing.assert_array_equal(np.asarray(resp.score), np.asarray(got[name].score))
+
+
+def test_store_load_is_a_traced_stage(problem, tmp_path):
+    x, _, _, folds = problem
+    key, plan = _plan_and_key(x, folds)
+    PlanStore(tmp_path).save(key, plan)
+
+    engine = CVEngine(EngineConfig(plan_store=str(tmp_path)))
+    handle = engine.register(x, folds, LAM)
+    engine.enable_tracing()
+    tr = engine.tracer.trace(kind="cv")
+    with engine.tracer.activate(tr):
+        engine.resolve(handle)
+    engine.tracer.finish(tr)
+    timings = tr.timings()
+    assert "store_load" in timings and "plan_build" not in timings
+
+
+def test_stats_keys_present_without_store(problem):
+    s = CVEngine().stats()
+    assert s["store_hits"] == s["store_misses"] == s["store_writes"] == s["store_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Damage: quarantined, never fatal
+# ---------------------------------------------------------------------------
+
+
+def _saved_store(x, folds, root):
+    key, plan = _plan_and_key(x, folds)
+    store = PlanStore(root)
+    assert store.save(key, plan)
+    return store, key, plan
+
+
+def test_corrupt_leaf_quarantined(problem, tmp_path):
+    x, _, _, folds = problem
+    store, key, _ = _saved_store(x, folds, tmp_path)
+    (store.path_for(key) / "h.npy").write_bytes(b"not an array")
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+    assert not store.path_for(key).exists()
+    assert (tmp_path / "quarantine").exists()
+    # a second probe is a clean miss, not a second quarantine
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+
+
+def test_bitflip_detected_by_digest(problem, tmp_path):
+    x, _, _, folds = problem
+    store, key, plan = _saved_store(x, folds, tmp_path)
+    path = store.path_for(key) / "h.npy"
+    arr = np.load(path)
+    arr[0, 0] += 1e-9  # same shape/dtype, different content
+    np.save(path, arr)
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+
+
+def test_truncated_entry_quarantined(problem, tmp_path):
+    x, _, _, folds = problem
+    store, key, _ = _saved_store(x, folds, tmp_path)
+    (store.path_for(key) / "chol_ih.npy").unlink()
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+
+
+def test_schema_mismatch_quarantined(problem, tmp_path):
+    x, _, _, folds = problem
+    store, key, _ = _saved_store(x, folds, tmp_path)
+    mpath = store.path_for(key) / _MANIFEST
+    manifest = json.loads(mpath.read_text())
+    manifest["schema"] = SCHEMA_VERSION + 1
+    mpath.write_text(json.dumps(manifest))
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+
+
+def test_garbled_manifest_quarantined(problem, tmp_path):
+    x, _, _, folds = problem
+    store, key, _ = _saved_store(x, folds, tmp_path)
+    (store.path_for(key) / _MANIFEST).write_text("{ not json")
+    assert store.load(key) is None
+    assert store.stats.quarantined == 1
+
+
+def test_damaged_store_degrades_to_cold_boot(problem, tmp_path):
+    """An engine over a damaged store rebuilds instead of crashing."""
+    x, y_bin, _, folds = problem
+    store, key, _ = _saved_store(x, folds, tmp_path)
+    (store.path_for(key) / "h.npy").write_bytes(b"garbage")
+
+    engine = CVEngine(EngineConfig(plan_store=str(tmp_path)))
+    handle = engine.register(x, folds, LAM)
+    resp = Client(engine).submit(Workload(kind="cv", dataset=handle, y=y_bin))
+    assert resp.values is not None
+    assert engine.plans_built == 1  # rebuilt the quarantined entry
+    assert engine.store.stats.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# GC: byte budget + memory-pin protection
+# ---------------------------------------------------------------------------
+
+
+def _distinct_plans(n_plans, seed0=10):
+    out = []
+    for i in range(n_plans):
+        x = jax.random.normal(jax.random.PRNGKey(seed0 + i), (N, P), dtype=jnp.float64)
+        folds = foldlib.kfold(N, K, seed=i)
+        out.append((x, folds) + _plan_and_key(x, folds))
+    return out
+
+
+def test_gc_respects_byte_budget(tmp_path):
+    plans = _distinct_plans(3)
+    entry_bytes = None
+    store = PlanStore(tmp_path, byte_budget=1 << 40)
+    for _, _, key, plan in plans:
+        store.save(key, plan)
+    entry_bytes = store.total_bytes() // 3
+    # budget for two entries: oldest must go
+    store.stats.byte_budget = int(entry_bytes * 2.5)
+    evicted = store.gc()
+    assert evicted == 1
+    assert store.load(plans[0][2]) is None  # oldest evicted
+    assert store.load(plans[1][2]) is not None
+    assert store.load(plans[2][2]) is not None
+    assert store.total_bytes() <= store.stats.byte_budget
+
+
+def test_gc_never_evicts_memory_pinned(problem, tmp_path):
+    plans = _distinct_plans(3)
+    store = PlanStore(tmp_path, byte_budget=1 << 40)
+    for _, _, key, plan in plans:
+        store.save(key, plan)
+    pinned_key = plans[0][2]  # oldest AND protected
+    store.stats.byte_budget = store.total_bytes() // 3  # room for ~one entry
+    store.gc(protect=[pinned_key])
+    assert store.load(pinned_key) is not None, "pinned entry must survive GC"
+    assert store.stats.evictions == 2
+
+
+def test_engine_write_behind_protects_pins(tmp_path):
+    """The engine's save path shields cache-pinned keys from store GC."""
+    plans = _distinct_plans(2)
+    (x0, f0, key0, _), (x1, f1, _, _) = plans
+    entry_bytes = None
+    probe = PlanStore(tmp_path / "probe")
+    probe.save(key0, plans[0][3])
+    entry_bytes = probe.total_bytes()
+
+    engine = CVEngine(
+        EngineConfig(
+            plan_store=str(tmp_path / "store"),
+            save_plans=True,
+            store_bytes=int(entry_bytes * 1.5),  # one entry fits, two don't
+        )
+    )
+    h0 = engine.register(x0, f0, LAM)
+    engine.resolve(h0)
+    engine.pin(h0)
+    engine.flush_store()
+    h1 = engine.register(x1, f1, LAM)
+    engine.resolve(h1)
+    engine.flush_store()
+    # over budget: GC ran, but the pinned (older) entry survived
+    assert engine.store.load(h0.key) is not None
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: two engines, one dir
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_writers_do_not_corrupt(tmp_path):
+    plans = _distinct_plans(4)
+    stores = [PlanStore(tmp_path) for _ in range(2)]
+
+    def hammer(store, order):
+        for i in order:
+            _, _, key, plan = plans[i]
+            store.save(key, plan)
+
+    threads = [
+        threading.Thread(target=hammer, args=(stores[0], [0, 1, 2, 3])),
+        threading.Thread(target=hammer, args=(stores[1], [3, 2, 1, 0])),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    check = PlanStore(tmp_path)
+    assert len(check) == 4
+    for _, _, key, plan in plans:
+        loaded = check.load(key)
+        assert loaded is not None
+        np.testing.assert_array_equal(np.asarray(plan.h), np.asarray(loaded.h))
+    assert check.stats.quarantined == 0
+    # exactly one commit per key across both writers
+    assert stores[0].stats.writes + stores[1].stats.writes == 4
+
+
+# ---------------------------------------------------------------------------
+# Key durability: stable across processes, memo keyed by sampling cap
+# ---------------------------------------------------------------------------
+
+_KEY_SCRIPT = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import json, jax.numpy as jnp
+from repro.core import fastcv, folds as foldlib
+x = jax.random.normal(jax.random.PRNGKey(7), (24, 16), dtype=jnp.float64)
+key = fastcv.plan_key(x, foldlib.kfold(24, 4, seed=2), 0.5, "auto", True)
+print(json.dumps(list(key)))
+"""
+
+
+def test_plan_key_stable_across_processes():
+    x = jax.random.normal(jax.random.PRNGKey(7), (24, 16), dtype=jnp.float64)
+    here = fastcv.plan_key(x, foldlib.kfold(24, 4, seed=2), 0.5, "auto", True)
+    out = subprocess.run(
+        [sys.executable, "-c", _KEY_SCRIPT], capture_output=True, text=True, timeout=300
+    )
+    assert out.returncode == 0, out.stderr
+    there = tuple(json.loads(out.stdout.strip()))
+    assert there == tuple(here), "plan_key must not depend on process state"
+
+
+def test_fingerprint_memo_keyed_by_sample_cap():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 64), dtype=jnp.float64)
+    fresh = fastcv.fingerprint(jnp.array(x))  # un-memoised reference digest
+    sampled = fastcv.fingerprint(x, sample_cap=16)
+    assert sampled != fresh  # above the cap: sampling changes the digest
+    # the small-cap memo entry must not poison the default-cap lookup
+    assert fastcv.fingerprint(x) == fresh
+    # and memoisation still works per cap
+    assert fastcv.fingerprint(x, sample_cap=16) == sampled
+    assert fastcv.fingerprint(x) == fresh
