@@ -19,7 +19,7 @@ from benchmarks.common import row, timeit
 from repro import rsa
 from repro.core import folds as foldlib
 from repro.data import synthetic
-from repro.serve import CVEngine, DatasetSpec, RSARequest, serve
+from repro.serve import CVEngine, DatasetSpec, Workload, serve
 
 
 def run(fast: bool = False):
@@ -35,7 +35,9 @@ def run(fast: bool = False):
     spec = DatasetSpec(x, f, lam)
     mu = rsa.condition_means(x, y_cond, c)
     models = jnp.stack([rsa.euclidean_rdm(mu), rsa.ring_rdm(c)])
-    req = RSARequest(spec, y_cond, c, model_rdms=models, n_perm=t_perm, seed=0)
+    req = Workload(
+        kind="rsa", dataset=spec, y=y_cond, num_classes=c, model_rdms=models, n_perm=t_perm, seed=0
+    )
 
     # -- cold: fresh engine; plan build + compile + eval -------------------
     engine = CVEngine()
@@ -65,7 +67,15 @@ def run(fast: bool = False):
     # -- coalesced RSA batches: requests/s vs batch size -------------------
     for bs in (1, 4, 16):
         reqs = [
-            RSARequest(spec, y_cond, c, model_rdms=models, n_perm=t_perm, seed=s)
+            Workload(
+                kind="rsa",
+                dataset=spec,
+                y=y_cond,
+                num_classes=c,
+                model_rdms=models,
+                n_perm=t_perm,
+                seed=s,
+            )
             for s in range(bs)
         ]
 

@@ -1,0 +1,109 @@
+"""Incremental plan updates: rank-k correction vs from-scratch rebuild.
+
+The ``kind="update"`` economics: appending/retiring a handful of rows
+costs a host-numpy rank-k Woodbury correction (O(N²·k)), not the O(N²P)
+Gram rebuild — and a steady-state sliding window advances versions with
+zero new XLA programs. Rows:
+
+  update_append_warm     — one rank-K append correction of a prepared
+                           plan (host float64, no device work); gated
+  update_rebuild_cold    — from-scratch ``prepare`` at the appended
+                           size: what the correction replaces (includes
+                           device transfer; context, not gated)
+  update_window_steady_warm — engine-level sliding-window advance
+                           (retire oldest test slot per fold + append),
+                           steady-state median over several versions;
+                           gated. ``derived`` reports the p95 and that
+                           the advance stayed compile-flat.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import percentiles, row, timeit
+from repro.core import fastcv, folds as foldlib
+from repro.serve import CVEngine, EngineConfig
+
+
+def run(fast: bool = False):
+    rows = []
+    # the correction is O(N²·k) host work vs the O(N²P) Gram rebuild, so
+    # it only pays at serving-sized P — bench at the sizes it targets
+    n, p = (128, 4096) if fast else (256, 8192)
+    k_folds, lam = 8, 1.0
+    steps = 6 if fast else 12
+
+    x_all = jax.random.normal(jax.random.PRNGKey(3), (n + k_folds, p), dtype=jnp.float64)
+    x0 = x_all[:n]
+    folds = foldlib.kfold(n, k_folds, seed=0)
+    plan = fastcv.prepare(x0, folds, lam, mode="dual", with_train_block=True)
+
+    x0_np = np.asarray(x0)
+    x_new = np.asarray(x_all[n:])
+    assign = np.arange(k_folds) % k_folds
+
+    secs_up = timeit(
+        lambda: fastcv.update_plan(plan, x_new, assign, x=x0_np, lam=lam), warmup=1, repeats=5
+    )
+
+    folds_after = foldlib.kfold(n + k_folds, k_folds, seed=0)
+    secs_rebuild = timeit(
+        lambda: fastcv.prepare(x_all, folds_after, lam, mode="dual", with_train_block=True),
+        warmup=1,
+        repeats=3,
+    )
+
+    speedup = secs_rebuild / max(secs_up, 1e-9)
+    rows.append(
+        row(
+            f"update_append_warm_N{n}_P{p}_k{k_folds}",
+            secs_up,
+            f"rank-{k_folds} correction; {speedup:.1f}x cheaper than rebuild",
+        )
+    )
+    rows.append(
+        row(
+            f"update_rebuild_cold_N{n + k_folds}_P{p}",
+            secs_rebuild,
+            "from-scratch prepare the correction replaces",
+        )
+    )
+
+    # -- engine-level sliding window, steady state -------------------------
+    engine = CVEngine(EngineConfig(cache_bytes=256 << 20))
+    handle = engine.register(x0, folds, lam)
+    rng = np.random.default_rng(0)
+
+    def advance(h):
+        te = np.asarray(jax.device_get(engine.dataset_record(h).folds.te_idx))
+        fresh = jnp.asarray(rng.normal(size=(k_folds, p)))
+        return engine.update_dataset(h, x_new=fresh, drop_idx=te[:, 0])
+
+    handle = advance(handle)  # absorb first-advance overheads
+    compiles_warm = engine.compile_count()
+    samples = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        handle = advance(handle)
+        samples.append(time.perf_counter() - t0)
+    pct = percentiles(samples)
+    flat = engine.compile_count() == compiles_warm
+    rows.append(
+        row(
+            f"update_window_steady_warm_N{n}_P{p}_k{k_folds}",
+            pct["p50"],
+            f"p95={pct['p95'] * 1e3:.2f}ms over {steps} advances, "
+            f"version={handle.version}, compile_flat={flat}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(fast=True):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

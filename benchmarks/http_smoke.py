@@ -8,7 +8,7 @@ CI's http-smoke job boots the server with ``--warmup`` and runs this
 script against it, which asserts — across a real process boundary —
 everything the in-process conformance suite (tests/test_http.py) pins:
 
-  * all five workload kinds served over HTTP are **bit-identical** to a
+  * all five compute workload kinds served over HTTP are **bit-identical** to a
     local in-process Client computing the same workloads;
   * streamed SSE permutation chunks concatenate to the exact monolithic
     null distribution;
@@ -16,6 +16,9 @@ everything the in-process conformance suite (tests/test_http.py) pins:
     at the default chunk) serve first wire traffic with **0 compiles**
     (``--expect-warm``; proves ``--warmup`` covered real traffic), and a
     full warm replay of every kind adds 0 compiles;
+  * ``POST /v1/datasets/{fp}/append`` advances the dataset version with
+    zero compiles, and ``GET /v1/datasets`` + the per-dataset stats
+    round-trip ``version``/``n_appended`` across the wire;
   * ``GET /v1/metrics`` renders parseable Prometheus text with every
     stage-latency histogram pre-declared, and ``compile_events`` stays
     flat across a scrape → warm submit → scrape cycle.
@@ -165,7 +168,7 @@ def main() -> int:
 
     for name, w in cold:
         assert_responses_equal(client.submit(w), local.submit(swap(w, local_handle)), label=name)
-    print("[http_smoke] all five workload kinds bit-identical over the wire")
+    print("[http_smoke] all five compute kinds bit-identical over the wire")
 
     # SSE chunks == monolithic null, draw for draw
     stream_w = warmed[3][1]
@@ -186,6 +189,35 @@ def main() -> int:
     replay_delta = client.stats()["engine"]["compiles"] - before
     assert replay_delta == 0, f"{replay_delta} compiles on warm wire replay"
     print("[http_smoke] warm replay: 0 post-warmup compiles")
+
+    # mutable versioned datasets round-trip the wire: POST .../append
+    # advances the version; GET /v1/datasets and the per-dataset stats
+    # reflect version/n_appended; plan updates never recompile
+    view0 = {d["handle"].key: d for d in client.datasets()}
+    assert view0[handle.key]["version"] == 0
+    assert view0[handle.key]["n_appended"] == 0
+    before_update = client.stats()["engine"]["compiles"]
+    x_new = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(13), (args.k, args.p)), dtype=np.float64
+    )
+    h1 = client.append(handle, x_new)
+    assert (h1.version, h1.n_appended, h1.n) == (1, args.k, args.n + args.k), (
+        f"append returned version={h1.version} n_appended={h1.n_appended} n={h1.n}"
+    )
+    view1 = {d["handle"].key: d for d in client.datasets()}
+    assert view1[handle.key]["version"] == 0, "base version must stay registered"
+    assert view1[h1.key]["version"] == 1 and view1[h1.key]["n_appended"] == args.k
+    per = client.stats()["engine"]["per_dataset"]
+    fp12 = str(h1.key[0])[:12]
+    assert per[fp12]["version"] == 1 and per[fp12]["n_appended"] == args.k, (
+        f"per_dataset stats missing the appended version: {per.get(fp12)}"
+    )
+    update_delta = client.stats()["engine"]["compiles"] - before_update
+    assert update_delta == 0, f"{update_delta} compiles from a plan update"
+    print(
+        f"[http_smoke] versioned append conformant (v0 -> v{h1.version}, "
+        f"n_appended={h1.n_appended}, 0 compiles)"
+    )
 
     # /v1/metrics: exposition parses line by line, every stage histogram is
     # pre-declared, and compile_events is flat across scrape → submit → scrape

@@ -16,6 +16,7 @@ warm-row latencies against ``benchmarks/baseline.json`` via
   bench_kernels     — CV hot-spot kernels (XLA path GFLOP/s)
   bench_serve       — serving engine cold/warm + batch throughput
   bench_store       — plan-store write/load + cold-boot-with-store payoff
+  bench_update      — incremental plan updates vs rebuild; sliding window
   bench_rsa         — RSA serving cold/warm + pairdist kernel
   bench_async       — async server: concurrent clients, streaming chunks
   bench_http        — HTTP/SSE edge: wire overhead, gather, first chunk
@@ -48,6 +49,7 @@ from benchmarks import (
     bench_rsa,
     bench_serve,
     bench_store,
+    bench_update,
 )
 from benchmarks.common import print_rows
 
@@ -60,6 +62,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("serve(engine)", bench_serve),
     ("store(plan-store)", bench_store),
+    ("update(incremental)", bench_update),
     ("rsa(serve+kernel)", bench_rsa),
     ("async(serve.aio)", bench_async),
     ("http(serve.http)", bench_http),

@@ -58,6 +58,9 @@ __all__ = [
     "plan_from_arrays",
     "make_eval_binary",
     "make_eval_cv",
+    "update_plan",
+    "downdate_plan",
+    "sliding_window",
 ]
 
 
@@ -342,18 +345,25 @@ def fingerprint(x, *, sample_cap: int = _FINGERPRINT_SAMPLE_CAP) -> str:
 
 
 def plan_key(x, folds: Folds, lam: float, mode: str = "auto",
-             with_train_block: bool = True) -> tuple:
+             with_train_block: bool = True, *, version: int = 0) -> tuple:
     """Hashable identity of the :class:`CVPlan` that ``prepare`` would build.
 
     Both index arrays are fingerprinted: tr_idx is not derivable from
     te_idx in general (leftover samples, custom schemes), and the plan's
     train blocks + bias adjustment depend on it.
+
+    ``version`` is the dataset-registry version number (0 for a freshly
+    registered dataset; n+1 after each ``append``/``retire``). It sits at
+    index 5 so ``with_train_block`` stays the *last* element — the cache /
+    engine idiom ``key[:-1] + (flag,)`` keeps working unchanged. All
+    elements are JSON-stable, which is what lets the disk store address
+    entries by key across processes.
     """
     n, p = x.shape
     if mode == "auto":
         mode = "dual" if p >= n else "primal"
     return (fingerprint(x), fingerprint(folds.te_idx),
-            fingerprint(folds.tr_idx), float(lam), mode,
+            fingerprint(folds.tr_idx), float(lam), mode, int(version),
             bool(with_train_block))
 
 
@@ -418,3 +428,402 @@ def make_eval_cv(donate: bool = False):
     the ridge-regression serving path (Eq. 14 only, no bias adjust)."""
     kw = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(lambda plan, y: cv_errors(plan, y)[0], **kw)
+
+
+# ---------------------------------------------------------------------------
+# Incremental plan updates (streaming data): rank-k update / downdate of a
+# cached dual-mode plan when rows arrive or retire, instead of a full
+# rebuild. Follows the partition-incremental Gram idea of arXiv 2401.13185
+# (fold-wise X^TX blocks admit exact updates with centering corrections),
+# specialised to the paper's dual form:
+#
+#     A = G_c + λI,   S := H − 1/N·11ᵀ = G_c A⁻¹ = I − λA⁻¹
+#
+# so the *inverse is recoverable from the stored hat matrix* in O(N²):
+# A⁻¹ = (I − S)/λ — no refactorisation needed to start an update. Appending
+# k rows shifts the column means μ → μ′, which perturbs the old-row block by
+# the rank-2 correction R = u1ᵀ + 1uᵀ + (δᵀδ)11ᵀ (δ = μ−μ′, u = X_cδ);
+# Woodbury absorbs R, a Schur complement bolts on the k new rows, and
+# H′ = I − λA′⁻¹ + 1/N′·11ᵀ. Dropping rows is the principal-submatrix
+# inverse identity plus the same mean-shift correction. Total cost is
+# O(N²k + NPk) per update — never O(N³) or O(N²P).
+#
+# Everything here runs in host NumPy (float64) on purpose: update traffic
+# arrives with ever-changing N, and a jitted implementation would recompile
+# per shape — the serve engine's compile_events stays flat because this
+# path never enters XLA. Tolerances vs a from-scratch ``prepare`` rebuild
+# are pinned at ≤1e-5 by the parity tests.
+# ---------------------------------------------------------------------------
+
+
+def _np64(a) -> np.ndarray:
+    return np.asarray(jax.device_get(a), dtype=np.float64)
+
+
+def _resolve_update_mode(mode: str, x_shape) -> str:
+    if mode == "auto":
+        n, p = x_shape
+        mode = "dual" if p >= n else "primal"
+    if mode != "dual":
+        raise ValueError(
+            "incremental plan updates require a dual-mode plan (P >= N "
+            "regime): the N×N hat matrix determines (G_c + λI)⁻¹ exactly, "
+            "which is what the rank-k correction advances. Rebuild primal "
+            "plans with prepare() instead.")
+    return mode
+
+
+def _dual_inverse_from_plan(plan: CVPlan, lam: float) -> np.ndarray:
+    """Recover A⁻¹ = (G_c + λI)⁻¹ from the stored dual hat matrix, O(N²)."""
+    h = _np64(plan.h)
+    n = h.shape[0]
+    m = (np.eye(n) - (h - 1.0 / n)) / float(lam)
+    return 0.5 * (m + m.T)
+
+
+def _mean_shift_inverse(m: np.ndarray, x_c: np.ndarray,
+                        delta: np.ndarray) -> np.ndarray:
+    """(A + R)⁻¹ from M = A⁻¹ for the centering correction R.
+
+    R = u1ᵀ + 1uᵀ + (δᵀδ)11ᵀ with u = X_cδ — the exact perturbation of a
+    centered Gram when the centering mean shifts by δ. Factor R = W K Wᵀ,
+    W = [u, 1], K = [[0,1],[1,δᵀδ]] (det −1, always invertible — robust
+    even at δ = 0), and apply Woodbury.
+    """
+    n = m.shape[0]
+    u = x_c @ delta
+    w = np.stack([u, np.ones(n)], axis=1)                     # (N, 2)
+    c = float(delta @ delta)
+    k_inv = np.array([[-c, 1.0], [1.0, 0.0]])                 # K⁻¹
+    mw = m @ w                                                # (N, 2)
+    core = k_inv + w.T @ mw                                   # (2, 2)
+    out = m - mw @ np.linalg.solve(core, mw.T)
+    return 0.5 * (out + out.T)
+
+
+def _append_inverse(m: np.ndarray, x_old: np.ndarray, x_new: np.ndarray,
+                    lam: float) -> np.ndarray:
+    """A′⁻¹ for [x_old; x_new] (centered at the new mean) from M = A⁻¹."""
+    n, k = x_old.shape[0], x_new.shape[0]
+    mu = x_old.mean(axis=0)
+    mu2 = (n * mu + x_new.sum(axis=0)) / (n + k)
+    # Re-center the old block at μ′ (rank-2 Woodbury), then Schur-bolt the
+    # k new rows on. The old block A + R equals Z_oZ_oᵀ + λI exactly, with
+    # Z_o = x_old − 1μ′ᵀ, so the assembled blocks form (G′_c + λI)⁻¹.
+    m_c = _mean_shift_inverse(m, x_old - mu, mu - mu2)
+    z_old = x_old - mu2
+    z_new = x_new - mu2
+    b = z_old @ z_new.T                                       # (N, k)
+    c = z_new @ z_new.T + float(lam) * np.eye(k)              # (k, k)
+    mb = m_c @ b                                              # (N, k)
+    schur = c - b.T @ mb
+    schur = 0.5 * (schur + schur.T)
+    s_inv = np.linalg.inv(schur)
+    s_inv = 0.5 * (s_inv + s_inv.T)
+    out = np.empty((n + k, n + k))
+    out[:n, :n] = m_c + mb @ s_inv @ mb.T
+    out[:n, n:] = -mb @ s_inv
+    out[n:, :n] = out[:n, n:].T
+    out[n:, n:] = s_inv
+    return out
+
+
+def _downdate_inverse(m: np.ndarray, x_old: np.ndarray,
+                      drop: np.ndarray, lam: float) -> np.ndarray:
+    """A′⁻¹ for x_old minus ``drop`` rows (centered at the kept mean)."""
+    del lam  # identity needs no λ: A_κκ already contains it
+    n = x_old.shape[0]
+    keep = np.setdiff1d(np.arange(n), drop)
+    # Principal-submatrix inverse: (A_κκ)⁻¹ = M_κκ − M_κd (M_dd)⁻¹ M_dκ.
+    m_kd = m[np.ix_(keep, drop)]
+    m_dd = m[np.ix_(drop, drop)]
+    a_kk_inv = m[np.ix_(keep, keep)] - m_kd @ np.linalg.solve(m_dd, m_kd.T)
+    x_kept = x_old[keep]
+    mu = x_old.mean(axis=0)
+    return _mean_shift_inverse(a_kk_inv, x_kept - mu, mu - x_kept.mean(axis=0))
+
+
+def _finish_plan(m_inv: np.ndarray, lam: float, te: np.ndarray,
+                 tr: np.ndarray, with_train_block: bool, dtype) -> CVPlan:
+    """H′ = I − λA′⁻¹ + 1/N′·11ᵀ and the per-fold blocks, all in NumPy."""
+    n = m_inv.shape[0]
+    h = np.eye(n) - float(lam) * m_inv + 1.0 / n
+    h = 0.5 * (h + h.T)
+    h_te = h[te[:, :, None], te[:, None, :]]                  # (K, m, m)
+    chol = np.linalg.cholesky(np.eye(te.shape[1])[None] - h_te)
+    h_tr_te = (
+        h[tr[:, :, None], te[:, None, :]] if with_train_block else None
+    )
+    return CVPlan(
+        h=jnp.asarray(h, dtype),
+        te_idx=jnp.asarray(te, jnp.int32),
+        tr_idx=jnp.asarray(tr, jnp.int32),
+        chol_ih=jnp.asarray(chol, dtype),
+        h_tr_te=None if h_tr_te is None else jnp.asarray(h_tr_te, dtype),
+    )
+
+
+def _complement_folds(te: np.ndarray, n: int) -> np.ndarray:
+    """Training side = ascending complement of each fold's test set."""
+    k, m = te.shape
+    tr = np.empty((k, n - m), dtype=np.int64)
+    for i in range(k):
+        mask = np.ones(n, dtype=bool)
+        mask[te[i]] = False
+        tr[i] = np.nonzero(mask)[0]
+    return tr
+
+
+def _check_complement(te: np.ndarray, tr: np.ndarray, n: int) -> None:
+    for i in range(te.shape[0]):
+        mask = np.ones(n, dtype=bool)
+        mask[te[i]] = False
+        if not np.array_equal(np.sort(tr[i]), np.nonzero(mask)[0]):
+            raise ValueError(
+                "incremental fold derivation assumes complement training "
+                "sets (every non-test sample trains, as all built-in fold "
+                "generators produce); pass folds_delta as a full Folds for "
+                "custom schemes")
+
+
+def _extend_folds(te: np.ndarray, n: int, assign: np.ndarray) -> np.ndarray:
+    """New te after appending rows with per-row fold assignment.
+
+    ``assign[j]`` is the fold of appended row j (new sample id n+j), or −1
+    for a train-only row (the leftover convention of :mod:`repro.core.folds`
+    when K does not divide N). Per-fold counts must stay rectangular.
+    """
+    k = te.shape[0]
+    if assign.ndim != 1:
+        raise ValueError("folds_delta assignment must be 1-D (one fold id "
+                         "per appended row)")
+    if assign.size and (assign.min() < -1 or assign.max() >= k):
+        raise ValueError(
+            f"fold assignment out of range: got values in "
+            f"[{assign.min()}, {assign.max()}], plan has {k} folds")
+    tested = assign[assign >= 0]
+    counts = np.bincount(tested, minlength=k)
+    if counts.max() != counts.min():
+        raise ValueError(
+            "appending would make per-fold test sizes ragged "
+            f"(counts per fold {counts.tolist()}); static shapes require "
+            "equal fold sizes — assign equally many rows to every fold "
+            "(or -1 for train-only rows)")
+    new_ids = n + np.arange(assign.size)
+    return np.stack(
+        [np.concatenate([te[f], new_ids[assign == f]]) for f in range(k)])
+
+
+def _drop_folds(te: np.ndarray, n: int, drop: np.ndarray) -> np.ndarray:
+    """New te (renumbered over the kept rows) after dropping ``drop``."""
+    keep_mask = np.ones(n, dtype=bool)
+    keep_mask[drop] = False
+    remap = np.cumsum(keep_mask) - 1
+    rows = [remap[row[keep_mask[row]]] for row in te]
+    sizes = {len(r) for r in rows}
+    if len(sizes) != 1:
+        raise ValueError(
+            "dropping those rows would make per-fold test sizes ragged "
+            f"(sizes {sorted(len(r) for r in rows)}); drop equally many "
+            "test samples from every fold, or use sliding_window to "
+            "backfill the slots with appended rows")
+    return np.stack(rows).astype(np.int64)
+
+
+def _window_folds(te: np.ndarray, n: int, drop: np.ndarray,
+                  assign: np.ndarray) -> np.ndarray:
+    """New te for drop+append in one move, ragged-checked only at the end.
+
+    Unbalanced drops are fine here (unlike :func:`_drop_folds`) as long as
+    the appended rows backfill the holes to equal per-fold sizes. Kept rows
+    are renumbered by rank among survivors; appended row j becomes sample
+    ``n - len(drop) + j``.
+    """
+    k_new = assign.size
+    rows = []
+    for f in range(te.shape[0]):
+        kept = te[f][~np.isin(te[f], drop)]
+        add = n + np.nonzero(assign == f)[0]
+        rows.append(np.concatenate([kept, add]))
+    sizes = {len(r) for r in rows}
+    if len(sizes) != 1:
+        raise ValueError(
+            "window advance would make per-fold test sizes ragged "
+            f"(sizes {sorted(len(r) for r in rows)}); appended rows must "
+            "backfill dropped test slots to equal per-fold counts")
+    keep = np.setdiff1d(np.arange(n), drop)
+    remap = np.full(n + k_new, -1, dtype=np.int64)
+    remap[keep] = np.arange(keep.size)
+    remap[n:] = keep.size + np.arange(k_new)
+    return np.stack([remap[r] for r in rows]).astype(np.int64)
+
+
+def _fold_of(te: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Fold membership of each sample id in ``idx`` (−1 if train-only)."""
+    out = np.full(idx.shape, -1, dtype=np.int64)
+    for f in range(te.shape[0]):
+        out[np.isin(idx, te[f])] = f
+    return out
+
+
+def _validate_drop(drop, n: int) -> np.ndarray:
+    drop = np.asarray(jax.device_get(drop))
+    if drop.ndim != 1 or drop.size == 0:
+        raise ValueError("drop_idx must be a non-empty 1-D index array")
+    if not np.issubdtype(drop.dtype, np.integer):
+        raise ValueError(f"drop_idx must be integer, got dtype {drop.dtype}")
+    drop = drop.astype(np.int64)
+    if drop.min() < 0 or drop.max() >= n:
+        raise ValueError(f"drop_idx out of range for N={n}")
+    if np.unique(drop).size != drop.size:
+        raise ValueError("drop_idx contains duplicate rows")
+    if drop.size >= n:
+        raise ValueError("cannot drop every row of the dataset")
+    return drop
+
+
+def _update_inputs(plan: CVPlan, x, lam: float, mode: str):
+    """Shared validation; returns (x64, te, tr, with_train_block, dtype)."""
+    x_np = _np64(x)
+    if x_np.ndim != 2:
+        raise ValueError("x must be the 2-D feature matrix the plan was "
+                         "built from")
+    n = plan.h.shape[0]
+    if x_np.shape[0] != n:
+        raise ValueError(
+            f"x has {x_np.shape[0]} rows but the plan was built over {n} "
+            "samples — pass the exact feature matrix behind this plan")
+    if not isinstance(lam, (int, float)) or float(lam) <= 0.0:
+        raise ValueError("incremental updates require a concrete lam > 0 "
+                         "(the dual-mode operating point)")
+    _resolve_update_mode(mode, x_np.shape)
+    te = np.asarray(jax.device_get(plan.te_idx)).astype(np.int64)
+    tr = np.asarray(jax.device_get(plan.tr_idx)).astype(np.int64)
+    _check_complement(te, tr, n)
+    return x_np, te, tr, plan.h_tr_te is not None, plan.h.dtype
+
+
+def _coerce_folds_delta(folds_delta, k_new: int):
+    """folds_delta is a full Folds (custom schemes) or a per-row assignment."""
+    if isinstance(folds_delta, Folds):
+        return folds_delta
+    assign = np.asarray(jax.device_get(folds_delta))
+    if not np.issubdtype(assign.dtype, np.integer):
+        raise ValueError("per-row fold assignment must be integer "
+                         f"(got dtype {assign.dtype})")
+    assign = assign.astype(np.int64).reshape(-1)
+    if assign.size != k_new:
+        raise ValueError(
+            f"fold assignment has {assign.size} entries for "
+            f"{k_new} appended rows")
+    return assign
+
+
+def update_plan(plan: CVPlan, x_new, folds_delta, *, x, lam: float,
+                mode: str = "dual") -> CVPlan:
+    """Advance a dual-mode plan by appending rows — a rank-k correction.
+
+    Args:
+      plan: the cached plan for ``x`` (dual mode, built by :func:`prepare`
+        or a previous update).
+      x_new: (k, P) appended feature rows; the updated dataset is
+        ``concat([x, x_new])`` in that order.
+      folds_delta: either a per-appended-row fold assignment (1-D int array,
+        −1 = train-only leftover) or a full :class:`Folds` over N+k samples
+        for custom schemes.
+      x: the (N, P) feature matrix the plan was built from (keyword-only —
+        the plan itself stores only N×N objects).
+      lam: the plan's ridge strength (> 0).
+      mode: must resolve to "dual"; primal plans cannot be advanced.
+
+    Returns a new :class:`CVPlan` over N+k samples, equal to
+    ``prepare(concat([x, x_new]), new_folds, lam, "dual")`` to ≤1e-5
+    without ever rebuilding the Gram or re-entering XLA. Cost O(N²k + NPk).
+    """
+    x_np, te, tr, wtb, dtype = _update_inputs(plan, x, lam, mode)
+    n = x_np.shape[0]
+    xn = _np64(x_new)
+    if xn.ndim != 2 or xn.shape[1] != x_np.shape[1]:
+        raise ValueError(
+            f"x_new must be (k, {x_np.shape[1]}) to match the dataset, got "
+            f"shape {xn.shape}")
+    if folds_delta is None:
+        raise ValueError("update_plan needs folds_delta: a fold id per "
+                         "appended row (-1 = train-only) or a full Folds")
+    delta = _coerce_folds_delta(folds_delta, xn.shape[0])
+    if isinstance(delta, Folds):
+        te2 = np.asarray(jax.device_get(delta.te_idx)).astype(np.int64)
+        tr2 = np.asarray(jax.device_get(delta.tr_idx)).astype(np.int64)
+    else:
+        te2 = _extend_folds(te, n, delta)
+        tr2 = _complement_folds(te2, n + xn.shape[0])
+    m = _dual_inverse_from_plan(plan, lam)
+    m2 = _append_inverse(m, x_np, xn, lam)
+    return _finish_plan(m2, lam, te2, tr2, wtb, dtype)
+
+
+def downdate_plan(plan: CVPlan, drop_idx, *, x, lam: float,
+                  mode: str = "dual") -> CVPlan:
+    """Retire rows from a dual-mode plan — the inverse rank-k correction.
+
+    ``drop_idx`` indexes rows of ``x``; surviving rows keep their relative
+    order and are renumbered densely (new id = old rank among kept rows),
+    so the updated dataset is ``x[keep]`` with ``keep`` sorted. Per-fold
+    test sizes must stay rectangular after the drop (drop equally many test
+    samples per fold, or train-only rows); use :func:`sliding_window` to
+    backfill slots instead. Cost O(N²d + d³).
+    """
+    x_np, te, tr, wtb, dtype = _update_inputs(plan, x, lam, mode)
+    n = x_np.shape[0]
+    drop = _validate_drop(drop_idx, n)
+    te2 = _drop_folds(te, n, drop)
+    tr2 = _complement_folds(te2, n - drop.size)
+    m = _dual_inverse_from_plan(plan, lam)
+    m2 = _downdate_inverse(m, x_np, drop, lam)
+    return _finish_plan(m2, lam, te2, tr2, wtb, dtype)
+
+
+def sliding_window(plan: CVPlan, x_new, drop_idx, *, x, lam: float,
+                   mode: str = "dual", folds_delta=None) -> CVPlan:
+    """Append + drop in one correction — the streaming steady state.
+
+    The window advances: ``drop_idx`` rows retire and ``x_new`` rows arrive,
+    with N (and therefore every downstream eval shape) unchanged whenever
+    ``len(x_new) == len(drop_idx)``. By default each appended row inherits
+    the fold slot of a dropped row (matched in sorted drop order), so the
+    fold geometry — and the jitted eval cache — is preserved exactly; pass
+    ``folds_delta`` to re-assign instead. The updated dataset is
+    ``concat([x[keep], x_new])``.
+    """
+    x_np, te, tr, wtb, dtype = _update_inputs(plan, x, lam, mode)
+    n = x_np.shape[0]
+    drop = _validate_drop(drop_idx, n)
+    xn = _np64(x_new)
+    if xn.ndim != 2 or xn.shape[1] != x_np.shape[1]:
+        raise ValueError(
+            f"x_new must be (k, {x_np.shape[1]}) to match the dataset, got "
+            f"shape {xn.shape}")
+    n_kept = n - drop.size
+    if folds_delta is None:
+        if xn.shape[0] != drop.size:
+            raise ValueError(
+                "sliding_window without folds_delta requires "
+                "len(x_new) == len(drop_idx) so appended rows can inherit "
+                f"the dropped rows' fold slots (got {xn.shape[0]} new vs "
+                f"{drop.size} dropped)")
+        assign = _fold_of(te, np.sort(drop))
+        te2 = _window_folds(te, n, drop, assign)
+        tr2 = _complement_folds(te2, n_kept + xn.shape[0])
+    else:
+        delta = _coerce_folds_delta(folds_delta, xn.shape[0])
+        if isinstance(delta, Folds):
+            te2 = np.asarray(jax.device_get(delta.te_idx)).astype(np.int64)
+            tr2 = np.asarray(jax.device_get(delta.tr_idx)).astype(np.int64)
+        else:
+            te2 = _window_folds(te, n, drop, delta)
+            tr2 = _complement_folds(te2, n_kept + xn.shape[0])
+    m = _dual_inverse_from_plan(plan, lam)
+    m_dropped = _downdate_inverse(m, x_np, drop, lam)
+    keep = np.setdiff1d(np.arange(n), drop)
+    m2 = _append_inverse(m_dropped, x_np[keep], xn, lam)
+    return _finish_plan(m2, lam, te2, tr2, wtb, dtype)

@@ -7,6 +7,7 @@
     PYTHONPATH=src python -m repro.launch.serve_cv --record-traffic t.json
     PYTHONPATH=src python -m repro.launch.serve_cv --warmup-from t.json
     PYTHONPATH=src python -m repro.launch.serve_cv --http 8000 --warmup --pin
+    PYTHONPATH=src python -m repro.launch.serve_cv --window 16
 
 Builds a :class:`repro.serve.CVEngine` fronted by the unified
 :class:`repro.serve.Client`, registers a small fleet of datasets
@@ -62,6 +63,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro import rsa
 from repro.core import folds as foldlib
@@ -227,6 +229,66 @@ async def replay_async(engine, workloads, n_clients, perm_demo=None):
                     print(f"[serve_cv]   stream: done, p = "
                           f"{float(ev.payload.p):.4f}")
     assert all(r is not None for r in results)
+
+
+def run_window(client, args, datasets):
+    """Sliding-window mode (``--window N``): the streaming steady state.
+
+    Advances the first dataset N times — each step retires one test row
+    per fold (the oldest slots) and appends equally many fresh rows, so
+    the sample count, fold geometry, and therefore every jitted eval
+    shape stay fixed — and serves a binary-CV workload against each new
+    version. Dataset versions march 1..N while plans advance by rank-k
+    correction (``kind="update"`` → :meth:`CVEngine.update_dataset`), so
+    once the first step is served the compile count must stay flat: the
+    loop prints per-step update/CV latency and the compile delta.
+    """
+    engine = client.engine
+    handle, x, y_bin, _y_int, _c = datasets[0]
+    y = np.asarray(y_bin)
+    key = jax.random.PRNGKey(args.seed + 1_000_003)
+    upd_times, cv_times = [], []
+    compiles0 = None
+    for step in range(args.window):
+        rec = engine.dataset_record(handle)
+        n = int(rec.x.shape[0])
+        drop = np.asarray(rec.folds.te_idx)[:, 0]  # oldest slot per fold
+        key, sub, ysub = jax.random.split(key, 3)
+        x_new = jax.random.normal(sub, (drop.size, int(rec.x.shape[1])),
+                                  dtype=rec.x.dtype)
+        t0 = time.perf_counter()
+        resp = client.submit(Workload(kind="update", dataset=handle,
+                                      x=x_new, drop_idx=drop))
+        upd_times.append(time.perf_counter() - t0)
+        handle = resp.handle
+        keep = np.setdiff1d(np.arange(n), drop)
+        y = np.concatenate([
+            y[keep],
+            np.where(np.asarray(jax.random.bernoulli(ysub, shape=(drop.size,))),
+                     1.0, -1.0),
+        ])
+        t0 = time.perf_counter()
+        cv = client.submit(Workload(kind="cv", dataset=handle,
+                                    y=jnp.asarray(y, dtype=rec.x.dtype)))
+        cv_times.append(time.perf_counter() - t0)
+        if compiles0 is None:
+            compiles0 = engine.compile_count()  # after the first warm step
+        if step < 3 or step == args.window - 1:
+            print(f"[serve_cv]   window step {step + 1}/{args.window}: "
+                  f"v{resp.version}, rank {resp.rank}, update "
+                  f"{upd_times[-1] * 1e3:.1f}ms, cv {cv_times[-1] * 1e3:.1f}ms, "
+                  f"score {float(cv.score):.3f}")
+    steady_upd = sorted(upd_times[1:] or upd_times)[len(upd_times[1:] or upd_times) // 2]
+    steady_cv = sorted(cv_times[1:] or cv_times)[len(cv_times[1:] or cv_times) // 2]
+    recompiles = engine.compile_count() - compiles0
+    s = engine.stats()
+    print(f"[serve_cv] window: {args.window} advances, steady-state update "
+          f"p50 {steady_upd * 1e3:.1f}ms, cv p50 {steady_cv * 1e3:.1f}ms, "
+          f"plans updated: {s['plans_updated']}, "
+          f"recompiles after first step: {recompiles}")
+    if recompiles:
+        print("[serve_cv] WARNING: sliding window recompiled — fold "
+              "geometry was not preserved")
 
 
 def setup_compilation_cache(path):
@@ -395,6 +457,12 @@ def main():
                     "entries over it; default 4096)")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--window", type=int, default=0, metavar="N",
+                    help="sliding-window mode: advance the first dataset "
+                    "N times (retire the oldest test row per fold, append "
+                    "fresh rows via kind=\"update\" rank-k corrections) "
+                    "and serve CV against each new version; prints "
+                    "steady-state latency and compile flatness")
     ap.add_argument("--rsa", action="store_true",
                     help="serve an RSA workload stream instead of mixed CV")
     ap.add_argument("--conditions", type=int, default=6,
@@ -443,6 +511,13 @@ def main():
     if args.http is not None:
         stop_profile(profiling)
         serve_http(engine, args, record)
+        return
+
+    if args.window:
+        if args.rsa:
+            ap.error("--window composes with the mixed-CV stream, not --rsa")
+        run_window(client, args, datasets)
+        stop_profile(profiling)
         return
 
     def ready(rs):

@@ -9,7 +9,7 @@ pattern RDMs, and mesh-sharded searchlight sweeps.
   rdm      empirical RDMs from CVPlan fold solves; searchlight sharding.
   compare  Spearman/Kendall/Pearson/cosine model scoring + permutation nulls.
 
-Served end-to-end via ``repro.serve.RSARequest``.
+Served end-to-end via ``repro.serve.Workload(kind="rsa", ...)``.
 """
 
 from repro.rsa.compare import (  # noqa: F401

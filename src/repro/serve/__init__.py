@@ -6,11 +6,12 @@ label-invariant state, cheap per-request evaluation. This package
 productises that behind a single declarative surface:
 
   workload  Workload — one versioned, eagerly-validated spec (kind:
-            cv | permutation | rsa | tune | grid) against a registered
-            DatasetHandle or inline DatasetSpec; LeastSquaresSpec — the
-            estimator registry under which binary LDA, multi-class LDA,
-            ridge, and multi-target ridge are registrations, not engine
-            forks; run_workloads / stream_workload drivers; TrafficLog.
+            cv | permutation | rsa | tune | grid | update) against a
+            registered DatasetHandle or inline DatasetSpec;
+            LeastSquaresSpec — the estimator registry under which binary
+            LDA, multi-class LDA, ridge, and multi-target ridge are
+            registrations, not engine forks; run_workloads /
+            stream_workload drivers; TrafficLog.
   client    Client — submit/stream/gather over a transport chosen by
             construction (sync, thread-queue, or asyncio).
   cache     PlanCache — LRU CVPlan store under a byte budget, with
@@ -20,13 +21,16 @@ productises that behind a single declarative surface:
             content-addressed plan checkpoints with integrity-verified
             loads, corrupt-entry quarantine, and byte-budget GC, so a
             restarted replica warm-boots with zero plan builds.
-  engine    CVEngine — dataset registry (register once, serve by handle),
-            cached plans + shape-bucketed jitted eval paths from the
-            estimator registry, RDM memoisation, and an explicit warmup()
-            readiness API (replayable from recorded traffic).
+  engine    CVEngine — mutable versioned dataset registry (register →
+            version-0 handle; append/retire/update_dataset → version n+1
+            by rank-k plan correction, old versions pinned by in-flight
+            workloads until release), cached plans + shape-bucketed
+            jitted eval paths from the estimator registry, RDM
+            memoisation, and an explicit warmup() readiness API
+            (replayable from recorded traffic).
   batching  MicroBatcher — coalesce ragged same-plan label queries.
-  api       Deprecated request shims (CVRequest & co. → Workload), sync
-            driver, threaded queue server.
+  api       Sync driver + threaded queue server (the pre-0.1 request
+            shims were removed at 0.3; see the README migration table).
   aio       AsyncEngineServer — asyncio front-end with gather-window
             micro-batching and streamed permutation/RSA responses.
   http      HTTPEdge — the HTTP/SSE wire over the async server (Workload
@@ -49,16 +53,12 @@ network edge).
 
 from repro.serve.aio import AsyncEngineServer, ProgressEvent  # noqa: F401
 from repro.serve.api import (  # noqa: F401
-    CVRequest,
     CVResponse,
     DatasetSpec,
     EngineServer,
     GridResponse,
-    PermutationRequest,
     PermutationResponse,
-    RSARequest,
     RSAResponse,
-    TuneRequest,
     TuneResponse,
     serve,
 )
@@ -80,6 +80,7 @@ from repro.serve.workload import (  # noqa: F401
     DatasetHandle,
     LeastSquaresSpec,
     TrafficLog,
+    UpdateResponse,
     Workload,
     as_workload,
     estimators,

@@ -44,7 +44,6 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import AsyncIterator, Optional
 
-from repro.serve.api import Request
 from repro.serve.engine import CVEngine
 from repro.serve.trace import attach_trace, trace_of
 from repro.serve.workload import ProgressEvent, as_workload, run_workloads, stream_workload
@@ -143,8 +142,8 @@ class AsyncEngineServer:
 
     # -- client side -------------------------------------------------------
 
-    async def submit(self, request: Request):
-        """Submit one workload (or legacy request); awaits its response."""
+    async def submit(self, request):
+        """Submit one workload; awaits its response."""
         self._check_running()
         # Trace from the submit side so gather-window queue time is a
         # measured batch_wait stage; the trace rides the workload object
@@ -170,20 +169,34 @@ class AsyncEngineServer:
         self._check_running()
         return await self._run(self.engine.register, x, folds, lam, mode=mode)
 
-    async def stream(self, request: Request) -> AsyncIterator[ProgressEvent]:
+    async def append(self, handle, x_new=None, *, drop_idx=None, folds_delta=None):
+        """Advance a registered dataset on the engine thread; returns the
+        version n+1 handle (the ``POST /v1/datasets/{fp}/append`` route
+        lands here). Append, retire, or slide per the arguments — thin
+        passthrough to :meth:`CVEngine.update_dataset`."""
+        self._check_running()
+        return await self._run(
+            self.engine.update_dataset,
+            handle,
+            x_new=x_new,
+            drop_idx=drop_idx,
+            folds_delta=folds_delta,
+        )
+
+    async def stream(self, request) -> AsyncIterator[ProgressEvent]:
         """Async iterator of :class:`ProgressEvent`\\ s for one workload.
 
-        Permutation and RSA workloads stream incrementally by driving
-        :func:`~repro.serve.workload.stream_workload` on the engine
-        thread; any other kind degenerates to a single "done" event
-        wrapping the batched response (counted in ``streams_served``
-        either way — streams count when they start, so abandoned
-        iterators count too).
+        Permutation, RSA, and update workloads stream incrementally by
+        driving :func:`~repro.serve.workload.stream_workload` on the
+        engine thread (updates emit one event per applied increment); any
+        other kind degenerates to a single "done" event wrapping the
+        batched response (counted in ``streams_served`` either way —
+        streams count when they start, so abandoned iterators count too).
         """
         self._check_running()
         self.streams_served += 1
         w = as_workload(request)
-        if w.kind not in ("permutation", "rsa"):
+        if w.kind not in ("permutation", "rsa", "update"):
             yield ProgressEvent("done", 1, 1, await self.submit(w))
             return
         gen = stream_workload(self.engine, w, chunk=self.stream_chunk)

@@ -1,22 +1,19 @@
-"""Legacy request shims + the sync drivers over the one-Workload API.
+"""Sync drivers over the one-Workload API.
 
 The serving surface is :class:`repro.serve.workload.Workload` — one
 versioned, eagerly-validated spec (``kind``: ``cv | permutation | rsa |
-tune | grid``) against a registered dataset handle or an inline
+tune | grid | update``) against a registered dataset handle or an inline
 :class:`~repro.serve.workload.DatasetSpec`, executed by
 :func:`repro.serve.workload.run_workloads` and fronted by
 :class:`repro.serve.client.Client` (which picks the sync, thread-queue,
 or asyncio transport by construction).
 
-This module keeps the original request vocabulary alive as **deprecated
-shims**: :class:`CVRequest`, :class:`PermutationRequest`,
-:class:`RSARequest`, and :class:`TuneRequest` are thin dataclasses whose
-``to_workload()`` converts to the unified spec — every driver accepts
-them interchangeably with Workloads (``serve`` normalises via
-:func:`~repro.serve.workload.as_workload`), and parity tests pin their
-results bit-identical to the Workload path. New code should construct
-Workloads (or use the ``Client``) directly; the shims are scheduled for
-removal two minor versions after 0.1 (see README "One API").
+The pre-0.1 request vocabulary (``CVRequest``, ``PermutationRequest``,
+``RSARequest``, ``TuneRequest`` and their ``to_workload()`` shims) was
+**removed at 0.3** per the deprecation timeline announced in README "One
+API"; importing any of those names raises :class:`ImportError` with a
+pointer at the README migration table ("Migration from the request
+classes").
 
 :func:`serve` is the synchronous batch driver: it groups workloads by
 plan identity, coalesces same-plan label queries through the
@@ -30,15 +27,11 @@ lives in :mod:`repro.serve.aio`.
 
 from __future__ import annotations
 
-import dataclasses
 import queue as queue_mod
 import threading
 import time
-import warnings
 from concurrent.futures import Future
-from typing import Optional, Sequence, Union
-
-import jax
+from typing import Optional, Sequence
 
 from repro.serve.engine import CVEngine
 from repro.serve.trace import attach_trace, trace_of
@@ -56,11 +49,6 @@ from repro.serve.workload import (  # noqa: F401  (re-exported compat surface)
 
 __all__ = [
     "DatasetSpec",
-    "CVRequest",
-    "PermutationRequest",
-    "RSARequest",
-    "TuneRequest",
-    "Request",
     "CVResponse",
     "PermutationResponse",
     "RSAResponse",
@@ -70,137 +58,20 @@ __all__ = [
     "EngineServer",
 ]
 
-
-# ---------------------------------------------------------------------------
-# Deprecated request shims (one per legacy request type)
-# ---------------------------------------------------------------------------
-
-def _warn_deprecated(cls: type) -> None:
-    # Plain warnings.warn: the module's default per-location dedup keeps
-    # construction loops quiet without global state that would defeat
-    # warnings.catch_warnings() isolation in tests.
-    warnings.warn(
-        f"{cls.__name__} is deprecated; construct a repro.serve.Workload "
-        f"(or use repro.serve.Client) instead — see README 'One API'",
-        DeprecationWarning,
-        stacklevel=3,
-    )
+#: Names removed at 0.3 (the deprecated request shims). Kept here only so
+#: the ImportError can say where the replacement lives.
+_REMOVED_AT_0_3 = ("CVRequest", "PermutationRequest", "RSARequest", "TuneRequest", "Request")
 
 
-@dataclasses.dataclass
-class CVRequest:
-    """Deprecated shim: one CV run. Use ``Workload(kind="cv", ...)``."""
-
-    data: DatasetSpec
-    y: jax.Array  # binary/ridge: (N,) or (N, B); mc: (N,)/(B, N)
-    task: str = "binary"  # estimator name: "binary" | "multiclass" | "ridge"
-    num_classes: int = 0  # required for task="multiclass"
-    adjust_bias: bool = True  # binary only (paper §2.5)
-
-    def __post_init__(self):
-        _warn_deprecated(type(self))
-
-    def to_workload(self) -> Workload:
-        return Workload(
-            kind="cv",
-            dataset=self.data,
-            y=self.y,
-            estimator=self.task,
-            num_classes=self.num_classes,
-            adjust_bias=self.adjust_bias,
+def __getattr__(name: str):
+    if name in _REMOVED_AT_0_3:
+        raise ImportError(
+            f"{name} was removed at 0.3 — construct a repro.serve.Workload "
+            "(or use repro.serve.Client) instead; the field-by-field mapping "
+            "is in the README migration table ('Migration from the request "
+            "classes')."
         )
-
-
-@dataclasses.dataclass
-class PermutationRequest:
-    """Deprecated shim: a full permutation test.
-    Use ``Workload(kind="permutation", ...)``."""
-
-    data: DatasetSpec
-    y: jax.Array
-    n_perm: int
-    seed: int = 0
-    task: str = "binary"  # "binary" | "multiclass"
-    num_classes: int = 0
-    metric: str = "accuracy"  # binary only: "accuracy" | "auc"
-    adjust_bias: bool = True
-
-    def __post_init__(self):
-        _warn_deprecated(type(self))
-
-    def to_workload(self) -> Workload:
-        return Workload(
-            kind="permutation",
-            dataset=self.data,
-            y=self.y,
-            estimator=self.task,
-            num_classes=self.num_classes,
-            adjust_bias=self.adjust_bias,
-            n_perm=self.n_perm,
-            seed=self.seed,
-            metric=self.metric,
-        )
-
-
-@dataclasses.dataclass
-class RSARequest:
-    """Deprecated shim: a cross-validated RDM (optionally model-scored).
-    Use ``Workload(kind="rsa", ...)``."""
-
-    data: DatasetSpec
-    y: jax.Array  # int (N,) condition labels
-    num_classes: int
-    contrast: str = "binary"  # "binary" | "multiclass"
-    dissimilarity: str = "accuracy"  # binary only: "accuracy" | "contrast"
-    adjust_bias: bool = True  # binary only (paper §2.5)
-    model_rdms: Optional[jax.Array] = None  # (M, C, C)
-    comparison: str = "spearman"
-    n_perm: int = 0
-    seed: int = 0
-
-    def __post_init__(self):
-        _warn_deprecated(type(self))
-
-    def to_workload(self) -> Workload:
-        return Workload(
-            kind="rsa",
-            dataset=self.data,
-            y=self.y,
-            num_classes=self.num_classes,
-            contrast=self.contrast,
-            dissimilarity=self.dissimilarity,
-            adjust_bias=self.adjust_bias,
-            model_rdms=self.model_rdms,
-            comparison=self.comparison,
-            n_perm=self.n_perm,
-            seed=self.seed,
-        )
-
-
-@dataclasses.dataclass
-class TuneRequest:
-    """Deprecated shim: ridge-λ selection (exact LOO).
-    Use ``Workload(kind="tune", ...)``."""
-
-    x: jax.Array
-    y: jax.Array
-    lambdas: Optional[jax.Array] = None
-    criterion: str = "mse"
-
-    def __post_init__(self):
-        _warn_deprecated(type(self))
-
-    def to_workload(self) -> Workload:
-        return Workload(
-            kind="tune",
-            x=self.x,
-            y=self.y,
-            lambdas=self.lambdas,
-            criterion=self.criterion,
-        )
-
-
-Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest, Workload]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -208,14 +79,14 @@ Request = Union[CVRequest, PermutationRequest, RSARequest, TuneRequest, Workload
 # ---------------------------------------------------------------------------
 
 
-def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
-    """Serve a batch of Workloads (or legacy requests); responses align
-    with ``requests``.
+def serve(engine: CVEngine, requests: Sequence[Workload]) -> list:
+    """Serve a batch of Workloads; responses align with ``requests``.
 
     Thin alias of :func:`repro.serve.workload.run_workloads`: same-plan CV
     label queries are coalesced into one padded jitted eval per (plan,
     estimator, static-options) group; plans are fetched once per distinct
-    dataset; legacy request objects convert via ``to_workload()``.
+    dataset; ``kind="update"`` workloads against the same handle coalesce
+    into one rank-k plan correction.
     """
     return run_workloads(engine, requests)
 
@@ -228,8 +99,8 @@ def serve(engine: CVEngine, requests: Sequence[Request]) -> list:
 class EngineServer:
     """Background worker that drains a request queue into micro-batches.
 
-    Submitters (any thread) get a Future per Workload (legacy requests
-    are accepted too); the worker collects whatever is queued — up to
+    Submitters (any thread) get a Future per Workload; the worker
+    collects whatever is queued — up to
     ``max_batch`` requests, waiting at most ``max_wait_ms`` after the
     first — and serves the whole batch through :func:`serve`, so
     concurrent clients' queries coalesce onto shared plans and shared
@@ -282,7 +153,7 @@ class EngineServer:
 
     # -- client side -------------------------------------------------------
 
-    def submit(self, request: Request) -> Future:
+    def submit(self, request: Workload) -> Future:
         with self._submit_lock:
             if self._stop.is_set() or self._thread is None:
                 raise RuntimeError("server is not running")

@@ -59,8 +59,6 @@ class Client:
                         ``gather`` are awaitables and ``stream`` an async
                         iterator over an
                         :class:`~repro.serve.aio.AsyncEngineServer`.
-
-    Legacy request shims are accepted anywhere a Workload is.
     """
 
     def __init__(
@@ -91,6 +89,16 @@ class Client:
 
     def datasets(self) -> tuple:
         return self.engine.datasets()
+
+    def append(self, handle: DatasetHandle, x_new, folds_delta=None) -> DatasetHandle:
+        """Append rows to a registered dataset; returns the version n+1
+        handle (the old version stays servable until released)."""
+        return self.engine.append(handle, x_new, folds_delta=folds_delta)
+
+    def retire(self, handle: DatasetHandle, idx) -> DatasetHandle:
+        """Retire rows of a registered dataset; returns the version n+1
+        handle."""
+        return self.engine.retire(handle, idx)
 
     def warmup(self, dataset, **kwargs) -> dict:
         return self.engine.warmup(dataset, **kwargs)

@@ -15,7 +15,12 @@ The engine is the multi-tenant core of ``repro.serve``. It owns
     :class:`~repro.serve.workload.DatasetHandle`; workloads carry the
     handle instead of re-shipping the feature matrix, evicted plans
     rebuild transparently, and :meth:`datasets` exposes residency /
-    pinning / traffic per registration;
+    pinning / traffic per registration. The registry is *mutable and
+    versioned*: :meth:`append` / :meth:`retire` /
+    :meth:`update_dataset` advance a dataset to a version n+1 handle by
+    rank-k plan correction (:func:`repro.core.fastcv.update_plan`),
+    while version n stays servable — in-flight workloads pin it
+    (:meth:`retain_version`) — until :meth:`release`;
   * the CV *jitted evaluators*, drawn from the least-squares **estimator
     registry** (:mod:`repro.serve.workload`): one compiled program per
     (eval family × static options × shape bucket), created lazily but
@@ -54,6 +59,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fastcv, metrics, multiclass, tuning
 from repro.core import permutation as perm_lib
@@ -80,6 +86,12 @@ class _DatasetRecord:
     Keeps the actual feature matrix and folds so plans evicted under cache
     pressure can be rebuilt from the handle alone — clients never re-ship
     the bytes.
+
+    ``version``/``n_appended`` mirror the handle (the registry is the
+    source of truth for the mutable-dataset lineage). ``refs`` counts
+    in-flight workload batches pinning this version
+    (:meth:`CVEngine.retain_version`); ``retired`` marks a version whose
+    :meth:`CVEngine.release` was deferred until those refs drain.
     """
 
     handle: DatasetHandle
@@ -89,6 +101,11 @@ class _DatasetRecord:
     mode: str
     served: int = 0
     last_used: float = 0.0  # wall-clock (time.time) — display only, never a deadline
+    version: int = 0
+    n_appended: int = 0
+    refs: int = 0
+    retired: bool = False
+    drop_store: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +187,7 @@ class CVEngine:
         self._rsa_null = {}  # method -> jit[(emp, models, perms) -> (M,T)]
         self._datasets = {}  # handle key -> _DatasetRecord
         self.plans_built = 0
+        self.plans_updated = 0
         self.labels_evaluated = 0
 
     def _declare_metrics(self) -> None:
@@ -203,6 +221,16 @@ class CVEngine:
         m.histogram(
             "batch_coalesced_size",
             "Unpadded label-batch width per coalesced eval",
+            buckets=SIZE_BUCKETS,
+        )
+        m.counter(
+            "plan_updates_total",
+            "Incremental dataset updates applied, by operation",
+            labels=("op",),
+        )
+        m.histogram(
+            "plan_update_rank",
+            "Correction rank (rows appended + retired) per incremental update",
             buckets=SIZE_BUCKETS,
         )
         m.gauge("plan_cache_hits", "Plan cache hits", fn=lambda: self.cache.stats.hits)
@@ -245,6 +273,11 @@ class CVEngine:
         m.gauge("compile_events", "jit cache entries across every eval path", fn=self.compile_count)
         m.gauge("rdm_hits", "Empirical-RDM memo hits", fn=lambda: self.rdm_cache.hits)
         m.gauge("plans_built", "CVPlans built by this engine", fn=lambda: self.plans_built)
+        m.gauge(
+            "plans_updated",
+            "CVPlans advanced by incremental rank-k correction",
+            fn=lambda: self.plans_updated,
+        )
         m.gauge("labels_evaluated", "Label vectors evaluated", fn=lambda: self.labels_evaluated)
         m.gauge("datasets_registered", "Registered dataset handles", fn=lambda: len(self._datasets))
 
@@ -274,15 +307,18 @@ class CVEngine:
         lam: float,
         mode: str = "auto",
         with_train_block: bool = True,
+        version: int = 0,
     ):
         """Fetch-or-build the plan for (x, folds, λ). Returns (key, plan).
 
         Lookup order: memory (PlanCache) → disk (PlanStore, when
         configured) → build. A plan *with* the train block is a superset
         of the one without (same H, same factors, extra H_{Tr,Te}), so a
-        ridge request is happily served from a cached bias-adjust plan."""
+        ridge request is happily served from a cached bias-adjust plan.
+        ``version`` is the dataset-registry version the key is minted
+        under (0 for unregistered / freshly registered data)."""
         with self.tracer.span("cache_lookup"):
-            key = fastcv.plan_key(x, folds, lam, mode, with_train_block)
+            key = fastcv.plan_key(x, folds, lam, mode, with_train_block, version=version)
             if not with_train_block:
                 superset = key[:-1] + (True,)
                 plan = self.cache.get(superset)
@@ -367,7 +403,7 @@ class CVEngine:
         the :meth:`datasets` introspection view.
         """
         folds = as_folds(folds)
-        key = fastcv.plan_key(x, folds, lam, mode, True)
+        key = fastcv.plan_key(x, folds, lam, mode, True, version=0)
         rec = self._datasets.get(key)
         if rec is None:
             handle = DatasetHandle(
@@ -395,12 +431,22 @@ class CVEngine:
             rec.served += 1
             rec.last_used = time.time()
             return self.plan(
-                rec.x, rec.folds, rec.lam, mode=rec.mode, with_train_block=with_train_block
+                rec.x,
+                rec.folds,
+                rec.lam,
+                mode=rec.mode,
+                with_train_block=with_train_block,
+                version=rec.version,
             )
         folds = as_folds(dataset.folds)
         mode = getattr(dataset, "mode", "auto")
         return self.plan(
-            dataset.x, folds, dataset.lam, mode=mode, with_train_block=with_train_block
+            dataset.x,
+            folds,
+            dataset.lam,
+            mode=mode,
+            with_train_block=with_train_block,
+            version=getattr(dataset, "version", 0),
         )
 
     def evict(self, handle: DatasetHandle, *, deregister: bool = False) -> bool:
@@ -414,6 +460,219 @@ class CVEngine:
             del self._datasets[handle.key]
         return removed
 
+    # ------------------------------------------------------------------
+    # Mutable versioned datasets: append / retire / sliding window
+    # ------------------------------------------------------------------
+
+    def update_dataset(
+        self,
+        handle: DatasetHandle,
+        *,
+        x_new=None,
+        drop_idx=None,
+        folds_delta=None,
+    ) -> DatasetHandle:
+        """Advance a registered dataset to version n+1 and return its handle.
+
+        Exactly one logical operation per call, picked by the arguments:
+        ``x_new`` alone appends rows (round-robin over folds by default —
+        requires ``len(x_new) % K == 0`` — or per ``folds_delta``),
+        ``drop_idx`` alone retires rows, both together slide the window
+        (appended rows inherit the dropped rows' fold slots unless
+        ``folds_delta`` says otherwise). Dual-mode plans advance by the
+        rank-k correction in :func:`repro.core.fastcv.update_plan` — no
+        Gram rebuild, no XLA entry; primal plans fall back to a from-scratch
+        rebuild with the same fold evolution.
+
+        The previous version stays registered and servable (in-flight
+        workloads pin it via :meth:`retain_version`) until
+        :meth:`release` — the two versions have distinct plan keys, so the
+        PlanCache/PlanStore never conflate them.
+        """
+        rec = self.dataset_record(handle)
+        if x_new is None and drop_idx is None:
+            raise ValueError(
+                "update_dataset needs x_new (append), drop_idx (retire), or both (window)"
+            )
+        n, p = int(rec.x.shape[0]), int(rec.x.shape[1])
+        k = 0 if x_new is None else int(x_new.shape[0])
+        drop = None
+        if drop_idx is not None:
+            drop = np.asarray(jax.device_get(drop_idx)).reshape(-1).astype(np.int64)
+        d = 0 if drop is None else int(drop.size)
+        if k and not d and folds_delta is None:
+            n_folds = rec.folds.k
+            if k % n_folds:
+                raise ValueError(
+                    f"appending {k} rows to a {n_folds}-fold dataset without "
+                    "folds_delta would leave ragged folds; pass a per-row fold "
+                    f"assignment or append a multiple of {n_folds} rows"
+                )
+            folds_delta = np.arange(k, dtype=np.int64) % n_folds
+        op = "window" if (k and d) else ("append" if k else "retire")
+        resolved = rec.mode
+        if resolved == "auto":
+            resolved = "dual" if p >= n else "primal"
+        _, plan = self.plan(
+            rec.x, rec.folds, rec.lam, mode=rec.mode, with_train_block=True, version=rec.version
+        )
+        with self.tracer.span("plan_update"):
+            if resolved == "dual":
+                if op == "window":
+                    plan2 = fastcv.sliding_window(
+                        plan,
+                        x_new,
+                        drop,
+                        x=rec.x,
+                        lam=rec.lam,
+                        mode="dual",
+                        folds_delta=folds_delta,
+                    )
+                elif op == "append":
+                    plan2 = fastcv.update_plan(
+                        plan, x_new, folds_delta, x=rec.x, lam=rec.lam, mode="dual"
+                    )
+                else:
+                    plan2 = fastcv.downdate_plan(plan, drop, x=rec.x, lam=rec.lam, mode="dual")
+                folds2 = Folds.with_indices(plan2.te_idx, plan2.tr_idx, n=n - d + k)
+            else:
+                folds2 = self._updated_folds(rec, k, drop, folds_delta)
+                plan2 = None
+            x2 = rec.x
+            if d:
+                keep = np.setdiff1d(np.arange(n), drop)
+                x2 = x2[jnp.asarray(keep)]
+            if k:
+                x2 = jnp.concatenate([x2, jnp.asarray(x_new, dtype=x2.dtype)])
+            new_version = rec.version + 1
+            new_key = fastcv.plan_key(x2, folds2, rec.lam, resolved, True, version=new_version)
+            if plan2 is None:
+                plan2 = self._build_plan(x2, folds2, rec.lam, resolved, True, key=new_key)
+            else:
+                self.cache.get_or_build(new_key, lambda: plan2)
+                if self.store is not None and self.config.save_plans:
+                    self.store.save_async(new_key, plan2, protect=self.cache.pinned_keys())
+        new_handle = DatasetHandle(
+            key=new_key,
+            n=int(x2.shape[0]),
+            p=p,
+            lam=rec.lam,
+            mode=resolved,
+            version=new_version,
+            n_appended=rec.n_appended + k,
+        )
+        rec2 = self._datasets.get(new_key)
+        if rec2 is None:
+            rec2 = self._datasets[new_key] = _DatasetRecord(
+                new_handle,
+                x2,
+                folds2,
+                rec.lam,
+                resolved,
+                version=new_version,
+                n_appended=rec.n_appended + k,
+            )
+        self.plans_updated += 1
+        self.metrics.inc("plan_updates_total", op=op)
+        self.metrics.observe("plan_update_rank", float(k + d))
+        return rec2.handle
+
+    def _updated_folds(self, rec: _DatasetRecord, k: int, drop, folds_delta) -> Folds:
+        """Fold evolution for the primal (full-rebuild) fallback — the same
+        geometry the dual fast path derives from the corrected plan."""
+        if isinstance(folds_delta, Folds):
+            return folds_delta
+        te = np.asarray(jax.device_get(rec.folds.te_idx)).astype(np.int64)
+        n = int(rec.x.shape[0])
+        d = 0 if drop is None else int(drop.size)
+        if k and d:
+            if folds_delta is None:
+                if k != d:
+                    raise ValueError(
+                        "sliding-window update without folds_delta requires "
+                        "len(x_new) == len(drop_idx) so appended rows can "
+                        f"inherit fold slots (got {k} new vs {d} dropped)"
+                    )
+                assign = fastcv._fold_of(te, np.sort(drop))
+            else:
+                assign = np.asarray(jax.device_get(folds_delta)).reshape(-1).astype(np.int64)
+            te2 = fastcv._window_folds(te, n, drop, assign)
+        elif k:
+            assign = np.asarray(jax.device_get(folds_delta)).reshape(-1).astype(np.int64)
+            te2 = fastcv._extend_folds(te, n, assign)
+        else:
+            te2 = fastcv._drop_folds(te, n, drop)
+        tr2 = fastcv._complement_folds(te2, n - d + k)
+        return Folds.with_indices(
+            jnp.asarray(te2, dtype=jnp.int32), jnp.asarray(tr2, dtype=jnp.int32), n=n - d + k
+        )
+
+    def append(self, handle: DatasetHandle, x_new, folds_delta=None) -> DatasetHandle:
+        """Append rows to a registered dataset → version n+1 handle.
+
+        Sugar for :meth:`update_dataset`; see it for fold-assignment rules
+        and version-pinning semantics.
+        """
+        return self.update_dataset(handle, x_new=x_new, folds_delta=folds_delta)
+
+    def retire(self, handle: DatasetHandle, idx) -> DatasetHandle:
+        """Retire rows of a registered dataset → version n+1 handle."""
+        return self.update_dataset(handle, drop_idx=idx)
+
+    def release(self, handle: DatasetHandle, *, drop_store: bool = False) -> bool:
+        """Release a dataset version: deregister it and drop its cached
+        plans once no in-flight workload pins it.
+
+        With refs outstanding the version is only marked ``retired`` and
+        the purge happens on the last :meth:`release_version`. With
+        ``drop_store`` the durable :class:`PlanStore` entry is removed too
+        (a clean removal — stale versions are *not* quarantined); without
+        it the store entry stays for forensic warm-boots. Returns True if
+        the purge ran now, False if deferred (or unknown handle).
+        """
+        rec = self._datasets.get(handle.key)
+        if rec is None:
+            return False
+        rec.retired = True
+        rec.drop_store = drop_store
+        if rec.refs > 0:
+            return False
+        self._purge(handle.key, drop_store)
+        return True
+
+    def retain_version(self, key) -> None:
+        """Pin a dataset version for an in-flight workload batch.
+
+        Tolerant no-op for keys that are not registered versions (inline
+        specs, raw plan keys)."""
+        rec = self._datasets.get(key)
+        if rec is not None:
+            rec.refs += 1
+
+    def release_version(self, key) -> None:
+        """Drop an in-flight pin; purges the version if it was released
+        (retired) while pinned. Tolerant no-op on unknown keys."""
+        rec = self._datasets.get(key)
+        if rec is None:
+            return
+        rec.refs = max(0, rec.refs - 1)
+        if rec.retired and rec.refs == 0:
+            self._purge(key, rec.drop_store)
+
+    def _purge(self, key, drop_store: bool) -> None:
+        """Forget a dataset version: registry entry, both cached plan
+        variants, and (optionally) the durable store entry — cleanly, so
+        eviction of a stale version never quarantines its checkpoint."""
+        self._datasets.pop(key, None)
+        self.cache.unpin(key)
+        self.cache.remove(key)
+        no_train = key[:-1] + (False,)
+        self.cache.unpin(no_train)
+        self.cache.remove(no_train)
+        if drop_store and self.store is not None:
+            self.store.remove(key)
+            self.store.remove(no_train)
+
     def datasets(self) -> tuple:
         """Introspection view: one dict per registered dataset."""
         out = []
@@ -426,6 +685,8 @@ class CVEngine:
                     "p": rec.handle.p,
                     "lam": rec.lam,
                     "mode": rec.mode,
+                    "version": rec.version,
+                    "n_appended": rec.n_appended,
                     "served": rec.served,
                     "resident": plan is not None,
                     "pinned": key in self.cache.pinned_keys(),
@@ -936,6 +1197,8 @@ class CVEngine:
             out[str(key[0])[:12]] = {
                 "n": rec.handle.n,
                 "p": rec.handle.p,
+                "version": rec.version,
+                "n_appended": rec.n_appended,
                 "served": rec.served,
                 "plan_bytes": plan.nbytes if plan is not None else 0,
                 "resident": plan is not None,
@@ -960,6 +1223,7 @@ class CVEngine:
         st = self.store.stats if self.store is not None else None
         s.update(
             plans_built=self.plans_built,
+            plans_updated=self.plans_updated,
             labels_evaluated=self.labels_evaluated,
             compiles=self.compile_count(),
             datasets_registered=len(self._datasets),

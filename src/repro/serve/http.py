@@ -33,7 +33,16 @@ Routes (all payloads are JSON):
                                  :class:`~repro.serve.workload.DatasetHandle`
                                  token so subsequent requests carry
                                  handles, not arrays.
-  ``GET /v1/datasets``           the registry introspection view.
+  ``POST /v1/datasets/{fp}/append``  advance a registered dataset (append
+                                 rows, retire rows, or both — the
+                                 sliding window); ``{fp}`` is the
+                                 handle's fingerprint prefix, the body
+                                 carries the full handle plus ``x`` /
+                                 ``drop_idx``; returns the version n+1
+                                 handle.
+  ``GET /v1/datasets``           the registry introspection view
+                                 (including ``version``/``n_appended``
+                                 per dataset).
   ``GET /v1/stats``              engine stats + async-server + edge
                                  counters.
   ``GET /v1/metrics``            Prometheus text exposition (format
@@ -89,6 +98,7 @@ from repro.serve.workload import (
     ProgressEvent,
     RSAResponse,
     TuneResponse,
+    UpdateResponse,
     Workload,
     _decode_array,
     _decode_dataset,
@@ -173,6 +183,16 @@ def response_to_dict(resp) -> dict:
         }
     elif isinstance(resp, GridResponse):
         d = {"type": "grid", "accuracies": _encode_array(resp.accuracies)}
+    elif isinstance(resp, UpdateResponse):
+        d = {
+            "type": "update",
+            "handle": resp.handle.to_dict(),
+            "version": int(resp.version),
+            "appended": int(resp.appended),
+            "dropped": int(resp.dropped),
+            "rank": int(resp.rank),
+            "plan_key": list(resp.plan_key),
+        }
     else:
         raise TypeError(f"cannot encode response of type {type(resp).__name__}")
     # Optional, tracing-only: absent when tracing is off, so the wire
@@ -221,6 +241,15 @@ def response_from_dict(d: dict):
         )
     elif t == "grid":
         resp = GridResponse(_decode_array(d["accuracies"]))
+    elif t == "update":
+        resp = UpdateResponse(
+            DatasetHandle.from_dict(d["handle"]),
+            int(d["version"]),
+            int(d["appended"]),
+            int(d["dropped"]),
+            int(d["rank"]),
+            tuple(d["plan_key"]),
+        )
     else:
         raise ValueError(f"unknown response type {t!r}")
     if "timings" in d:
@@ -234,6 +263,8 @@ def event_to_dict(ev: ProgressEvent) -> dict:
         payload = {"plan_key": list(ev.payload)}
     elif ev.kind == "done":
         payload = response_to_dict(ev.payload)
+    elif ev.kind == "update":
+        payload = dict(ev.payload)  # per-increment metrics delta: plain JSON
     else:
         payload = _encode_array(ev.payload)
     return {"kind": ev.kind, "done": ev.done, "total": ev.total, "payload": payload}
@@ -246,6 +277,8 @@ def event_from_dict(d: dict) -> ProgressEvent:
         payload = tuple(payload["plan_key"])
     elif kind == "done":
         payload = response_from_dict(payload)
+    elif kind == "update":
+        payload = dict(payload)
     else:
         payload = _decode_array(payload)
     return ProgressEvent(kind, int(d["done"]), int(d["total"]), payload)
@@ -603,6 +636,10 @@ class HTTPEdge:
                 if path == "/v1/datasets":
                     self._respond(writer, 200, await self._register(req.body))
                     return True
+                if path.startswith("/v1/datasets/") and path.endswith("/append"):
+                    fp = path[len("/v1/datasets/"):-len("/append")]
+                    self._respond(writer, 200, await self._append(fp, req.body))
+                    return True
                 if path == "/v1/workloads/stream":
                     return await self._serve_stream(req.body, writer)
                 raise _NotFound(f"no route for POST {path}")
@@ -722,6 +759,37 @@ class HTTPEdge:
         ds = await self._offload(self._decode_register, body)
         handle = await self.server.register(ds.x, ds.folds, ds.lam, mode=ds.mode)
         return {"handle": handle.to_dict()}
+
+    @staticmethod
+    def _decode_append(fp: str, body: bytes):
+        payload = json.loads(body.decode("utf-8"))
+        if not isinstance(payload, dict) or "handle" not in payload:
+            raise ValueError(
+                'append body must carry the full handle: {"handle": {...}, '
+                '"x": <array|null>, "drop_idx": <array|null>}'
+            )
+        handle = DatasetHandle.from_dict(payload["handle"])
+        if fp and not str(handle.key[0]).startswith(fp):
+            raise ValueError(
+                f"path fingerprint {fp!r} does not match the handle in the body "
+                f"({str(handle.key[0])[:12]})"
+            )
+        x_new = payload.get("x")
+        x_new = None if x_new is None else _decode_array(x_new)
+        drop_idx = payload.get("drop_idx")
+        drop_idx = None if drop_idx is None else _decode_array(drop_idx)
+        folds_delta = payload.get("folds_delta")
+        folds_delta = None if folds_delta is None else _decode_array(folds_delta)
+        if x_new is None and drop_idx is None:
+            raise ValueError("append body needs x (append), drop_idx (retire), or both")
+        return handle, x_new, drop_idx, folds_delta
+
+    async def _append(self, fp: str, body: bytes) -> dict:
+        handle, x_new, drop_idx, folds_delta = await self._offload(self._decode_append, fp, body)
+        new_handle = await self.server.append(
+            handle, x_new, drop_idx=drop_idx, folds_delta=folds_delta
+        )
+        return {"handle": new_handle.to_dict()}
 
     @staticmethod
     def _decode_workload(body: bytes) -> Workload:
@@ -889,8 +957,9 @@ class EdgeThread:
 class HTTPClient:
     """Wire mirror of :class:`repro.serve.client.Client`.
 
-    ``register`` / ``submit`` / ``gather`` / ``stream`` / ``datasets`` /
-    ``stats`` have the same shapes as the in-process client — responses
+    ``register`` / ``append`` / ``retire`` / ``submit`` / ``gather`` /
+    ``stream`` / ``datasets`` / ``stats`` have the same shapes as the
+    in-process client — responses
     decode back into the same dataclasses, ``stream`` yields
     :class:`ProgressEvent`\\ s — so swapping an example or benchmark onto
     the wire is a constructor change. Batch submissions mirror
@@ -990,6 +1059,29 @@ class HTTPClient:
         spec = DatasetSpec(x, folds, float(lam), mode)
         out = self._request("POST", "/v1/datasets", _encode_dataset(spec))
         return DatasetHandle.from_dict(out["handle"])
+
+    def append(
+        self, handle: DatasetHandle, x_new=None, *, drop_idx=None, folds_delta=None
+    ) -> DatasetHandle:
+        """Advance a registered dataset on the remote engine; returns the
+        version n+1 handle. ``x_new`` alone appends, ``drop_idx`` alone
+        retires, both slide the window (mirrors
+        :meth:`CVEngine.update_dataset`)."""
+        fp = str(handle.key[0])[:12]
+        payload = {
+            "handle": handle.to_dict(),
+            "x": None if x_new is None else _encode_array(np.asarray(x_new)),
+            "drop_idx": None if drop_idx is None else _encode_array(np.asarray(drop_idx)),
+            "folds_delta": (
+                None if folds_delta is None else _encode_array(np.asarray(folds_delta))
+            ),
+        }
+        out = self._request("POST", f"/v1/datasets/{fp}/append", payload)
+        return DatasetHandle.from_dict(out["handle"])
+
+    def retire(self, handle: DatasetHandle, idx) -> DatasetHandle:
+        """Retire rows of a registered dataset on the remote engine."""
+        return self.append(handle, None, drop_idx=idx)
 
     def datasets(self) -> tuple:
         out = self._request("GET", "/v1/datasets")["datasets"]

@@ -314,6 +314,23 @@ class PlanStore:
                 except OSError:
                     pass
 
+    def remove(self, key: tuple) -> bool:
+        """Cleanly delete one entry (released dataset versions).
+
+        Unlike :meth:`_quarantine` this is an intentional removal — the
+        bytes are gone, nothing lands in ``quarantine/`` and the
+        ``quarantined`` counter does not move. Returns True if an entry
+        existed. Tolerant no-op for absent keys.
+        """
+        entry = self.path_for(key)
+        with self._lock:
+            if not entry.exists():
+                return False
+            size = self._entry_bytes(entry)
+            shutil.rmtree(entry, ignore_errors=True)
+            self.stats.bytes_in_store -= size
+        return True
+
     # -- GC ----------------------------------------------------------------
 
     def gc(self, protect: Iterable[tuple] = ()) -> int:

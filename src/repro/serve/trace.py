@@ -62,6 +62,7 @@ STAGES = (
     "decode",  # wire JSON -> workload dataclass (HTTP edge only)
     "validate",  # as_workload normalisation + workload validation
     "plan_build",  # O(N^2 P) Gram + factorisations (cache miss only)
+    "plan_update",  # rank-k append/retire/window correction (kind="update")
     "cache_lookup",  # plan_key fingerprint + cache probe
     "store_load",  # disk plan-store read + integrity check (miss path)
     "batch_wait",  # submit -> dequeue latency (thread/async servers)

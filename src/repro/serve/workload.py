@@ -12,14 +12,17 @@ class and one engine code path per model, there is
     engine forks; adding e.g. optimal-scoring LDA is one
     :func:`register_estimator` call away.
   * a **unified, versioned** :class:`Workload` spec — one dataclass schema
-    (``kind``: ``cv | permutation | rsa | tune | grid``) that normalises
-    and validates eagerly at construction, so malformed traffic fails with
-    a clear message instead of a shape error deep inside jit.
-    ``to_dict``/``from_dict`` round-trip the schema (version-stamped) for
-    logging, replay, and cross-process submission.
+    (``kind``: ``cv | permutation | rsa | tune | grid | update``) that
+    normalises and validates eagerly at construction, so malformed traffic
+    fails with a clear message instead of a shape error deep inside jit.
+    ``to_dict``/``from_dict`` round-trip the schema (version-stamped; the
+    previous schema version is accepted through an explicit upgrade hook)
+    for logging, replay, and cross-process submission.
   * **dataset handles** — :meth:`repro.serve.engine.CVEngine.register`
-    fingerprints a dataset once and returns a :class:`DatasetHandle`;
-    workloads carry the handle instead of re-shipping the feature matrix.
+    fingerprints a dataset once and returns a :class:`DatasetHandle` at
+    version 0; workloads carry the handle instead of re-shipping the
+    feature matrix. ``kind="update"`` workloads append/retire rows through
+    the engine's incremental plan math and yield the version n+1 handle.
   * the **unified driver** :func:`run_workloads` — same-plan CV label
     queries coalesce through the engine's
     :class:`~repro.serve.batching.MicroBatcher` (one padded jitted eval
@@ -35,12 +38,12 @@ class and one engine code path per model, there is
     :meth:`~repro.serve.engine.CVEngine.warmup`.
 
 The legacy request classes (``CVRequest``/``PermutationRequest``/
-``RSARequest``/``TuneRequest`` in :mod:`repro.serve.api`) are deprecated
-shims that convert to :class:`Workload` via :func:`as_workload`; the
-``core/`` convenience functions (``binary_cv``, ``analytical_cv``,
-``analytical_cv_multiclass``, ``tune_ridge``, ``cv_grid``) remain the
-library-level reference implementations, with parity tests pinning them
-to this path.
+``RSARequest``/``TuneRequest``) were removed at 0.3 per the README
+deprecation timeline — importing them raises with a pointer at the
+migration table. The ``core/`` convenience functions (``binary_cv``,
+``analytical_cv``, ``analytical_cv_multiclass``, ``tune_ridge``,
+``cv_grid``) remain the library-level reference implementations, with
+parity tests pinning them to this path.
 """
 
 from __future__ import annotations
@@ -76,14 +79,17 @@ __all__ = [
     "RSAResponse",
     "TuneResponse",
     "GridResponse",
+    "UpdateResponse",
     "run_workloads",
     "ProgressEvent",
     "stream_workload",
     "TrafficLog",
 ]
 
-WORKLOAD_SCHEMA_VERSION = 1
-KINDS = ("cv", "permutation", "rsa", "tune", "grid")
+#: Version 2 added ``kind="update"`` and the ``drop_idx`` field; version 1
+#: dicts are upgraded transparently by :func:`_upgrade_v1_to_v2`.
+WORKLOAD_SCHEMA_VERSION = 2
+KINDS = ("cv", "permutation", "rsa", "tune", "grid", "update")
 
 _PERM_ESTIMATORS = ("binary", "multiclass")
 _BINARY_METRICS = ("accuracy", "auc")
@@ -119,11 +125,18 @@ class DatasetHandle:
     """Opaque reference to a dataset registered on a :class:`CVEngine`.
 
     ``key`` is the content fingerprint ``plan_key(x, folds, λ, mode,
-    with_train_block=True)`` — the same identity the
+    with_train_block=True, version=version)`` — the same identity the
     :class:`~repro.serve.cache.PlanCache` uses — so a handle survives
     serialisation (:meth:`Workload.to_dict` emits the key) and resolves on
     any engine that registered the same bytes. Workloads carry the handle
     instead of re-shipping the feature matrix.
+
+    ``version`` is 0 for a freshly registered dataset and increments each
+    time the engine applies an incremental update (``append``/``retire``/
+    a ``kind="update"`` workload); ``n_appended`` counts the rows appended
+    over the handle's whole lineage. Old versions remain servable until
+    released — in-flight workloads pin the version they were built
+    against.
     """
 
     key: tuple
@@ -131,6 +144,8 @@ class DatasetHandle:
     p: int = 0
     lam: float = 0.0
     mode: str = "auto"
+    version: int = 0
+    n_appended: int = 0
 
     def to_dict(self) -> dict:
         return {
@@ -139,6 +154,8 @@ class DatasetHandle:
             "p": self.p,
             "lam": self.lam,
             "mode": self.mode,
+            "version": self.version,
+            "n_appended": self.n_appended,
         }
 
     @classmethod
@@ -149,6 +166,8 @@ class DatasetHandle:
             p=int(d.get("p", 0)),
             lam=float(d.get("lam", 0.0)),
             mode=d.get("mode", "auto"),
+            version=int(d.get("version", 0)),
+            n_appended=int(d.get("n_appended", 0)),
         )
 
 
@@ -456,6 +475,26 @@ class GridResponse:
     timings: Optional[dict] = None  # stage -> seconds, tracing only
 
 
+@dataclasses.dataclass
+class UpdateResponse:
+    """Result of a ``kind="update"`` workload: the advanced dataset.
+
+    ``handle`` is the version n+1 :class:`DatasetHandle`; subsequent
+    workloads should carry it. ``appended``/``dropped`` count this
+    workload's own contribution (coalesced updates share one correction
+    but report per-member counts); ``rank`` = appended + dropped is the
+    correction rank the engine applied for this member.
+    """
+
+    handle: DatasetHandle
+    version: int
+    appended: int
+    dropped: int
+    rank: int
+    plan_key: tuple
+    timings: Optional[dict] = None  # stage -> seconds, tracing only
+
+
 # ---------------------------------------------------------------------------
 # The Workload spec
 # ---------------------------------------------------------------------------
@@ -479,11 +518,16 @@ class Workload:
                    plan, so no dataset)
       grid         xs (Q, N, P) + y + dataset for folds/λ (the spec's own
                    ``x`` may be None)
+      update       dataset (a registered DatasetHandle) + x (rows to
+                   append) and/or drop_idx (base-version rows to retire);
+                   the engine advances the cached plan by a rank-k
+                   correction and returns the version n+1 handle
 
     ``dataset`` is a :class:`DatasetHandle` (registered; carries no
-    feature bytes) or an inline :class:`DatasetSpec`. Validation runs at
-    construction: shape/coding errors surface here with a clear message,
-    never as a jit shape failure mid-serve.
+    feature bytes) or an inline :class:`DatasetSpec` (``kind="update"``
+    requires a handle — incremental updates act on registry state).
+    Validation runs at construction: shape/coding errors surface here with
+    a clear message, never as a jit shape failure mid-serve.
     """
 
     kind: str
@@ -504,8 +548,9 @@ class Workload:
     # tune spec
     lambdas: object = None
     criterion: str = "mse"
-    x: object = None  # tune-kind features
+    x: object = None  # tune-kind features / update-kind appended rows
     xs: object = None  # grid-kind (Q, N, P) feature grid
+    drop_idx: object = None  # update-kind base-version rows to retire
 
     def __post_init__(self):
         self.validate()
@@ -625,6 +670,51 @@ class Workload:
         if shape[1] != np.shape(self.y)[0]:
             raise ValueError(f"grid xs second dim {shape[1]} != len(y) {np.shape(self.y)[0]}")
 
+    def _validate_update(self):
+        self._require_dataset()
+        if not isinstance(self.dataset, DatasetHandle):
+            raise ValueError(
+                "update workloads need a registered DatasetHandle — "
+                "incremental updates advance registry state, so register() "
+                "the dataset first"
+            )
+        if self.x is None and self.drop_idx is None:
+            raise ValueError(
+                "update workloads need rows to append (x), rows to retire "
+                "(drop_idx), or both"
+            )
+        if self.x is not None:
+            shape = np.shape(self.x)
+            if len(shape) != 2:
+                raise ValueError(
+                    f"update x must be a (k, P) block of appended rows, "
+                    f"got shape {shape}"
+                )
+            if self.dataset.p and shape[1] != self.dataset.p:
+                raise ValueError(
+                    f"update x has {shape[1]} features but the dataset has "
+                    f"P={self.dataset.p}"
+                )
+        if self.drop_idx is not None:
+            arr = np.asarray(self.drop_idx)
+            if arr.ndim != 1 or arr.size == 0:
+                raise ValueError(
+                    f"update drop_idx must be a non-empty 1-D index array, "
+                    f"got shape {arr.shape}"
+                )
+            if not np.issubdtype(arr.dtype, np.integer):
+                raise ValueError(
+                    f"update drop_idx must be integer row indices, got "
+                    f"dtype {arr.dtype}"
+                )
+            if arr.min() < 0 or (self.dataset.n and arr.max() >= self.dataset.n):
+                raise ValueError(
+                    f"update drop_idx out of range for the dataset's "
+                    f"N={self.dataset.n}"
+                )
+            if np.unique(arr).size != arr.size:
+                raise ValueError("update drop_idx contains duplicate rows")
+
     # -- versioned serialisation -------------------------------------------
 
     def to_dict(self) -> dict:
@@ -643,7 +733,7 @@ class Workload:
             "comparison": self.comparison,
             "criterion": self.criterion,
         }
-        for field in ("y", "model_rdms", "lambdas", "x", "xs"):
+        for field in ("y", "model_rdms", "lambdas", "x", "xs", "drop_idx"):
             d[field] = _encode_array(getattr(self, field))
         d["dataset"] = _encode_dataset(self.dataset)
         return d
@@ -651,6 +741,9 @@ class Workload:
     @classmethod
     def from_dict(cls, d: dict) -> "Workload":
         schema = d.get("schema")
+        while schema in _SCHEMA_UPGRADES and schema != WORKLOAD_SCHEMA_VERSION:
+            d = _SCHEMA_UPGRADES[schema](d)
+            schema = d.get("schema")
         if schema != WORKLOAD_SCHEMA_VERSION:
             raise ValueError(
                 f"unsupported workload schema version {schema!r} "
@@ -674,7 +767,20 @@ class Workload:
             criterion=d.get("criterion", "mse"),
             x=_decode_array(d.get("x")),
             xs=_decode_array(d.get("xs")),
+            drop_idx=_decode_array(d.get("drop_idx")),
         )
+
+
+def _upgrade_v1_to_v2(d: dict) -> dict:
+    """Schema 1 → 2: ``kind="update"`` and ``drop_idx`` were added; every
+    v1 field kept its meaning, so the upgrade just fills the v2 defaults."""
+    out = dict(d)
+    out["schema"] = 2
+    out.setdefault("drop_idx", None)
+    return out
+
+
+_SCHEMA_UPGRADES = {1: _upgrade_v1_to_v2}
 
 
 def _encode_array(a):
@@ -726,13 +832,15 @@ def _decode_dataset(d):
 
 
 def as_workload(obj) -> Workload:
-    """Normalise: a Workload passes through; legacy requests convert."""
+    """Normalise to a :class:`Workload` (the deprecated request-shim
+    conversion hook was removed at 0.3 — see the README migration table)."""
     if isinstance(obj, Workload):
         return obj
-    to_workload = getattr(obj, "to_workload", None)
-    if to_workload is not None:
-        return to_workload()
-    raise TypeError(f"cannot interpret {type(obj).__name__} as a Workload")
+    raise TypeError(
+        f"cannot interpret {type(obj).__name__} as a Workload; the legacy "
+        "request classes were removed at 0.3 — construct a repro.serve."
+        "Workload (README: 'Migration from the request classes')"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -757,8 +865,11 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     (plan, estimator, static-options) group; RSA contrast columns ride the
     same column path with empirical-RDM memoisation (repeat scoring of the
     same (plan, labels) skips the fold solves entirely); permutation, tune,
-    and grid workloads route to their engine entry points. Legacy request
-    objects are accepted and converted via :func:`as_workload`.
+    and grid workloads route to their engine entry points. ``update``
+    workloads against the same base version coalesce into one rank-k
+    correction (appends stack in submission order, drop sets union); every
+    member receives the same version n+1 handle with its own
+    appended/dropped contribution in the :class:`UpdateResponse`.
 
     With ``return_errors=True`` a failing workload (conversion error,
     unknown/evicted dataset handle, eval failure) yields its *exception
@@ -785,14 +896,30 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     metrics_reg = getattr(engine, "metrics", None)
     traces: list = [None] * len(raw)
     plan_memo: dict = {}
+    # In-flight version pinning: every handle this batch resolves is
+    # retained on the engine for the batch's duration, so a concurrent
+    # release() of a stale version cannot pull the plan out from under a
+    # workload that was built against it.
+    retain = getattr(engine, "retain_version", None)
+    release = getattr(engine, "release_version", None)
+    retained: set = set()
 
     def fail(i, e: Exception):
         if not return_errors:
+            # Propagating aborts the batch: drop the version pins first so
+            # a failed batch can't wedge deferred releases forever.
+            if release is not None:
+                for key in retained:
+                    release(key)
+                retained.clear()
             raise e
         responses[i] = e
 
     def plan_for(dataset, with_train_block: bool):
         if isinstance(dataset, DatasetHandle):
+            if retain is not None and dataset.key not in retained:
+                retain(dataset.key)
+                retained.add(dataset.key)
             memo_key = (dataset.key, with_train_block)
         else:
             memo_key = (
@@ -810,6 +937,7 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     # -- group CV workloads by (plan, estimator, static opts) --------------
     groups: dict = {}
     rsa_groups: dict = {}
+    update_groups: dict = {}
     for i, obj in enumerate(raw):
         tr = trace_of(obj)
         if tr is None and tracer.enabled:
@@ -879,6 +1007,11 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
                         )
                     with tracer.span("encode"):
                         responses[i] = GridResponse(grid)
+                elif w.kind == "update":
+                    # Same-dataset updates coalesce into one rank-k
+                    # correction per base version (appends stack, drops
+                    # union) — processed after grouping, below.
+                    update_groups.setdefault(w.dataset.key, []).append((i, w))
                 else:  # unreachable: validate() gates kinds
                     raise ValueError(f"unknown workload kind {w.kind!r}")
         except Exception as e:  # noqa: BLE001 - isolated per workload
@@ -948,6 +1081,45 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
             except Exception as e:  # noqa: BLE001 - per-member model scoring
                 fail(i, e)
 
+    # -- one coalesced rank-k correction per updated base version ----------
+    for base_key, members in update_groups.items():
+        try:
+            update_dataset = getattr(engine, "update_dataset", None)
+            if update_dataset is None:
+                raise TypeError(
+                    "this engine does not support kind='update' workloads "
+                    "(no update_dataset method)")
+            x_blocks = [w.x for _, w in members if w.x is not None]
+            drops = [np.asarray(w.drop_idx) for _, w in members if w.drop_idx is not None]
+            x_new = jnp.concatenate([jnp.asarray(b) for b in x_blocks]) if x_blocks else None
+            drop_idx = np.concatenate(drops) if drops else None
+            t0 = time.perf_counter() if tracer.enabled else 0.0
+            handle = update_dataset(members[0][1].dataset, x_new=x_new, drop_idx=drop_idx)
+            if tracer.enabled:
+                dt = time.perf_counter() - t0
+                for i, _w in members:
+                    if traces[i] is not None:
+                        traces[i].add("plan_update", dt)
+        except Exception as e:  # noqa: BLE001 - the group shares the update
+            for i, _w in members:
+                fail(i, e)
+            continue
+        for i, w in members:
+            try:
+                with tracer.activate(traces[i]), tracer.span("encode"):
+                    appended = 0 if w.x is None else int(np.shape(w.x)[0])
+                    dropped = 0 if w.drop_idx is None else int(np.shape(w.drop_idx)[0])
+                    responses[i] = UpdateResponse(
+                        handle=handle,
+                        version=handle.version,
+                        appended=appended,
+                        dropped=dropped,
+                        rank=appended + dropped,
+                        plan_key=handle.key,
+                    )
+            except Exception as e:  # noqa: BLE001 - per-member encode
+                fail(i, e)
+
     # -- close traces; attach per-stage sums to the responses --------------
     for i, resp in enumerate(responses):
         tr = traces[i]
@@ -956,6 +1128,9 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
         tracer.finish(tr)
         if resp is not None and not isinstance(resp, Exception):
             resp.timings = tr.timings()
+    if release is not None:
+        for key in retained:
+            release(key)
     return responses
 
 
@@ -1017,10 +1192,13 @@ class ProgressEvent:
 
     kind:    "plan" (payload: plan key), "observed" (payload: observed
              metric), "rdm" (payload: empirical RDM), "scores" (payload:
-             model scores), "null" (payload: the new null chunk), or
-             "done" (payload: the final response object).
-    done:    permutations finished so far (0 for pre-null events).
-    total:   total permutations the stream will produce.
+             model scores), "null" (payload: the new null chunk),
+             "update" (payload: per-increment metrics delta dict — rows
+             applied, correction rank, new version, seconds), or "done"
+             (payload: the final response object).
+    done:    permutations finished so far (0 for pre-null events); rows
+             applied so far for streamed updates.
+    total:   total permutations (or update rows) the stream will produce.
     payload: kind-specific value; always the full response on "done".
     """
 
@@ -1090,6 +1268,11 @@ def stream_workload(engine, workload, chunk: int = 64) -> Iterator[ProgressEvent
             tr.kind = w.kind
         _count_request(engine, w.kind, "")
         yield from _stream_rsa(engine, w, chunk, tracer, tr)
+    elif w.kind == "update":
+        if tr is not None:
+            tr.kind = w.kind
+        _count_request(engine, w.kind, "")
+        yield from _stream_update(engine, w, chunk, tracer, tr)
     else:
         # run_workloads counts the request, picks the trace up from the
         # workload object, and attaches timings itself.
@@ -1153,6 +1336,76 @@ def _stream_permutation(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=
         null = jnp.concatenate(chunks)
         p = perm_lib.p_value(observed, null)
         return PermutationResponse(observed, null, p, key)
+
+    yield ProgressEvent("done", total, total, _finish_stream(tracer, tr, build))
+
+
+def _stream_update(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
+    """Chunked incremental updates: apply the correction in increments.
+
+    The drop set (plus an equal number of appended rows when both are
+    present — the sliding-window move) lands as the first increment; any
+    remaining appended rows follow in chunks rounded to a whole number of
+    folds so every increment keeps per-fold test sizes rectangular. Each
+    increment is a real engine update (counters and histograms move per
+    increment — the emitted "update" events are metrics deltas), and the
+    superseded intermediate versions are released as soon as the next one
+    lands; only the base version and the final version survive the stream.
+    """
+    handle = w.dataset
+    k_total = 0 if w.x is None else int(np.shape(w.x)[0])
+    d_total = 0 if w.drop_idx is None else int(np.shape(w.drop_idx)[0])
+    total = k_total + d_total
+    yield ProgressEvent("plan", 0, total, handle.key)
+    x = None if w.x is None else jnp.asarray(w.x)
+    increments = []
+    lo = 0
+    if d_total:
+        take = min(k_total, d_total)
+        increments.append((None if not take else x[:take], w.drop_idx))
+        lo = take
+    if lo < k_total:
+        rec = getattr(engine, "dataset_record", None)
+        n_folds = rec(handle).folds.k if rec is not None else 1
+        step = max(n_folds, chunk - chunk % n_folds)
+        for start in range(lo, k_total, step):
+            increments.append((x[start : start + step], None))
+    release = getattr(engine, "release", None)
+    cur, prev = handle, None
+    applied = 0
+    for x_inc, drop_inc in increments:
+        k_inc = 0 if x_inc is None else int(x_inc.shape[0])
+        d_inc = 0 if drop_inc is None else int(np.shape(drop_inc)[0])
+        t0 = time.perf_counter()
+        with tracer.activate(tr):
+            cur = engine.update_dataset(cur, x_new=x_inc, drop_idx=drop_inc)
+        dt = time.perf_counter() - t0
+        if prev is not None and release is not None:
+            release(prev, drop_store=True)
+        prev = cur
+        applied += k_inc + d_inc
+        yield ProgressEvent(
+            "update",
+            applied,
+            total,
+            {
+                "appended": k_inc,
+                "dropped": d_inc,
+                "rank": k_inc + d_inc,
+                "version": cur.version,
+                "seconds": dt,
+            },
+        )
+
+    def build():
+        return UpdateResponse(
+            handle=cur,
+            version=cur.version,
+            appended=k_total,
+            dropped=d_total,
+            rank=total,
+            plan_key=cur.key,
+        )
 
     yield ProgressEvent("done", total, total, _finish_stream(tracer, tr, build))
 
@@ -1322,9 +1575,15 @@ class TrafficLog:
                 self._add(bucket=bucket_size(w.n_perm, buckets), **model_entry)
                 if chunk is not None:
                     self._add(bucket=chunk, **model_entry)
-        # tune/grid build no plans: nothing to warm
+        # tune/grid build no plans: nothing to warm; update runs in host
+        # numpy (no jitted program), so it records nothing either
 
     # -- persistence -------------------------------------------------------
+
+    #: Schema versions this build replays. Entries are (task, bucket)
+    #: coordinate dicts whose meaning is unchanged since v1, so old
+    #: recorded logs keep warming new builds (``serve_cv --warmup-from``).
+    _ACCEPTED_SCHEMAS = (1, WORKLOAD_SCHEMA_VERSION)
 
     def to_json(self) -> str:
         return json.dumps({"schema": WORKLOAD_SCHEMA_VERSION, "entries": self.entries()}, indent=2)
@@ -1332,7 +1591,7 @@ class TrafficLog:
     @classmethod
     def from_json(cls, text: str) -> "TrafficLog":
         d = json.loads(text)
-        if d.get("schema") != WORKLOAD_SCHEMA_VERSION:
+        if d.get("schema") not in cls._ACCEPTED_SCHEMAS:
             raise ValueError(f"unsupported traffic-log schema {d.get('schema')!r}")
         return cls(d["entries"])
 

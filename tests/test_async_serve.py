@@ -20,13 +20,10 @@ from repro.data import synthetic
 from repro.serve import (
     AsyncEngineServer,
     CVEngine,
-    CVRequest,
     DatasetSpec,
     EngineConfig,
-    PermutationRequest,
     ProgressEvent,
-    RSARequest,
-    TuneRequest,
+    Workload,
     serve,
 )
 
@@ -52,13 +49,13 @@ def _mixed_requests(problem, n_perm=12):
     x, y, yc, f = problem
     spec = DatasetSpec(x, f, LAM)
     return [
-        CVRequest(spec, y, task="binary"),
-        CVRequest(spec, -y, task="binary"),
-        CVRequest(spec, jnp.stack([y, -y, jnp.roll(y, 3)], axis=1), task="binary"),
-        CVRequest(spec, y, task="ridge"),
-        CVRequest(spec, yc, task="multiclass", num_classes=3),
-        PermutationRequest(spec, y, n_perm, seed=4),
-        TuneRequest(x, y),
+        Workload(kind="cv", dataset=spec, y=y, estimator="binary"),
+        Workload(kind="cv", dataset=spec, y=-y, estimator="binary"),
+        Workload(kind="cv", dataset=spec, y=jnp.stack([y, -y, jnp.roll(y, 3)], axis=1), estimator="binary"),
+        Workload(kind="cv", dataset=spec, y=y, estimator="ridge"),
+        Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3),
+        Workload(kind="permutation", dataset=spec, y=y, n_perm=n_perm, seed=4),
+        Workload(kind="tune", x=x, y=y),
     ]
 
 
@@ -102,8 +99,8 @@ def test_async_ragged_concurrent_clients(problem):
     async def client(server, cid):
         width = 1 + cid % 3
         cols = jnp.stack([jnp.roll(y, cid + j) for j in range(width)], axis=1)
-        resp_b = await server.submit(CVRequest(spec, cols, task="binary"))
-        resp_m = await server.submit(CVRequest(spec, yc, task="multiclass", num_classes=3))
+        resp_b = await server.submit(Workload(kind="cv", dataset=spec, y=cols, estimator="binary"))
+        resp_m = await server.submit(Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3))
         return cid, cols, resp_b, resp_m
 
     async def main():
@@ -133,7 +130,10 @@ def test_async_ragged_concurrent_clients(problem):
 
 def test_async_server_propagates_errors(problem):
     engine = CVEngine()
-    bad = CVRequest(_spec(problem), problem[1], task="nonsense")
+    # Estimator names are validated eagerly at construction, so smuggle an
+    # invalid one past __post_init__ to exercise serve-time propagation.
+    bad = Workload(kind="cv", dataset=_spec(problem), y=problem[1])
+    object.__setattr__(bad, "estimator", "nonsense")
 
     async def main():
         async with AsyncEngineServer(engine) as server:
@@ -151,7 +151,7 @@ def test_async_server_rejects_after_stop(problem):
         await server.start()
         await server.stop()
         with pytest.raises(RuntimeError):
-            await server.submit(CVRequest(_spec(problem), problem[1]))
+            await server.submit(Workload(kind="cv", dataset=_spec(problem), y=problem[1]))
 
     asyncio.run(main())
 
@@ -176,10 +176,10 @@ def test_warmup_then_zero_recompiles_under_traffic(problem):
     assert warm == info["compiles"]
 
     async def client(server, cid):
-        await server.submit(CVRequest(spec, jnp.roll(y, cid), task="binary"))
-        await server.submit(CVRequest(spec, yc, task="multiclass", num_classes=3))
-        await server.submit(CVRequest(spec, jnp.roll(y, cid + 1), task="ridge"))
-        await server.submit(PermutationRequest(spec, y, 14, seed=cid))
+        await server.submit(Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid), estimator="binary"))
+        await server.submit(Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3))
+        await server.submit(Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid + 1), estimator="ridge"))
+        await server.submit(Workload(kind="permutation", dataset=spec, y=y, n_perm=14, seed=cid))
 
     async def main():
         async with AsyncEngineServer(engine, gather_window_ms=3.0) as server:
@@ -211,7 +211,7 @@ def test_stream_permutation_chunks_match_monolithic(problem):
     async def main():
         events = []
         async with AsyncEngineServer(engine, stream_chunk=8) as server:
-            async for ev in server.stream(PermutationRequest(spec, y, 20, seed=4)):
+            async for ev in server.stream(Workload(kind="permutation", dataset=spec, y=y, n_perm=20, seed=4)):
                 events.append(ev)
         return events
 
@@ -238,7 +238,7 @@ def test_stream_multiclass_permutation(problem):
     x, _, yc, f = problem
     spec = DatasetSpec(x, f, LAM)
     engine = CVEngine()
-    req = PermutationRequest(spec, yc, 10, seed=2, task="multiclass", num_classes=3)
+    req = Workload(kind="permutation", dataset=spec, y=yc, n_perm=10, seed=2, estimator="multiclass", num_classes=3)
 
     async def main():
         async with AsyncEngineServer(engine, stream_chunk=4) as server:
@@ -258,7 +258,7 @@ def test_stream_rsa_events(problem):
     spec = DatasetSpec(x, foldlib.stratified_kfold(yc, K, seed=0), LAM)
     models = jnp.stack([rsa.ring_rdm(c), rsa.ring_rdm(c) * 0.5 + 0.1])
     engine = CVEngine()
-    req = RSARequest(spec, yc, c, model_rdms=models, n_perm=10, seed=3)
+    req = Workload(kind="rsa", dataset=spec, y=yc, num_classes=c, model_rdms=models, n_perm=10, seed=3)
 
     async def main():
         async with AsyncEngineServer(engine, stream_chunk=4) as server:
@@ -281,7 +281,7 @@ def test_stream_rsa_events(problem):
 def test_stream_non_streamable_degenerates_to_done(problem):
     x, y, _, f = problem
     engine = CVEngine()
-    req = CVRequest(DatasetSpec(x, f, LAM), y, task="binary")
+    req = Workload(kind="cv", dataset=DatasetSpec(x, f, LAM), y=y, estimator="binary")
 
     async def main():
         async with AsyncEngineServer(engine) as server:

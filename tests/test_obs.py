@@ -191,6 +191,7 @@ _GOLDEN_STATS_KEYS = {
     "bytes_in_use",
     "byte_budget",
     "plans_built",
+    "plans_updated",
     "labels_evaluated",
     "compiles",
     "datasets_registered",
@@ -213,7 +214,9 @@ def test_stats_schema_golden(problem, engine):
     per = s["per_dataset"]
     assert len(per) == 1
     (rec,) = per.values()
-    assert set(rec) == {"n", "p", "served", "plan_bytes", "resident", "pinned", "last_used"}
+    assert set(rec) == {"n", "p", "version", "n_appended", "served",
+                        "plan_bytes", "resident", "pinned", "last_used"}
+    assert rec["version"] == 0 and rec["n_appended"] == 0
     assert rec["n"] == N and rec["p"] == P
     assert rec["served"] == 1
     assert rec["resident"] and rec["plan_bytes"] > 0

@@ -1,0 +1,303 @@
+"""Mutable versioned datasets: incremental plan updates vs full rebuilds.
+
+The tentpole contract of the ``kind="update"`` redesign, from the math
+up through the serving stack:
+
+  * ``fastcv.update_plan`` / ``downdate_plan`` / ``sliding_window``
+    reproduce the from-scratch ``prepare`` plan (rank-k Woodbury with
+    centering corrections, host float64) — checked against rebuilds;
+  * an engine handle advanced through ``append``/``retire``/window ops
+    serves *predictions* matching a fresh engine registered with the
+    final rows, for every registered estimator and both fold shapes
+    (k-fold and LOO), within 1e-5;
+  * versions are real: old handles stay servable until released,
+    in-flight pins defer the purge, and releasing a stale version
+    removes its store entry cleanly (never via quarantine);
+  * repeated window advances are compile-flat once warm (updates run in
+    host numpy — no new XLA programs);
+  * schema v1 dicts and v1 traffic logs still load (upgrade hook).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastcv, folds as foldlib
+from repro.serve import (Client, CVEngine, DatasetHandle, DatasetSpec,
+                         EngineConfig, Workload)
+from repro.serve.workload import (WORKLOAD_SCHEMA_VERSION, TrafficLog,
+                                  UpdateResponse, _upgrade_v1_to_v2)
+
+N, P, K, LAM = 32, 80, 4, 1.0
+
+ESTIMATORS = ("binary", "ridge", "multiclass", "ridge_multi")
+
+
+@pytest.fixture(scope="module")
+def x_full():
+    """More rows than any starting dataset so appends draw fresh ones."""
+    return jax.random.normal(jax.random.PRNGKey(7), (N + 3 * K, P),
+                             dtype=jnp.float64)
+
+
+def _make_folds(shape: str):
+    return foldlib.kfold(N, K, seed=1) if shape == "kfold" else foldlib.loo(N)
+
+
+def _workloads(handle, n: int):
+    """One workload per registered estimator family, sized for n rows."""
+    y_bin = jnp.asarray(np.where(np.arange(n) % 2 == 0, -1.0, 1.0))
+    y_int = np.asarray(np.arange(n) % 3, dtype=np.int32)
+    y_multi = jnp.stack([y_bin, 2.0 * y_bin], axis=1)
+    return {
+        "binary": Workload(kind="cv", dataset=handle, y=y_bin),
+        "ridge": Workload(kind="cv", dataset=handle, y=y_bin, estimator="ridge"),
+        "multiclass": Workload(kind="cv", dataset=handle, y=y_int,
+                               estimator="multiclass", num_classes=3),
+        "ridge_multi": Workload(kind="cv", dataset=handle, y=y_multi,
+                                estimator="ridge_multi"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# plan-level parity: incremental corrections == from-scratch prepare
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", ["kfold", "loo"])
+def test_incremental_plans_match_rebuild(x_full, shape):
+    x0 = np.asarray(x_full[:N], dtype=np.float64)
+    folds = _make_folds(shape)
+    plan = fastcv.prepare(jnp.asarray(x0), folds, LAM, mode="dual",
+                          with_train_block=True)
+
+    if shape == "kfold":
+        # append one row per fold, then slide the window
+        xa = np.asarray(x_full[N:N + K], dtype=np.float64)
+        plan1 = fastcv.update_plan(plan, xa, np.arange(K) % K, x=x0, lam=LAM)
+        x1 = np.concatenate([x0, xa])
+        drop = np.asarray(jax.device_get(plan1.te_idx))[:, 0].astype(np.int64)
+        xb = np.asarray(x_full[N + K:N + 2 * K], dtype=np.float64)
+        plan2 = fastcv.sliding_window(plan1, xb, drop, x=x1, lam=LAM)
+        x2 = np.concatenate([x1[np.setdiff1d(np.arange(len(x1)), drop)], xb])
+    else:
+        # LOO folds are width-1: only window moves preserve the shape
+        drop = np.array([0, 5], dtype=np.int64)
+        xb = np.asarray(x_full[N:N + 2], dtype=np.float64)
+        plan2 = fastcv.sliding_window(plan, xb, drop, x=x0, lam=LAM)
+        x2 = np.concatenate([x0[np.setdiff1d(np.arange(N), drop)], xb])
+
+    rebuilt = fastcv.prepare(
+        jnp.asarray(x2),
+        foldlib.Folds.with_indices(plan2.te_idx, plan2.tr_idx),
+        LAM, mode="dual", with_train_block=True)
+    np.testing.assert_allclose(np.asarray(plan2.h), np.asarray(rebuilt.h),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(plan2.h_tr_te),
+                               np.asarray(rebuilt.h_tr_te),
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_update_plan_requires_folds_delta(x_full):
+    x0 = np.asarray(x_full[:N], dtype=np.float64)
+    plan = fastcv.prepare(jnp.asarray(x0), _make_folds("kfold"), LAM,
+                          mode="dual", with_train_block=True)
+    with pytest.raises(ValueError, match="folds_delta"):
+        fastcv.update_plan(plan, np.asarray(x_full[N:N + K]), None,
+                           x=x0, lam=LAM)
+
+
+# ---------------------------------------------------------------------------
+# served parity: the ISSUE acceptance bar — every estimator, both fold
+# shapes, updated-handle predictions vs a fresh from-scratch engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", ["kfold", "loo"])
+def test_updated_handle_predictions_match_fresh_rebuild(x_full, shape):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    h0 = eng.register(x_full[:N], _make_folds(shape), LAM)
+
+    if shape == "kfold":
+        h1 = eng.append(h0, x_full[N:N + K])  # round-robin over folds
+        drop = np.asarray(
+            jax.device_get(eng.dataset_record(h1).folds.te_idx))[:, 0]
+        h2 = eng.update_dataset(h1, x_new=x_full[N + K:N + 2 * K],
+                                drop_idx=drop)
+    else:
+        h1 = eng.update_dataset(h0, x_new=x_full[N:N + 2],
+                                drop_idx=np.array([0, 5]))
+        h2 = eng.update_dataset(h1, x_new=x_full[N + 2:N + 4],
+                                drop_idx=np.array([3, 9]))
+
+    assert (h2.version, eng.dataset_record(h2).version) == (2, 2)
+    rec = eng.dataset_record(h2)
+    n = int(rec.x.shape[0])
+
+    fresh = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    fh = fresh.register(rec.x, rec.folds, LAM)
+
+    updated, scratch = Client(eng), Client(fresh)
+    for name in ESTIMATORS:
+        got = updated.submit(_workloads(h2, n)[name])
+        want = scratch.submit(_workloads(fh, n)[name])
+        np.testing.assert_allclose(np.asarray(got.values),
+                                   np.asarray(want.values),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(np.asarray(got.score),
+                                   np.asarray(want.score),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# kind="update" workloads end to end
+# ---------------------------------------------------------------------------
+
+
+def test_update_workload_advances_version_and_counts(x_full):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    client = Client(eng)
+    h0 = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+
+    resp = client.submit(Workload(kind="update", dataset=h0,
+                                  x=x_full[N:N + K]))
+    assert isinstance(resp, UpdateResponse)
+    assert resp.version == 1 and resp.appended == K and resp.dropped == 0
+    assert resp.handle.version == 1 and resp.handle.n == N + K
+    assert resp.handle.n_appended == K
+    assert eng.stats()["plans_updated"] == 1
+
+    # the advanced handle serves; the base version stays servable too
+    n1 = resp.handle.n
+    got = client.submit(_workloads(resp.handle, n1)["binary"])
+    assert np.asarray(got.values).shape[-1] > 0
+    base = client.submit(_workloads(h0, N)["binary"])
+    assert np.asarray(base.values).shape[-1] > 0
+
+    text = eng.metrics.render_prometheus()
+    assert 'plan_updates_total{op="append"} 1' in text
+    assert "plan_update_rank" in text
+
+
+def test_update_workload_rejects_bad_shapes_eagerly(x_full):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    h0 = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+    with pytest.raises(ValueError, match="DatasetHandle"):
+        Workload(kind="update",
+                 dataset=DatasetSpec(x_full[:N], _make_folds("kfold"), LAM),
+                 x=x_full[N:N + K])
+    with pytest.raises(ValueError, match="rows to append"):
+        Workload(kind="update", dataset=h0)
+    with pytest.raises(ValueError, match="features"):
+        Workload(kind="update", dataset=h0,
+                 x=np.zeros((K, P + 1)))
+    with pytest.raises(ValueError, match="duplicate"):
+        Workload(kind="update", dataset=h0,
+                 drop_idx=np.array([1, 1]))
+
+
+def test_compile_events_flat_across_repeated_window_updates(x_full):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    client = Client(eng)
+    handle = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+    rng = np.random.default_rng(0)
+
+    def advance(h):
+        drop = np.asarray(
+            jax.device_get(eng.dataset_record(h).folds.te_idx))[:, 0]
+        x_new = jnp.asarray(rng.normal(size=(K, P)))
+        h2 = client.submit(Workload(kind="update", dataset=h,
+                                    x=x_new, drop_idx=drop)).handle
+        client.submit(_workloads(h2, h2.n)["binary"])
+        return h2
+
+    handle = advance(handle)  # absorb the first-shape compiles
+    warm = eng.compile_count()
+    for _ in range(3):
+        handle = advance(handle)
+    assert eng.compile_count() == warm
+    assert handle.version == 4
+
+
+# ---------------------------------------------------------------------------
+# version pinning, release, and the clean (no-quarantine) store removal
+# ---------------------------------------------------------------------------
+
+
+def test_release_defers_while_pinned(x_full):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    h0 = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+    h1 = eng.append(h0, x_full[N:N + K])
+    assert len(eng.datasets()) == 2
+
+    eng.retain_version(h0.key)
+    assert eng.release(h0) is False  # deferred: a workload pins v0
+    assert h0.key in {d["handle"].key for d in eng.datasets()}
+    eng.release_version(h0.key)  # last pin drops -> purge runs
+    assert h0.key not in {d["handle"].key for d in eng.datasets()}
+    assert len(eng.datasets()) == 1
+
+    # releasing an unknown handle is a tolerant no-op
+    assert eng.release(h0) is False
+    # the surviving version still serves
+    Client(eng).submit(_workloads(h1, h1.n)["ridge"])
+
+
+def test_release_drop_store_removes_cleanly(tmp_path, x_full):
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20,
+                                plan_store=str(tmp_path), save_plans=True))
+    h0 = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+    Client(eng).submit(_workloads(h0, N)["binary"])  # build + write-behind
+    h1 = eng.append(h0, x_full[N:N + K])
+    eng.flush_store()
+    assert eng.store.load(h0.key) is not None
+    assert eng.store.load(h1.key) is not None
+
+    assert eng.release(h0, drop_store=True) is True
+    assert eng.store.load(h0.key) is None  # entry gone...
+    assert eng.store.stats.quarantined == 0  # ...but never quarantined
+    assert (tmp_path / "quarantine").exists() is False
+    assert eng.store.load(h1.key) is not None  # successor untouched
+
+
+# ---------------------------------------------------------------------------
+# schema v1 compatibility: the explicit upgrade hook + old traffic logs
+# ---------------------------------------------------------------------------
+
+
+def test_from_dict_upgrades_schema_v1(x_full):
+    w = Workload(kind="cv",
+                 dataset=DatasetHandle(key=("a", "b", "c", 1.0, "dual", 0, True),
+                                       n=N, p=P, lam=1.0, mode="dual"),
+                 y=np.where(np.arange(N) % 2 == 0, -1.0, 1.0))
+    d = w.to_dict()
+    assert d["schema"] == WORKLOAD_SCHEMA_VERSION == 2
+    d["schema"] = 1
+    d.pop("drop_idx", None)  # the v2-only field
+    up = _upgrade_v1_to_v2(dict(d))
+    assert up["schema"] == 2 and up["drop_idx"] is None
+    back = Workload.from_dict(dict(d))  # from_dict applies the hook itself
+    assert back.kind == "cv" and back.drop_idx is None
+    assert back.to_dict()["schema"] == 2
+
+
+def test_traffic_log_schema_v1_still_replays(tmp_path, x_full):
+    """Old recorded logs (schema 1) must keep warming new builds — the
+    ``serve_cv --warmup-from`` contract across the version bump."""
+    eng = CVEngine(EngineConfig(cache_bytes=64 << 20))
+    handle = eng.register(x_full[:N], _make_folds("kfold"), LAM)
+
+    log = TrafficLog()
+    log.record(_workloads(handle, N)["binary"], buckets=(1, 8))
+    text = log.to_json().replace(
+        f'"schema": {WORKLOAD_SCHEMA_VERSION}', '"schema": 1', 1)
+    path = tmp_path / "traffic_v1.json"
+    path.write_text(text)
+
+    replayed = TrafficLog.load(path)
+    assert len(replayed) == len(log)
+    summaries = replayed.replay(eng, handle)
+    assert summaries and all(s for s in summaries)
+    with pytest.raises(ValueError, match="unsupported traffic-log schema"):
+        TrafficLog.from_json(text.replace('"schema": 1', '"schema": 99', 1))

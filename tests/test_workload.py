@@ -1,10 +1,10 @@
 """Tests for the One-API surface: Workload schema + validation, estimator
-registry, dataset handles, shim/core parity across all three transports,
-compile-count flatness across the migration, RDM memoisation, traffic
+registry, dataset handles, core parity across all three transports,
+compile-count flatness between spec- and handle-addressed traffic, the
+0.3 removal of the legacy request shims, RDM memoisation, traffic
 record/replay, and mesh-aware streamed nulls."""
 
 import asyncio
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -16,17 +16,13 @@ from repro.data import synthetic
 from repro.serve import (
     Client,
     CVEngine,
-    CVRequest,
     CVResponse,
     DatasetHandle,
     DatasetSpec,
     EngineConfig,
     GridResponse,
     LeastSquaresSpec,
-    PermutationRequest,
-    RSARequest,
     TrafficLog,
-    TuneRequest,
     Workload,
     as_workload,
     estimators,
@@ -47,21 +43,6 @@ def problem():
     y = jnp.where(yc % 2 == 0, -1.0, 1.0)
     f = foldlib.kfold(N, K, seed=1)
     return x, y, yc, f
-
-
-def _legacy_requests(problem, n_perm=12):
-    x, y, yc, f = problem
-    spec = DatasetSpec(x, f, LAM)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return [
-            CVRequest(spec, y, task="binary"),
-            CVRequest(spec, y, task="ridge"),
-            CVRequest(spec, yc, task="multiclass", num_classes=3),
-            PermutationRequest(spec, y, n_perm, seed=4),
-            RSARequest(spec, yc, 3, model_rdms=jnp.ones((1, 3, 3)), n_perm=8, seed=2),
-            TuneRequest(x, y),
-        ]
 
 
 def _equiv_workloads(problem, dataset, n_perm=12):
@@ -93,24 +74,29 @@ def _assert_responses_equal(got, want, exact=True):
 
 
 # ---------------------------------------------------------------------------
-# Shim parity: every deprecated request == the Workload it converts to
+# 0.3: the deprecated request shims are gone
 # ---------------------------------------------------------------------------
 
 
-def test_shims_convert_and_match_workload_path(problem):
-    x, _, _, f = problem
-    legacy = serve(CVEngine(), _legacy_requests(problem))
-    unified = serve(CVEngine(), _equiv_workloads(problem, DatasetSpec(x, f, LAM)))
-    for got, want in zip(legacy, unified):
-        _assert_responses_equal(got, want, exact=True)
+def test_removed_shims_raise_importerror_with_migration_pointer():
+    for name in ("CVRequest", "PermutationRequest", "RSARequest", "TuneRequest", "Request"):
+        with pytest.raises(ImportError, match="removed at 0.3"):
+            getattr(__import__("repro.serve.api", fromlist=[name]), name)
+    # the package namespace no longer advertises them either
+    import repro.serve as serve_pkg
+    for name in ("CVRequest", "PermutationRequest", "RSARequest", "TuneRequest"):
+        with pytest.raises(AttributeError):
+            getattr(serve_pkg, name)
 
 
-def test_shims_emit_deprecation_warning(problem):
+def test_as_workload_rejects_foreign_objects_with_migration_pointer(problem):
     x, y, _, f = problem
-    with pytest.warns(DeprecationWarning, match="CVRequest is deprecated"):
-        req = CVRequest(DatasetSpec(x, f, LAM), y)
-    w = as_workload(req)
-    assert w.kind == "cv" and w.estimator == "binary"
+
+    class FakeLegacyRequest:
+        pass
+
+    with pytest.raises(TypeError, match="README"):
+        as_workload(FakeLegacyRequest())
 
 
 def test_parity_across_all_three_transports(problem):
@@ -138,18 +124,14 @@ def test_parity_across_all_three_transports(problem):
     for transport in ("thread", "async"):
         for got, want in zip(handle_results[transport], handle_results["sync"]):
             _assert_responses_equal(got, want, exact=True)
-    # and the legacy shims, one at a time, match the sync Workload answers
-    legacy = [serve(CVEngine(), [r])[0] for r in _legacy_requests(problem)]
-    for got, want in zip(legacy, handle_results["sync"]):
-        _assert_responses_equal(got, want, exact=True)
 
 
-def test_compile_count_flat_across_migration(problem):
-    """Serving the legacy request forms then the equivalent Workloads must
-    not retrace anything: one program family, not two."""
+def test_compile_count_flat_across_spec_and_handle_traffic(problem):
+    """Spec-addressed then handle-addressed versions of the same traffic
+    must not retrace anything: one program family, not two."""
     x, _, _, f = problem
     engine = CVEngine()
-    serve(engine, _legacy_requests(problem))
+    serve(engine, _equiv_workloads(problem, DatasetSpec(x, f, LAM)))
     warm = engine.compile_count()
     serve(engine, _equiv_workloads(problem, DatasetSpec(x, f, LAM)))
     handle = engine.register(x, f, LAM)
@@ -329,7 +311,7 @@ def test_workload_roundtrip_dict(problem):
         Workload(kind="tune", x=x, y=y),
     ):
         d = w.to_dict()
-        assert d["schema"] == 1
+        assert d["schema"] == 2
         back = Workload.from_dict(d)
         (a,) = serve(CVEngine(), [w])
         (b,) = serve(CVEngine(), [back])

@@ -11,9 +11,10 @@ wire schema:
     inside jit.
 
 The builders and corruption table live above the hypothesis import on
-purpose: they are plain Python, exercised deterministically by the wire
-tests too, while hypothesis drives them across the whole option space
-in CI (the ``[test]`` extra installs it; environments without it skip).
+purpose: they are plain Python, exercised by the deterministic sweep
+below on every environment, while hypothesis additionally drives them
+across the whole option space in CI (the ``[test]`` extra installs it;
+environments without it run only the sweep).
 """
 
 import json
@@ -33,11 +34,12 @@ _ESTIMATORS = ("binary", "ridge", "multiclass", "ridge_multi")
 _MODES = ("auto", "primal", "dual")
 
 
-def _dataset(use_handle: bool, lam: float, mode: str, with_x: bool = True):
+def _dataset(use_handle: bool, lam: float, mode: str, with_x: bool = True,
+             version: int = 0):
     if use_handle:
         return DatasetHandle(
-            key=("fp-x", "fp-te", "fp-tr", float(lam), mode, True),
-            n=N, p=P, lam=float(lam), mode=mode,
+            key=("fp-x", "fp-te", "fp-tr", float(lam), mode, int(version), True),
+            n=N, p=P, lam=float(lam), mode=mode, version=int(version),
         )
     return DatasetSpec(_X if with_x else None, _FOLDS, float(lam), mode)
 
@@ -84,6 +86,17 @@ def _build_workload(kind, *, seed, use_handle, lam, mode, estimator, width,
         lambdas = rng.uniform(0.1, 5.0, size=4) if with_models else None
         return Workload(kind="tune", x=_X, y=y, lambdas=lambdas,
                         criterion=criterion)
+    if kind == "update":
+        # incremental updates act on registry state, so always a handle;
+        # draw append-only / retire-only / sliding-window shapes
+        ds = _dataset(True, lam, mode, version=width)
+        x_new = rng.normal(size=(width + 1, P))
+        drop = np.sort(rng.choice(N, size=num_classes, replace=False))
+        if not with_models:  # append-only
+            return Workload(kind="update", dataset=ds, x=x_new)
+        if adjust_bias:  # sliding window: append + retire together
+            return Workload(kind="update", dataset=ds, x=x_new, drop_idx=drop)
+        return Workload(kind="update", dataset=ds, drop_idx=drop)
     xs = rng.normal(size=(2, N, P))
     y = rng.choice([-1.0, 1.0], size=(N,))
     return Workload(kind="grid", dataset=_dataset(use_handle, lam, mode, with_x=False),
@@ -110,7 +123,11 @@ def _corrupt_drop_kind(d):
 
 
 def _corrupt_drop_targets(d):
-    d["y"] = None  # every kind requires targets / labels
+    if d["kind"] == "update":
+        d["x"] = None  # updates need rows to append and/or retire
+        d["drop_idx"] = None
+    else:
+        d["y"] = None  # every other kind requires targets / labels
 
 
 def _corrupt_drop_dataset(d):
@@ -129,6 +146,8 @@ def _corrupt_malformed_y(d):
         d["y"] = {"__array__": [0.5] * N, "dtype": "float64"}  # non-integer labels
     elif d["kind"] == "tune":
         d["y"] = {"__array__": [1.0] * (N + 3), "dtype": "float64"}  # length != N
+    elif d["kind"] == "update":
+        d["x"] = {"__array__": [1.0] * P, "dtype": "float64"}  # 1-D, not (k, P)
     else:  # grid
         d["xs"] = {"__array__": [[1.0] * P] * N, "dtype": "float64"}  # not (Q, N, P)
 
@@ -142,6 +161,8 @@ def _corrupt_options(d):
         d["num_classes"] = 0
     elif d["kind"] == "tune":
         d["criterion"] = "nonsense"
+    elif d["kind"] == "update":
+        d["drop_idx"] = {"__array__": [0.5, 1.5], "dtype": "float64"}  # non-int
     else:  # grid
         d["y"] = None
 
@@ -158,59 +179,103 @@ _CORRUPTIONS = (
 )
 
 # ---------------------------------------------------------------------------
-# hypothesis drives the builders across the whole option space
+# deterministic sweep — runs on every environment, hypothesis or not
 # ---------------------------------------------------------------------------
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
-_SETTINGS = dict(max_examples=30, deadline=None, derandomize=True)
-
-
-@st.composite
-def workloads(draw):
-    return _build_workload(
-        draw(st.sampled_from(KINDS)),
-        seed=draw(st.integers(min_value=0, max_value=2**16)),
-        use_handle=draw(st.booleans()),
-        lam=draw(st.floats(min_value=0.01, max_value=50.0)),
-        mode=draw(st.sampled_from(_MODES)),
-        estimator=draw(st.sampled_from(_ESTIMATORS)),
-        width=draw(st.integers(min_value=0, max_value=3)),
-        num_classes=draw(st.integers(min_value=2, max_value=4)),
-        n_perm=draw(st.integers(min_value=1, max_value=40)),
-        wseed=draw(st.integers(min_value=0, max_value=2**31 - 1)),
-        metric=draw(st.sampled_from(("accuracy", "auc"))),
-        contrast=draw(st.sampled_from(("binary", "multiclass"))),
-        dissimilarity=draw(st.sampled_from(("accuracy", "contrast"))),
-        comparison=draw(st.sampled_from(("spearman", "kendall", "pearson", "cosine"))),
-        with_models=draw(st.booleans()),
-        criterion=draw(st.sampled_from(("mse", "error"))),
-        adjust_bias=draw(st.booleans()),
-    )
+_SWEEP = (
+    dict(seed=3, use_handle=False, lam=0.7, mode="auto", estimator="binary",
+         width=0, num_classes=3, n_perm=8, wseed=11, metric="accuracy",
+         contrast="binary", dissimilarity="accuracy", comparison="spearman",
+         with_models=False, criterion="mse", adjust_bias=False),
+    dict(seed=7, use_handle=True, lam=2.5, mode="dual", estimator="ridge_multi",
+         width=2, num_classes=4, n_perm=3, wseed=5, metric="auc",
+         contrast="multiclass", dissimilarity="contrast", comparison="kendall",
+         with_models=True, criterion="error", adjust_bias=True),
+    dict(seed=9, use_handle=True, lam=0.1, mode="primal", estimator="multiclass",
+         width=1, num_classes=2, n_perm=1, wseed=0, metric="accuracy",
+         contrast="binary", dissimilarity="contrast", comparison="cosine",
+         with_models=True, criterion="mse", adjust_bias=False),
+)
 
 
-@given(workloads())
-@settings(**_SETTINGS)
-def test_workload_schema_roundtrips_exactly(w):
-    """∀ valid specs: from_dict(to_dict(w)) through real JSON text is a
-    byte-exact fixed point of to_dict (and preserves dataset handles)."""
+@pytest.mark.parametrize("opts", range(len(_SWEEP)))
+@pytest.mark.parametrize("kind", KINDS)
+def test_schema_roundtrips_deterministic_sweep(kind, opts):
+    w = _build_workload(kind, **_SWEEP[opts])
     d = w.to_dict()
-    wire = json.loads(json.dumps(d))  # through actual wire bytes
-    back = Workload.from_dict(wire)
+    back = Workload.from_dict(json.loads(json.dumps(d)))
     assert back.to_dict() == d
-    assert back.kind == w.kind and back.estimator == w.estimator
+    assert back.kind == w.kind
     if isinstance(w.dataset, DatasetHandle):
         assert back.dataset == w.dataset
 
 
-@given(workloads(), st.integers(min_value=0, max_value=len(_CORRUPTIONS) - 1))
-@settings(**_SETTINGS)
-def test_fuzzed_invalid_dicts_raise_eager_validation(w, idx):
-    """∀ valid specs × corruptions: the mutated dict raises a clear eager
-    exception at from_dict — never an in-jit shape failure later."""
-    _name, corrupt = _CORRUPTIONS[idx]
+@pytest.mark.parametrize("name,corrupt", _CORRUPTIONS, ids=[c[0] for c in _CORRUPTIONS])
+@pytest.mark.parametrize("kind", KINDS)
+def test_corruptions_raise_deterministic_sweep(kind, name, corrupt):
+    w = _build_workload(kind, **_SWEEP[1])
     d = json.loads(json.dumps(w.to_dict()))
     corrupt(d)
     with pytest.raises((ValueError, TypeError, KeyError)):
         Workload.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drives the builders across the whole option space (when
+# installed; the deterministic sweep above runs regardless)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - sweep-only environments
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _SETTINGS = dict(max_examples=30, deadline=None, derandomize=True)
+
+    @st.composite
+    def workloads(draw):
+        return _build_workload(
+            draw(st.sampled_from(KINDS)),
+            seed=draw(st.integers(min_value=0, max_value=2**16)),
+            use_handle=draw(st.booleans()),
+            lam=draw(st.floats(min_value=0.01, max_value=50.0)),
+            mode=draw(st.sampled_from(_MODES)),
+            estimator=draw(st.sampled_from(_ESTIMATORS)),
+            width=draw(st.integers(min_value=0, max_value=3)),
+            num_classes=draw(st.integers(min_value=2, max_value=4)),
+            n_perm=draw(st.integers(min_value=1, max_value=40)),
+            wseed=draw(st.integers(min_value=0, max_value=2**31 - 1)),
+            metric=draw(st.sampled_from(("accuracy", "auc"))),
+            contrast=draw(st.sampled_from(("binary", "multiclass"))),
+            dissimilarity=draw(st.sampled_from(("accuracy", "contrast"))),
+            comparison=draw(st.sampled_from(("spearman", "kendall", "pearson", "cosine"))),
+            with_models=draw(st.booleans()),
+            criterion=draw(st.sampled_from(("mse", "error"))),
+            adjust_bias=draw(st.booleans()),
+        )
+
+    @given(workloads())
+    @settings(**_SETTINGS)
+    def test_workload_schema_roundtrips_exactly(w):
+        """∀ valid specs: from_dict(to_dict(w)) through real JSON text is a
+        byte-exact fixed point of to_dict (and preserves dataset handles)."""
+        d = w.to_dict()
+        wire = json.loads(json.dumps(d))  # through actual wire bytes
+        back = Workload.from_dict(wire)
+        assert back.to_dict() == d
+        assert back.kind == w.kind and back.estimator == w.estimator
+        if isinstance(w.dataset, DatasetHandle):
+            assert back.dataset == w.dataset
+
+    @given(workloads(), st.integers(min_value=0, max_value=len(_CORRUPTIONS) - 1))
+    @settings(**_SETTINGS)
+    def test_fuzzed_invalid_dicts_raise_eager_validation(w, idx):
+        """∀ valid specs × corruptions: the mutated dict raises a clear eager
+        exception at from_dict — never an in-jit shape failure later."""
+        _name, corrupt = _CORRUPTIONS[idx]
+        d = json.loads(json.dumps(w.to_dict()))
+        corrupt(d)
+        with pytest.raises((ValueError, TypeError, KeyError)):
+            Workload.from_dict(d)
