@@ -36,6 +36,7 @@ from repro.core import folds as foldlib
 from repro.data import synthetic
 from repro.serve import Client, CVEngine, DatasetSpec, Workload
 from repro.serve.http import EdgeThread, HTTPClient
+from repro.serve.trace import STAGES
 
 
 def _kind_workloads(handle, f, x, y, yc, t_perm, lam):
@@ -63,7 +64,10 @@ def _kind_workloads(handle, f, x, y, yc, t_perm, lam):
 def _stage_rows(prefix, reps_timings, totals, rows, gate_total=True):
     """Median total + per-stage medians over a list of timings dicts."""
     t_total = median(totals)
-    stages = sorted({s for t in reps_timings for s in t})
+    # Report in the canonical STAGES order (the tracer's vocabulary), so
+    # rows line up across runs regardless of which stages actually fired.
+    seen = {s for t in reps_timings for s in t}
+    stages = [s for s in STAGES if s in seen] + sorted(seen - set(STAGES))
     budget = {s: median(t.get(s, 0.0) for t in reps_timings) for s in stages}
     covered = sum(budget.values()) / t_total if t_total else 0.0
     if gate_total:

@@ -1,0 +1,56 @@
+"""repro.analysis — ``reprolint``, an AST-based invariant checker.
+
+The serving stack rests on invariants that used to live only in review
+comments: host coalescing paths must not assemble arrays with eager
+``jnp`` ops (PR 3's recompile-churn class), batching/trace code must use
+monotonic clocks (PR 6's bug class), span names must come from the fixed
+:data:`repro.serve.trace.STAGES` vocabulary, metric call sites must match
+the central :data:`repro.serve.obs.METRICS` declarations, lock-guarded
+attributes (``_GUARDED_BY``) may only be mutated under their lock, and
+the fastcv update lineage must stay float64 (arXiv 2401.13185 exactness).
+
+``reprolint`` turns each of those into a mechanical check over the AST —
+no imports of the checked code, no jax dependency — so CI catches the
+bug class at lint time instead of a bench-gate bisection later.
+
+Usage::
+
+    python -m repro.analysis src benchmarks          # human output
+    python -m repro.analysis --json src benchmarks   # machine output
+
+Rules
+-----
+==========  ===========================================================
+RL001       jit-hygiene: no eager ``jnp`` assembly / ``time.time()`` in
+            declared host-path / monotonic-time regions
+RL002       trace-stage vocabulary: span/stage literals must be STAGES
+RL003       metrics discipline: names + label keys must match METRICS;
+            label values must come from bounded sources
+RL004       lock discipline: ``_GUARDED_BY`` attrs mutate under lock
+RL005       host-float64 policy: no sub-float64 dtypes in declared
+            host-float64 regions (fastcv update lineage)
+RL000       a ``reprolint: ignore`` suppression without a justification
+==========  ===========================================================
+
+Suppression syntax (the justification is *mandatory*)::
+
+    x = jnp.concatenate(parts)  # reprolint: ignore[RL001] -- shapes repeat, jit-cache hit
+
+Scope declarations are in-file pragmas, so a module (or fixture) opts
+itself in and the checker needs no path configuration::
+
+    # reprolint: host-path        (module- or function-scoped)
+    # reprolint: monotonic-time
+    # reprolint: host-float64
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    BAD_SUPPRESSION,
+    Finding,
+    all_rules,
+    load_metrics,
+    load_stages,
+    render_human,
+    render_json,
+    run,
+)

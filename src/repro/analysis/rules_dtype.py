@@ -1,0 +1,69 @@
+"""RL005 host-float64 policy: no sub-float64 dtypes in declared regions.
+
+PR 8's incremental plan math (``fastcv.update_plan`` / ``downdate_plan``
+/ ``sliding_window``, per arXiv 2401.13185) is bit-exact against a
+from-scratch rebuild *only because* every host-side correction stays in
+IEEE float64. A single float32 cast in that lineage silently degrades
+the Woodbury corrections below test tolerances. Files opt in with a
+``# reprolint: host-float64`` pragma (module- or function-scoped); any
+sub-64-bit float/complex dtype token inside the region is flagged —
+whether spelled ``np.float32``, ``dtype="float32"`` or
+``.astype(jnp.bfloat16)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import FileContext, Finding, Rule
+
+SUB_F64_DTYPES = frozenset(
+    {
+        "float32",
+        "float16",
+        "bfloat16",
+        "half",
+        "single",
+        "complex64",
+    }
+)
+
+_NUMERIC_ROOTS = {"np", "numpy", "jnp"}
+
+
+class HostFloat64(Rule):
+    id = "RL005"
+    title = "host-float64 policy: no sub-float64 dtypes in declared regions"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        regions = ctx.pragma_regions("host-float64")
+        if not regions:
+            return
+        for node in ast.walk(ctx.tree):
+            token = None
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr in SUB_F64_DTYPES
+                and isinstance(node.value, ast.Name)
+                and node.value.id in _NUMERIC_ROOTS
+            ):
+                token = f"{node.value.id}.{node.attr}"
+            elif (
+                isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value in SUB_F64_DTYPES
+            ):
+                token = repr(node.value)
+            if token is None or not any(s <= node.lineno <= e for s, e in regions):
+                continue
+            yield ctx.finding(
+                self.id,
+                node,
+                f"sub-float64 dtype {token} in a host-float64 region — the "
+                "Woodbury update lineage is only exact in float64 "
+                "(arXiv 2401.13185)",
+            )
+
+
+RULES = [HostFloat64()]

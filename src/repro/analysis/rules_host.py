@@ -1,0 +1,121 @@
+"""RL001 jit-hygiene: host paths stay off eager jnp; timing stays monotonic.
+
+Two sub-checks, both scoped by in-file pragmas:
+
+* In ``# reprolint: host-path`` regions (the MicroBatcher coalescing
+  path, the update-group assembly in workload.py/engine.py), any eager
+  ``jnp`` array *construction or assembly* op is flagged — each call
+  compiles a fresh tiny XLA executable per novel shape signature, the
+  exact recompile-churn class PR 3 debugged by hand. ``jnp.asarray`` is
+  explicitly allowed: it is the sanctioned device-transfer entry point
+  (a ``device_put``, not a compilation).
+* In ``# reprolint: monotonic-time`` regions (batching, tracing, server
+  gather loops), ``time.time()`` is flagged — wall clocks jump under
+  NTP slew and broke batch deadlines in PR 6; use
+  ``time.monotonic()``/``time.perf_counter()``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import FileContext, Finding, Rule
+
+# Eager assembly/construction ops that trigger a per-shape XLA compile.
+# (asarray is deliberately absent: device_put does not compile.)
+JNP_CHURN_OPS = frozenset(
+    {
+        "concatenate",
+        "pad",
+        "stack",
+        "hstack",
+        "vstack",
+        "dstack",
+        "column_stack",
+        "row_stack",
+        "tile",
+        "repeat",
+        "split",
+        "array_split",
+        "append",
+        "insert",
+        "delete",
+        "roll",
+        "resize",
+        "broadcast_to",
+        "array",
+        "zeros",
+        "ones",
+        "full",
+        "empty",
+        "arange",
+        "linspace",
+        "eye",
+    }
+)
+
+_JNP_ROOTS = {"jnp"}
+
+
+def _is_jnp(node: ast.AST) -> bool:
+    """True for ``jnp`` or ``jax.numpy`` expression roots."""
+    if isinstance(node, ast.Name):
+        return node.id in _JNP_ROOTS
+    if isinstance(node, ast.Attribute):
+        return (
+            node.attr == "numpy"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax"
+        )
+    return False
+
+
+def _is_time_time(call: ast.Call) -> bool:
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute)
+        and f.attr == "time"
+        and isinstance(f.value, ast.Name)
+        and f.value.id == "time"
+    )
+
+
+class JitHygiene(Rule):
+    id = "RL001"
+    title = "jit-hygiene: no eager jnp assembly / time.time() on declared host paths"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        host = ctx.pragma_regions("host-path")
+        mono = ctx.pragma_regions("monotonic-time")
+        if not host and not mono:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            line = node.lineno
+            f = node.func
+            if (
+                host
+                and isinstance(f, ast.Attribute)
+                and f.attr in JNP_CHURN_OPS
+                and _is_jnp(f.value)
+                and any(s <= line <= e for s, e in host)
+            ):
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    f"eager jnp.{f.attr} on a declared host path compiles per novel "
+                    "shape; assemble in host numpy and enter the device once via "
+                    "jnp.asarray",
+                )
+            if mono and _is_time_time(node) and any(s <= line <= e for s, e in mono):
+                yield ctx.finding(
+                    self.id,
+                    node,
+                    "time.time() in monotonic-time code (wall clocks jump); use "
+                    "time.monotonic() or time.perf_counter()",
+                )
+
+
+RULES = [JitHygiene()]

@@ -43,6 +43,12 @@ from jax.scipy.linalg import cho_factor, cho_solve
 
 from repro.core.folds import Folds
 
+# reprolint: host-float64
+# (The incremental update lineage — update_plan/downdate_plan/
+# sliding_window and their helpers — is bit-exact against from-scratch
+# rebuilds only because every host correction stays IEEE float64, per
+# arXiv 2401.13185. RL005 flags any sub-float64 dtype in this module.)
+
 __all__ = [
     "hat_matrix",
     "hat_matrix_primal",

@@ -60,7 +60,7 @@ def loo_curve(x: jax.Array, y: jax.Array, lambdas: jax.Array,
         # U diag(w) Uᵀ? The two parts are NOT orthogonal in general, but
         # H = 1/N·11ᵀ + U W Uᵀ exactly (DESIGN §2), so
         # H_ii = 1/N + Σ_k w_k U_ik² + 0 (the decomposition is additive).
-        h_diag = 1.0 / n + jnp.sum(w * u * u, axis=1)
+        h_diag = 1.0 / n + jnp.sum(w[None, :] * u * u, axis=1)
         e_hat = y - y_hat
         e_loo = e_hat / jnp.maximum(1.0 - h_diag, 1e-12)
         if criterion == "error":

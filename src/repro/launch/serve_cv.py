@@ -467,10 +467,17 @@ def main():
                     help="serve an RSA workload stream instead of mixed CV")
     ap.add_argument("--conditions", type=int, default=6,
                     help="RSA conditions per dataset (with --rsa)")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="enable jax_debug_nans: every jitted eval re-runs "
+                    "eagerly on a NaN and raises at the producing op "
+                    "(slow; for triaging numeric blowups, not serving)")
     args = ap.parse_args()
 
     if args.save_plans and not args.plan_store:
         ap.error("--save-plans requires --plan-store DIR")
+    if args.debug_nans:
+        jax.config.update("jax_debug_nans", True)
+        print("[serve_cv] jax_debug_nans on: evals re-run de-optimized on NaN")
     setup_compilation_cache(args.compilation_cache)
 
     engine = CVEngine(EngineConfig(

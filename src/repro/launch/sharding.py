@@ -209,8 +209,10 @@ def param_spec(path: str, ndim: int) -> P:
             axes = tuple(axes)
             if ndim == len(axes) + 1:          # scanned stack: leading layer dim
                 axes = (None,) + axes
-            if len(axes) != ndim:
-                axes = tuple(axes[:ndim]) if len(axes) > ndim else axes + (None,) * (ndim - len(axes))
+            if len(axes) > ndim:
+                axes = tuple(axes[:ndim])
+            elif len(axes) < ndim:
+                axes = axes + (None,) * (ndim - len(axes))
             return P(*[
                 (LOGICAL_RULES.get(a) if isinstance(a, str) else None)
                 for a in axes

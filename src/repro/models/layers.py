@@ -48,16 +48,22 @@ def init_norm(cfg: ArchConfig, d: Optional[int] = None):
     return p
 
 
+def _over_last(v, ndim):
+    """Broadcast a (D,) param over the last axis of a rank-``ndim`` input
+    explicitly (the suite runs with rank promotion set to raise)."""
+    return v.reshape((1,) * (ndim - 1) + (-1,))
+
+
 def apply_norm(p, x, cfg: ArchConfig):
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
         out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
-        out = out * p["scale"] + p["bias"]
+        out = out * _over_last(p["scale"], out.ndim) + _over_last(p["bias"], out.ndim)
     else:
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * _over_last(p["scale"], xf.ndim)
     return out.astype(x.dtype)
 
 
@@ -65,7 +71,7 @@ def rms_head_norm(scale, x, eps):
     """Per-head RMS norm (qk-norm, Qwen3-style); x: (..., Dh), f32 math."""
     xf = x.astype(jnp.float32)
     out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
-    return (out * scale).astype(x.dtype)
+    return (out * _over_last(scale, out.ndim)).astype(x.dtype)
 
 
 # ------------------------------------------------------------------- rope --
@@ -92,7 +98,7 @@ def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
         positions = positions[None, :]
     half = d // 2
     freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
-    ang = positions[..., None].astype(jnp.float32) * freqs
+    ang = positions[..., None].astype(jnp.float32) * freqs[None, None, :]
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 

@@ -62,7 +62,7 @@ def _causal_conv(x, w, b, state=None):
     y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
             for i in range(width))
     new_state = xp[:, -(width - 1):, :]
-    return y + b.astype(y.dtype), new_state
+    return y + b.astype(y.dtype)[None, None, :], new_state
 
 
 def _block_linear(x, w, b):
@@ -70,14 +70,15 @@ def _block_linear(x, w, b):
     nb, rb, _ = w.shape
     xs = x.reshape(*x.shape[:-1], nb, rb)
     y = jnp.einsum("...nr,nrq->...nq", xs.astype(jnp.float32), w)
-    return y.reshape(*x.shape) + b
+    y = y.reshape(*x.shape)
+    return y + b.reshape((1,) * (y.ndim - 1) + (-1,))
 
 
 def _gates(p, x):
     """log a_t (f32) and gated input; x: (B, S, R)."""
     r_t = jax.nn.sigmoid(_block_linear(x, p["w_a"], p["b_a"]))
     i_t = jax.nn.sigmoid(_block_linear(x, p["w_input_gate"], p["b_input_gate"]))
-    log_a = -_C * jax.nn.softplus(p["a_param"]) * r_t       # (B,S,R), <= 0
+    log_a = -_C * jax.nn.softplus(p["a_param"])[None, None, :] * r_t  # (B,S,R), <= 0
     a2 = jnp.exp(2.0 * log_a)
     gated_x = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i_t * x.astype(jnp.float32)
     return log_a, gated_x

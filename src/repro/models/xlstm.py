@@ -62,7 +62,7 @@ def _headwise_norm(scale, x, eps=1e-6):
     var = jnp.var(xf, axis=-1, keepdims=True)
     out = (xf - mu) * jax.lax.rsqrt(var + eps)
     b, s, h, dh = x.shape
-    return (out.reshape(b, s, h * dh) * scale).astype(x.dtype)
+    return (out.reshape(b, s, h * dh) * scale[None, None, :]).astype(x.dtype)
 
 
 def _mlstm_qkv(p, x, cfg, conv_state=None):
@@ -78,8 +78,8 @@ def _mlstm_qkv(p, x, cfg, conv_state=None):
     q = (c @ p["w_q"].astype(x.dtype)).reshape(b, s, h, dh)
     k = (c @ p["w_k"].astype(x.dtype)).reshape(b, s, h, dh) * dh**-0.5
     v = (x_m @ p["w_v"].astype(x.dtype)).reshape(b, s, h, dh)
-    i_pre = (c.astype(jnp.float32) @ p["w_i"] + p["b_i"])      # (B,S,H)
-    f_pre = (c.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    i_pre = c.astype(jnp.float32) @ p["w_i"] + p["b_i"][None, None, :]  # (B,S,H)
+    f_pre = c.astype(jnp.float32) @ p["w_f"] + p["b_f"][None, None, :]
     return q, k, v, i_pre, f_pre, c, z, new_conv
 
 
@@ -181,7 +181,7 @@ def apply_mlstm(p, x, cfg: ArchConfig, state=None):
         new_state = {"C": c_new, "n": n_new, "m": m_new, "conv": new_conv}
 
     h_n = _headwise_norm(p["gn"], h_out.reshape(b, -1, h, dh))
-    h_n = h_n + p["skip_scale"].astype(x.dtype) * c
+    h_n = h_n + p["skip_scale"].astype(x.dtype)[None, None, :] * c
     h_n = h_n * jax.nn.silu(z)
     return h_n @ p["w_down"].astype(x.dtype), new_state
 
@@ -250,10 +250,10 @@ def apply_slstm(p, x, cfg: ArchConfig, state=None):
     b, s, d = x.shape
     nh = _heads(cfg)
     xf32 = x.astype(jnp.float32)
-    xi = xf32 @ p["w_i"].astype(jnp.float32) + p["b_i"]
-    xf = xf32 @ p["w_f"].astype(jnp.float32) + p["b_f"]
-    xz = xf32 @ p["w_z"].astype(jnp.float32) + p["b_z"]
-    xo = xf32 @ p["w_o"].astype(jnp.float32) + p["b_o"]
+    xi = xf32 @ p["w_i"].astype(jnp.float32) + p["b_i"][None, None, :]
+    xf = xf32 @ p["w_f"].astype(jnp.float32) + p["b_f"][None, None, :]
+    xz = xf32 @ p["w_z"].astype(jnp.float32) + p["b_z"][None, None, :]
+    xo = xf32 @ p["w_o"].astype(jnp.float32) + p["b_o"][None, None, :]
 
     if state is None:
         carry = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),

@@ -44,6 +44,10 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import AsyncIterator, Optional
 
+# reprolint: monotonic-time
+# (Gather-window deadlines and batch_wait stamps must not jump with the
+# wall clock — loop.time()/perf_counter only in this module.)
+
 from repro.serve.engine import CVEngine
 from repro.serve.trace import attach_trace, trace_of
 from repro.serve.workload import ProgressEvent, as_workload, run_workloads, stream_workload
@@ -65,6 +69,14 @@ class AsyncEngineServer:
     workloads instead of one monolithic response, chunked by
     ``stream_chunk`` (canonicalised to an engine shape bucket).
     """
+
+    # Concurrency contract, machine-checked by reprolint RL004. The map
+    # is deliberately empty: every mutable attribute here is confined to
+    # the event loop (submit/stream/worker are coroutines; engine calls
+    # hop to the executor but mutate only engine state, which carries its
+    # own _GUARDED_BY). Listing an attr here is how a future fleet-mode
+    # change would opt it into lock checking.
+    _GUARDED_BY = {}
 
     def __init__(
         self,

@@ -33,6 +33,9 @@ import time
 from concurrent.futures import Future
 from typing import Optional, Sequence
 
+# reprolint: monotonic-time
+# (Gather deadlines / batch_wait stamps — the PR 6 bug class.)
+
 from repro.serve.engine import CVEngine
 from repro.serve.trace import attach_trace, trace_of
 from repro.serve.workload import (  # noqa: F401  (re-exported compat surface)

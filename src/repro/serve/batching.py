@@ -36,6 +36,13 @@ import numpy as np
 
 from repro.core.folds import Folds
 
+# reprolint: host-path
+# reprolint: monotonic-time
+# (The whole module is the host coalescing path the docstring above
+# describes: assembly stays in numpy, jnp.asarray is the only device
+# entry, and any timing added here must use a monotonic clock. The
+# RL001 pragmas make that contract machine-checked.)
+
 __all__ = ["DEFAULT_BUCKETS", "bucket_size", "as_folds", "MicroBatcher"]
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)

@@ -62,6 +62,12 @@ class CacheStats:
 class PlanCache:
     """LRU ``plan_key -> CVPlan`` map bounded by device bytes."""
 
+    # Concurrency contract, machine-checked by reprolint RL004: every
+    # mutation of the entry map, pin set or stats happens under _lock.
+    _GUARDED_BY = {"_entries": "_lock", "_pinned": "_lock", "stats": "_lock"}
+    # _evict_over_budget is only reached from put() with _lock held.
+    _LOCKED_HELPERS = ("_evict_over_budget",)
+
     def __init__(self, byte_budget: int = 512 << 20):
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")

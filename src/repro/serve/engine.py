@@ -54,6 +54,7 @@ sub-request granularity — the streaming front-end
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -68,7 +69,7 @@ from repro.rsa import compare as rsa_compare
 from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
 from repro.serve.cache import PlanCache
-from repro.serve.obs import SIZE_BUCKETS, MetricsRegistry
+from repro.serve.obs import BUCKET_FAMILIES, METRICS, MetricsRegistry
 from repro.serve.store import PlanStore
 from repro.serve.trace import STAGES, Tracer
 from repro.serve.workload import DatasetHandle, get_estimator
@@ -159,6 +160,16 @@ class EngineConfig:
 class CVEngine:
     """Multi-tenant analytical-CV evaluation engine."""
 
+    # Concurrency contract, machine-checked by reprolint RL004: the
+    # thread server (EngineServer) and the asyncio gather loop both drive
+    # one engine, so the lifetime stat counters increment under _lock —
+    # a lost `+= b` here silently skews capacity accounting.
+    _GUARDED_BY = {
+        "plans_built": "_lock",
+        "plans_updated": "_lock",
+        "labels_evaluated": "_lock",
+    }
+
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
         self.cache = PlanCache(self.config.cache_bytes)
@@ -186,100 +197,64 @@ class CVEngine:
         self._rsa_score = {}  # method -> jit[(emp, models) -> (M,)]
         self._rsa_null = {}  # method -> jit[(emp, models, perms) -> (M,T)]
         self._datasets = {}  # handle key -> _DatasetRecord
+        self._lock = threading.Lock()  # guards the stat counters below
         self.plans_built = 0
         self.plans_updated = 0
         self.labels_evaluated = 0
 
     def _declare_metrics(self) -> None:
-        """Declare the engine's metric vocabulary up front.
+        """Register the central :data:`repro.serve.obs.METRICS` table.
 
-        Counters/histograms are created empty (stage histograms with every
-        stage label pre-declared, so the ``/v1/metrics`` exposition lists
-        the full vocabulary before any traffic). Cache / jit / memo health
-        is exported through *callback* gauges over the existing counters —
-        the registry is a view, never a second copy, which is what keeps
-        ``stats()`` bit-for-bit identical to its pre-observability schema.
+        The table is the single declaration of every metric name, kind
+        and label-key set (reprolint RL003 checks call sites against it);
+        this method contributes only *behavior*: the callback behind each
+        gauge. Cache / jit / memo health is exported through callback
+        gauges over the existing counters — the registry is a view, never
+        a second copy, which is what keeps ``stats()`` bit-for-bit
+        identical to its pre-observability schema. Stage histograms get
+        every stage label pre-declared so the ``/v1/metrics`` exposition
+        lists the full vocabulary before any traffic.
         """
         m = self.metrics
-        m.counter(
-            "requests_total",
-            "Workloads served, by kind and estimator",
-            labels=("kind", "estimator"),
-        )
-        stage_hist = m.histogram(
-            "stage_latency_seconds",
-            "Per-stage request latency (traced requests only)",
-            labels=("stage",),
-        )
+        gauge_sources = {
+            "plan_cache_hits": lambda: self.cache.stats.hits,
+            "plan_cache_misses": lambda: self.cache.stats.misses,
+            "plan_cache_evictions": lambda: self.cache.stats.evictions,
+            "plan_cache_oversized": lambda: self.cache.stats.oversized,
+            "plan_cache_bytes_in_use": lambda: self.cache.stats.bytes_in_use,
+            "plan_store_hits": lambda: self.store.stats.hits if self.store else 0,
+            "plan_store_misses": lambda: self.store.stats.misses if self.store else 0,
+            "plan_store_writes": lambda: self.store.stats.writes if self.store else 0,
+            "plan_store_bytes": lambda: self.store.stats.bytes_in_store if self.store else 0,
+            "compile_events": self.compile_count,
+            "rdm_hits": lambda: self.rdm_cache.hits,
+            "plans_built": lambda: self.plans_built,
+            "plans_updated": lambda: self.plans_updated,
+            "labels_evaluated": lambda: self.labels_evaluated,
+            "datasets_registered": lambda: len(self._datasets),
+        }
+        for name, spec in METRICS.items():
+            kind = spec["kind"]
+            if kind == "counter":
+                m.counter(name, spec["help"], labels=spec["labels"])
+            elif kind == "histogram":
+                m.histogram(
+                    name,
+                    spec["help"],
+                    buckets=BUCKET_FAMILIES[spec["buckets"]],
+                    labels=spec["labels"],
+                )
+            else:
+                # KeyError here means METRICS declares a gauge this engine
+                # supplies no callback for — fail at construction, loudly.
+                m.gauge(name, spec["help"], fn=gauge_sources.pop(name))
+        if gauge_sources:
+            raise RuntimeError(
+                f"gauge callbacks without a METRICS declaration: {sorted(gauge_sources)}"
+            )
+        stage_hist = m.get("stage_latency_seconds")
         for stage in STAGES:
             stage_hist.declare(stage=stage)
-        m.histogram(
-            "gather_window_occupancy",
-            "Requests coalesced per server gather window",
-            buckets=SIZE_BUCKETS,
-        )
-        m.histogram(
-            "batch_coalesced_size",
-            "Unpadded label-batch width per coalesced eval",
-            buckets=SIZE_BUCKETS,
-        )
-        m.counter(
-            "plan_updates_total",
-            "Incremental dataset updates applied, by operation",
-            labels=("op",),
-        )
-        m.histogram(
-            "plan_update_rank",
-            "Correction rank (rows appended + retired) per incremental update",
-            buckets=SIZE_BUCKETS,
-        )
-        m.gauge("plan_cache_hits", "Plan cache hits", fn=lambda: self.cache.stats.hits)
-        m.gauge(
-            "plan_cache_misses", "Plan cache misses (builds)", fn=lambda: self.cache.stats.misses
-        )
-        m.gauge(
-            "plan_cache_evictions", "Plan cache evictions", fn=lambda: self.cache.stats.evictions
-        )
-        m.gauge(
-            "plan_cache_oversized",
-            "Builds served un-cached (over byte budget)",
-            fn=lambda: self.cache.stats.oversized,
-        )
-        m.gauge(
-            "plan_cache_bytes_in_use",
-            "Plan cache resident bytes",
-            fn=lambda: self.cache.stats.bytes_in_use,
-        )
-        m.gauge(
-            "plan_store_hits",
-            "Plans loaded (verified) from the disk store",
-            fn=lambda: self.store.stats.hits if self.store else 0,
-        )
-        m.gauge(
-            "plan_store_misses",
-            "Disk-store probes that found nothing usable",
-            fn=lambda: self.store.stats.misses if self.store else 0,
-        )
-        m.gauge(
-            "plan_store_writes",
-            "Plans committed to the disk store",
-            fn=lambda: self.store.stats.writes if self.store else 0,
-        )
-        m.gauge(
-            "plan_store_bytes",
-            "Committed plan-store bytes on disk",
-            fn=lambda: self.store.stats.bytes_in_store if self.store else 0,
-        )
-        m.gauge("compile_events", "jit cache entries across every eval path", fn=self.compile_count)
-        m.gauge("rdm_hits", "Empirical-RDM memo hits", fn=lambda: self.rdm_cache.hits)
-        m.gauge("plans_built", "CVPlans built by this engine", fn=lambda: self.plans_built)
-        m.gauge(
-            "plans_updated",
-            "CVPlans advanced by incremental rank-k correction",
-            fn=lambda: self.plans_updated,
-        )
-        m.gauge("labels_evaluated", "Label vectors evaluated", fn=lambda: self.labels_evaluated)
-        m.gauge("datasets_registered", "Registered dataset handles", fn=lambda: len(self._datasets))
 
     def enable_tracing(self, ring: int = 256) -> None:
         """Turn on request-scoped span tracing (``serve_cv --metrics``).
@@ -359,7 +334,8 @@ class CVEngine:
                     x, folds, lam, mode=resolved, with_train_block=with_train_block, gram=gram
                 )
             )
-        self.plans_built += 1
+        with self._lock:
+            self.plans_built += 1
         if key is not None and self.store is not None and self.config.save_plans:
             # Write-behind: snapshot now, commit off the request path. The
             # current pin set shields those entries from this write's GC.
@@ -489,6 +465,9 @@ class CVEngine:
         :meth:`release` — the two versions have distinct plan keys, so the
         PlanCache/PlanStore never conflate them.
         """
+        # reprolint: host-path
+        # (Update-group coalescing: everything until the plan correction
+        # runs on host; jnp is only entered through asarray/device slices.)
         rec = self.dataset_record(handle)
         if x_new is None and drop_idx is None:
             raise ValueError(
@@ -543,7 +522,13 @@ class CVEngine:
                 keep = np.setdiff1d(np.arange(n), drop)
                 x2 = x2[jnp.asarray(keep)]
             if k:
-                x2 = jnp.concatenate([x2, jnp.asarray(x_new, dtype=x2.dtype)])
+                # Grows the registered device copy in place of a host
+                # round-trip of the full X: window traffic repeats the
+                # same (n, p) signature, so this concatenate is a
+                # steady-state jit-cache hit, not per-call churn.
+                x2 = jnp.concatenate(  # reprolint: ignore[RL001] -- steady-state shapes repeat
+                    [x2, jnp.asarray(x_new, dtype=x2.dtype)]
+                )
             new_version = rec.version + 1
             new_key = fastcv.plan_key(x2, folds2, rec.lam, resolved, True, version=new_version)
             if plan2 is None:
@@ -572,7 +557,8 @@ class CVEngine:
                 version=new_version,
                 n_appended=rec.n_appended + k,
             )
-        self.plans_updated += 1
+        with self._lock:
+            self.plans_updated += 1
         self.metrics.inc("plan_updates_total", op=op)
         self.metrics.observe("plan_update_rank", float(k + d))
         return rec2.handle
@@ -859,12 +845,14 @@ class CVEngine:
             padded, b = self._pad_cols(batch)
             with self.tracer.span("eval"):
                 out = self.tracer.sync(fn(plan, padded)[..., :b])
-            self.labels_evaluated += b
+            with self._lock:
+                self.labels_evaluated += b
             return out[..., 0] if squeeze else out
         padded, b = self._pad_rows(batch)
         with self.tracer.span("eval"):
             out = self.tracer.sync(fn(plan, padded)[:b])
-        self.labels_evaluated += b
+        with self._lock:
+            self.labels_evaluated += b
         return out[0] if squeeze else out
 
     def eval_binary(self, plan: fastcv.CVPlan, y: jax.Array, adjust_bias: bool = True) -> jax.Array:
@@ -907,7 +895,8 @@ class CVEngine:
         padded, b = self._pad_cols(cols)
         with self.tracer.span("eval"):
             out = self.tracer.sync(fn(plan, padded)[:b])
-        self.labels_evaluated += b
+        with self._lock:
+            self.labels_evaluated += b
         return out
 
     def score_rdms(
@@ -1074,7 +1063,8 @@ class CVEngine:
                 fn = self._perm_binary_fn(metric, adjust_bias)
                 out = fn(plan, y, self._pad_rows(perms)[0])[:b]
             self.tracer.sync(out)
-        self.labels_evaluated += b
+        with self._lock:
+            self.labels_evaluated += b
         return out
 
     def observed_multiclass(
@@ -1093,7 +1083,8 @@ class CVEngine:
             fn = self._perm_multiclass_fn(num_classes)
             padded, b = self._pad_rows(perms)
             out = self.tracer.sync(fn(plan, y, padded)[:b])
-        self.labels_evaluated += b
+        with self._lock:
+            self.labels_evaluated += b
         return out
 
     def permutation_binary(
@@ -1127,7 +1118,8 @@ class CVEngine:
         null = self.null_binary(plan, y, perms, metric=metric, adjust_bias=adjust_bias)[:n_perm]
         # null_binary counted the bucketed batch; this API's contract (and
         # the multiclass path) counts the *requested* draws only.
-        self.labels_evaluated -= t_gen - n_perm
+        with self._lock:
+            self.labels_evaluated -= t_gen - n_perm
         with self.tracer.span("null_chunk"):
             p = self.tracer.sync(perm_lib.p_value(observed, null))
         return perm_lib.PermutationResult(observed, null, p)
@@ -1149,7 +1141,8 @@ class CVEngine:
         with self.tracer.span("null_chunk"):
             perms = self.tracer.sync(perm_lib.permutation_indices(key, n, t_gen))
             null = self.tracer.sync(fn(plan, y, self._pad_rows(perms)[0])[:n_perm])
-        self.labels_evaluated += n_perm
+        with self._lock:
+            self.labels_evaluated += n_perm
         with self.tracer.span("null_chunk"):
             p = self.tracer.sync(perm_lib.p_value(observed, null))
         return perm_lib.PermutationResult(observed, null, p)

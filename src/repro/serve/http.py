@@ -85,6 +85,9 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+# reprolint: monotonic-time
+# (Edge decode/encode stage stamps — wall clocks would jump under NTP.)
+
 from repro.core import tuning
 from repro.serve.aio import AsyncEngineServer
 from repro.serve.engine import CVEngine

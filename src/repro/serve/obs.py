@@ -39,6 +39,8 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 __all__ = [
     "LATENCY_BUCKETS_S",
     "SIZE_BUCKETS",
+    "BUCKET_FAMILIES",
+    "METRICS",
     "Counter",
     "Gauge",
     "Histogram",
@@ -71,6 +73,105 @@ LATENCY_BUCKETS_S: Tuple[float, ...] = (
 SIZE_BUCKETS: Tuple[float, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
 _OTHER = "_other"
+
+# Bucket families referenced *by name* from METRICS, so the declaration
+# table below stays a pure literal that `python -m repro.analysis` can
+# read via ast.literal_eval without importing this module.
+BUCKET_FAMILIES = {"latency": LATENCY_BUCKETS_S, "size": SIZE_BUCKETS}
+
+#: Central metric declarations — THE single source of truth for every
+#: metric name, kind and label-key set in the serving stack. The engine
+#: registers exactly this table (`CVEngine._declare_metrics`), reprolint
+#: rule RL003 checks every literal call site against it, and gauge
+#: callbacks are supplied by the engine at registration time. Keep it a
+#: pure literal: reprolint AST-extracts it via `ast.literal_eval`.
+METRICS = {
+    "requests_total": {
+        "kind": "counter",
+        "labels": ("kind", "estimator"),
+        "help": "Workloads served, by kind and estimator",
+    },
+    "plan_updates_total": {
+        "kind": "counter",
+        "labels": ("op",),
+        "help": "Incremental dataset updates applied, by operation",
+    },
+    "stage_latency_seconds": {
+        "kind": "histogram",
+        "labels": ("stage",),
+        "buckets": "latency",
+        "help": "Per-stage request latency (traced requests only)",
+    },
+    "gather_window_occupancy": {
+        "kind": "histogram",
+        "labels": (),
+        "buckets": "size",
+        "help": "Requests coalesced per server gather window",
+    },
+    "batch_coalesced_size": {
+        "kind": "histogram",
+        "labels": (),
+        "buckets": "size",
+        "help": "Unpadded label-batch width per coalesced eval",
+    },
+    "plan_update_rank": {
+        "kind": "histogram",
+        "labels": (),
+        "buckets": "size",
+        "help": "Correction rank (rows appended + retired) per incremental update",
+    },
+    "plan_cache_hits": {"kind": "gauge", "labels": (), "help": "Plan cache hits"},
+    "plan_cache_misses": {"kind": "gauge", "labels": (), "help": "Plan cache misses (builds)"},
+    "plan_cache_evictions": {"kind": "gauge", "labels": (), "help": "Plan cache evictions"},
+    "plan_cache_oversized": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Builds served un-cached (over byte budget)",
+    },
+    "plan_cache_bytes_in_use": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Plan cache resident bytes",
+    },
+    "plan_store_hits": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Plans loaded (verified) from the disk store",
+    },
+    "plan_store_misses": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Disk-store probes that found nothing usable",
+    },
+    "plan_store_writes": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Plans committed to the disk store",
+    },
+    "plan_store_bytes": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Committed plan-store bytes on disk",
+    },
+    "compile_events": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "jit cache entries across every eval path",
+    },
+    "rdm_hits": {"kind": "gauge", "labels": (), "help": "Empirical-RDM memo hits"},
+    "plans_built": {"kind": "gauge", "labels": (), "help": "CVPlans built by this engine"},
+    "plans_updated": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "CVPlans advanced by incremental rank-k correction",
+    },
+    "labels_evaluated": {"kind": "gauge", "labels": (), "help": "Label vectors evaluated"},
+    "datasets_registered": {
+        "kind": "gauge",
+        "labels": (),
+        "help": "Registered dataset handles",
+    },
+}
 
 
 def _label_values(label_names: Tuple[str, ...], labels: dict) -> Tuple[str, ...]:
@@ -284,6 +385,13 @@ class MetricsRegistry:
     dispatch by name and raise ``KeyError`` on unknown metrics: silently
     dropping an instrumentation point would defeat the purpose.
     """
+
+    # Concurrency contract, machine-checked by reprolint RL004.
+    # (`dropped_series` is also lock-guarded, but it is incremented from
+    # _Metric._series_key under the *caller's* lock acquisition, which a
+    # lexical per-class checker cannot see — the per-metric mutators all
+    # take `self.registry._lock` before touching series state.)
+    _GUARDED_BY = {"_metrics": "_lock"}
 
     def __init__(self, max_series_per_metric: int = 64):
         self._lock = threading.RLock()

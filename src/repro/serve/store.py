@@ -113,6 +113,10 @@ class PlanStore:
     mutation is an atomic rename and entries are content-addressed.
     """
 
+    # Concurrency contract, machine-checked by reprolint RL004
+    # (write-behind threads and the request path share these).
+    _GUARDED_BY = {"_pending": "_lock", "stats": "_lock"}
+
     def __init__(self, root, byte_budget: int = 4 << 30):
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")

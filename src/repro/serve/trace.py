@@ -45,6 +45,10 @@ import time
 from collections import deque
 from typing import Optional
 
+# reprolint: monotonic-time
+# (Span intervals and batch deadlines must survive wall-clock jumps —
+# the PR 6 bug class; RL001 flags any time.time() in this module.)
+
 __all__ = [
     "STAGES",
     "Span",
@@ -257,6 +261,9 @@ class Tracer:
     request path pays only a handful of attribute checks. ``enable()``
     flips all of that on and (re)sizes the ring.
     """
+
+    # Concurrency contract, machine-checked by reprolint RL004.
+    _GUARDED_BY = {"_ring": "_lock"}
 
     def __init__(self, registry=None, ring: int = 256, enabled: bool = False):
         self.registry = registry

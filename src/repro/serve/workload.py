@@ -334,7 +334,7 @@ def _score_ridge_multi(values, y_te, opts):
     v = jnp.reshape(values, (-1, values.shape[-1]))
     t = jnp.reshape(y_te, (-1, y_te.shape[-1]))
     ss_res = jnp.sum((t - v) ** 2, axis=0)
-    ss_tot = jnp.sum((t - jnp.mean(t, axis=0)) ** 2, axis=0)
+    ss_tot = jnp.sum((t - jnp.mean(t, axis=0, keepdims=True)) ** 2, axis=0)
     return jnp.mean(1.0 - ss_res / jnp.maximum(ss_tot, jnp.finfo(t.dtype).tiny))
 
 
@@ -890,6 +890,9 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
     as ``timings``. Tracing off ⇒ all hooks are no-ops and ``timings``
     stays None.
     """
+    # reprolint: host-path
+    # (Batch grouping/coalescing is host work: eager jnp assembly here
+    # would recompile per traffic mix — PR 3's bug class, now RL001.)
     raw = list(workloads)
     responses: list = [None] * len(raw)
     tracer = getattr(engine, "tracer", None) or NULL_TRACER
@@ -1091,7 +1094,11 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
                     "(no update_dataset method)")
             x_blocks = [w.x for _, w in members if w.x is not None]
             drops = [np.asarray(w.drop_idx) for _, w in members if w.drop_idx is not None]
-            x_new = jnp.concatenate([jnp.asarray(b) for b in x_blocks]) if x_blocks else None
+            # Host-side coalescing (RL001): appended blocks arrive as wire
+            # arrays with arbitrary ragged row counts, so stacking them
+            # with eager jnp would compile per group mix. The update path
+            # consumes x_new on host (float64 Woodbury correction) anyway.
+            x_new = np.concatenate([np.asarray(b) for b in x_blocks]) if x_blocks else None
             drop_idx = np.concatenate(drops) if drops else None
             t0 = time.perf_counter() if tracer.enabled else 0.0
             handle = update_dataset(members[0][1].dataset, x_new=x_new, drop_idx=drop_idx)
@@ -1300,6 +1307,9 @@ def _finish_stream(tracer, tr, build_response):
 
 
 def _stream_permutation(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
+    # reprolint: host-path
+    # (Chunk assembly is host work: a stream's chunk count varies with
+    # n_perm, so eager jnp concatenation would compile per stream shape.)
     total = w.n_perm
     needs_train = w.estimator == "multiclass" or w.adjust_bias
     with tracer.activate(tr):
@@ -1333,7 +1343,9 @@ def _stream_permutation(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=
         yield ProgressEvent("null", hi, total, null_block)
 
     def build():
-        null = jnp.concatenate(chunks)
+        # Host concatenation: chunk boundaries vary per stream, and the
+        # float64 draws are bit-identical either side of the transfer.
+        null = np.concatenate([np.asarray(c) for c in chunks])
         p = perm_lib.p_value(observed, null)
         return PermutationResponse(observed, null, p, key)
 
@@ -1352,6 +1364,8 @@ def _stream_update(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None)
     superseded intermediate versions are released as soon as the next one
     lands; only the base version and the final version survive the stream.
     """
+    # reprolint: host-path
+    # (Increment slicing/grouping is host work; device entry is asarray.)
     handle = w.dataset
     k_total = 0 if w.x is None else int(np.shape(w.x)[0])
     d_total = 0 if w.drop_idx is None else int(np.shape(w.drop_idx)[0])
@@ -1411,6 +1425,9 @@ def _stream_update(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None)
 
 
 def _stream_rsa(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
+    # reprolint: host-path
+    # (Null-chunk assembly and the final p-value are host work — chunk
+    # counts vary per stream, so eager jnp here is the recompile class.)
     c = w.num_classes
     total = w.n_perm if w.model_rdms is not None else 0
     needs_train = w.contrast == "multiclass" or w.adjust_bias
@@ -1461,8 +1478,11 @@ def _stream_rsa(engine, w: Workload, chunk: int, tracer=NULL_TRACER, tr=None):
         yield ProgressEvent("null", hi, total, null_block)
 
     def build():
-        null = jnp.concatenate(chunks, axis=1)
-        p = (1.0 + jnp.sum(null >= scores[:, None], axis=1)) / (1.0 + total)
+        # Host concatenation + counting: comparisons of float64 values
+        # are exact, so the integer exceedance counts (and hence p) are
+        # bit-identical to the previous on-device reduction.
+        null = np.concatenate([np.asarray(c) for c in chunks], axis=1)
+        p = (1.0 + np.sum(null >= np.asarray(scores)[:, None], axis=1)) / (1.0 + total)
         return RSAResponse(rdm, vals, scores, null, p, key)
 
     yield ProgressEvent("done", total, total, _finish_stream(tracer, tr, build))

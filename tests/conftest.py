@@ -1,12 +1,17 @@
 """Shared test config.
 
 x64 is enabled because the paper's statistical workloads (exactness of the
-analytical CV identities) are validated to near machine precision. Note:
-we do NOT touch XLA_FLAGS/device counts here — smoke tests must see the
-single real CPU device; multi-device shard_map tests spawn subprocesses
-with their own XLA_FLAGS (see tests/test_distributed.py).
+analytical CV identities) are validated to near machine precision.
+Rank promotion is set to "raise" as a sanitizer: an implicit
+(n,) → (n, 1) broadcast in the solver lineage is almost always a shape
+bug that silently evaluates the wrong contraction, so the suite fails
+loudly instead. Note: we do NOT touch XLA_FLAGS/device counts here —
+smoke tests must see the single real CPU device; multi-device shard_map
+tests spawn subprocesses with their own XLA_FLAGS (see
+tests/test_distributed.py).
 """
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
+jax.config.update("jax_numpy_rank_promotion", "raise")

@@ -1,0 +1,20 @@
+"""Seeded RL001 violations: eager jnp assembly + wall clock on a host path."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+# reprolint: host-path
+# reprolint: monotonic-time
+
+
+def coalesce(blocks):
+    batch = jnp.concatenate(blocks)  # seeded: RL001 (eager assembly)
+    padded = jnp.pad(batch, (0, 3))  # seeded: RL001 (eager assembly)
+    ok = jnp.asarray(np.concatenate([np.asarray(b) for b in blocks]))  # allowed
+    return padded, ok
+
+
+def deadline(window_s):
+    return time.time() + window_s  # seeded: RL001 (wall clock)

@@ -1,0 +1,13 @@
+"""Seeded RL003 violations: undeclared names, label drift, cardinality."""
+
+
+def instrument(metrics, w, user_id):
+    metrics.inc("request_totals")  # seeded: RL003 (undeclared name)
+    metrics.inc("requests_total", kind=w.kind)  # seeded: RL003 (missing label key)
+    metrics.inc(
+        "requests_total", kind=f"kind-{user_id}", estimator=w.estimator
+    )  # seeded: RL003 (unbounded label value)
+    metrics.observe("requests_total", 1.0)  # seeded: RL003 (counter observed)
+    metrics.counter("plan_updates_total", "drifted", labels=("operation",))  # seeded: RL003
+    metrics.inc("requests_total", kind=w.kind, estimator=w.estimator)  # allowed
+    metrics.observe("plan_update_rank", 4.0)  # allowed

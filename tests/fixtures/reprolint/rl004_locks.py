@@ -1,0 +1,27 @@
+"""Seeded RL004 violations: guarded attrs mutated outside their lock."""
+
+import threading
+
+
+class StatCounter:
+    _GUARDED_BY = {"served": "_lock", "_entries": "_lock"}
+    _LOCKED_HELPERS = ("_evict",)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.served = 0  # allowed: __init__ is exempt
+        self._entries = {}
+
+    def record(self, key, value):
+        self.served += 1  # seeded: RL004 (no lock)
+        self._entries[key] = value  # seeded: RL004 (no lock)
+        self._entries.pop(key, None)  # seeded: RL004 (no lock)
+
+    def record_locked(self, key, value):
+        with self._lock:
+            self.served += 1  # allowed
+            self._entries[key] = value  # allowed
+        self._entries.clear()  # seeded: RL004 (after the with-block)
+
+    def _evict(self):
+        self._entries.popitem()  # allowed: declared lock-held helper

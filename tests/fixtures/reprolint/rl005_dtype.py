@@ -1,0 +1,12 @@
+"""Seeded RL005 violations: sub-float64 dtypes in a host-float64 region."""
+
+import numpy as np
+
+# reprolint: host-float64
+
+
+def correction(a, b):
+    a64 = np.asarray(a, dtype=np.float64)  # allowed
+    small = np.asarray(b, dtype=np.float32)  # seeded: RL005
+    tiny = a64.astype("float16")  # seeded: RL005
+    return small, tiny

@@ -1,0 +1,9 @@
+"""A bare suppression: it suppresses nothing and is itself an RL000 error."""
+
+import jax.numpy as jnp
+
+# reprolint: host-path
+
+
+def grow(x2, x_new):
+    return jnp.concatenate([x2, x_new])  # reprolint: ignore[RL001]

@@ -1,0 +1,11 @@
+"""A violation suppressed *with* a justification: reprolint honors it."""
+
+import jax.numpy as jnp
+
+# reprolint: host-path
+
+
+def grow(x2, x_new):
+    return jnp.concatenate(  # reprolint: ignore[RL001] -- steady-state shapes repeat
+        [x2, jnp.asarray(x_new)]
+    )

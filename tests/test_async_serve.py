@@ -51,7 +51,8 @@ def _mixed_requests(problem, n_perm=12):
     return [
         Workload(kind="cv", dataset=spec, y=y, estimator="binary"),
         Workload(kind="cv", dataset=spec, y=-y, estimator="binary"),
-        Workload(kind="cv", dataset=spec, y=jnp.stack([y, -y, jnp.roll(y, 3)], axis=1), estimator="binary"),
+        Workload(kind="cv", dataset=spec, y=jnp.stack([y, -y, jnp.roll(y, 3)], axis=1),
+                 estimator="binary"),
         Workload(kind="cv", dataset=spec, y=y, estimator="ridge"),
         Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3),
         Workload(kind="permutation", dataset=spec, y=y, n_perm=n_perm, seed=4),
@@ -99,8 +100,12 @@ def test_async_ragged_concurrent_clients(problem):
     async def client(server, cid):
         width = 1 + cid % 3
         cols = jnp.stack([jnp.roll(y, cid + j) for j in range(width)], axis=1)
-        resp_b = await server.submit(Workload(kind="cv", dataset=spec, y=cols, estimator="binary"))
-        resp_m = await server.submit(Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3))
+        resp_b = await server.submit(
+            Workload(kind="cv", dataset=spec, y=cols, estimator="binary")
+        )
+        resp_m = await server.submit(
+            Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3)
+        )
         return cid, cols, resp_b, resp_m
 
     async def main():
@@ -176,9 +181,15 @@ def test_warmup_then_zero_recompiles_under_traffic(problem):
     assert warm == info["compiles"]
 
     async def client(server, cid):
-        await server.submit(Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid), estimator="binary"))
-        await server.submit(Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3))
-        await server.submit(Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid + 1), estimator="ridge"))
+        await server.submit(
+            Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid), estimator="binary")
+        )
+        await server.submit(
+            Workload(kind="cv", dataset=spec, y=yc, estimator="multiclass", num_classes=3)
+        )
+        await server.submit(
+            Workload(kind="cv", dataset=spec, y=jnp.roll(y, cid + 1), estimator="ridge")
+        )
         await server.submit(Workload(kind="permutation", dataset=spec, y=y, n_perm=14, seed=cid))
 
     async def main():
@@ -211,7 +222,8 @@ def test_stream_permutation_chunks_match_monolithic(problem):
     async def main():
         events = []
         async with AsyncEngineServer(engine, stream_chunk=8) as server:
-            async for ev in server.stream(Workload(kind="permutation", dataset=spec, y=y, n_perm=20, seed=4)):
+            w = Workload(kind="permutation", dataset=spec, y=y, n_perm=20, seed=4)
+            async for ev in server.stream(w):
                 events.append(ev)
         return events
 
@@ -238,7 +250,8 @@ def test_stream_multiclass_permutation(problem):
     x, _, yc, f = problem
     spec = DatasetSpec(x, f, LAM)
     engine = CVEngine()
-    req = Workload(kind="permutation", dataset=spec, y=yc, n_perm=10, seed=2, estimator="multiclass", num_classes=3)
+    req = Workload(kind="permutation", dataset=spec, y=yc, n_perm=10, seed=2,
+                   estimator="multiclass", num_classes=3)
 
     async def main():
         async with AsyncEngineServer(engine, stream_chunk=4) as server:
@@ -258,7 +271,8 @@ def test_stream_rsa_events(problem):
     spec = DatasetSpec(x, foldlib.stratified_kfold(yc, K, seed=0), LAM)
     models = jnp.stack([rsa.ring_rdm(c), rsa.ring_rdm(c) * 0.5 + 0.1])
     engine = CVEngine()
-    req = Workload(kind="rsa", dataset=spec, y=yc, num_classes=c, model_rdms=models, n_perm=10, seed=3)
+    req = Workload(kind="rsa", dataset=spec, y=yc, num_classes=c,
+                   model_rdms=models, n_perm=10, seed=3)
 
     async def main():
         async with AsyncEngineServer(engine, stream_chunk=4) as server:

@@ -99,7 +99,9 @@ def _np_reference_rdm(x, y_cond, folds, lam, dissimilarity="accuracy",
 def test_serve_rdm_matches_numpy_reference(problem):
     x, y, f = problem
     engine = CVEngine()
-    (resp,) = serve(engine, [Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C)])
+    (resp,) = serve(
+        engine, [Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C)]
+    )
     want = _np_reference_rdm(x, y, f, LAM)
     np.testing.assert_allclose(np.asarray(resp.rdm), want, atol=1e-5)
     assert engine.stats()["plans_built"] == 1
@@ -110,7 +112,8 @@ def test_serve_contrast_rdm_matches_numpy_reference(problem):
     x, y, f = problem
     engine = CVEngine()
     (resp,) = serve(engine, [
-        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C, dissimilarity="contrast", adjust_bias=False)])
+        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C,
+                 dissimilarity="contrast", adjust_bias=False)])
     want = _np_reference_rdm(x, y, f, LAM, dissimilarity="contrast",
                              adjust_bias=False)
     np.testing.assert_allclose(np.asarray(resp.rdm), want, atol=1e-5)
@@ -121,7 +124,8 @@ def test_serve_rsa_scores_match_scipy(problem, models):
     x, y, f = problem
     engine = CVEngine()
     responses = serve(engine, [
-        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C, model_rdms=models, comparison=method)
+        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C,
+                 model_rdms=models, comparison=method)
         for method in ("spearman", "kendall")])
     ev = np.asarray(rsa.upper_triangle(responses[0].rdm))
     mv = np.asarray(rsa.upper_triangle(models))
@@ -136,7 +140,8 @@ def test_serve_rsa_multiclass_confusion(problem):
     x, y, f = problem
     engine = CVEngine()
     (resp,) = serve(engine, [
-        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C, contrast="multiclass")])
+        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C,
+                 contrast="multiclass")])
     plan = fastcv.prepare(x, f, LAM, with_train_block=True)
     preds = multiclass.batch_predict(plan, y[None, :], C)[0]
     want = rsa.rdm_from_confusion(preds, y[plan.te_idx], C)
@@ -158,12 +163,14 @@ def test_warm_rsa_batch_zero_recompiles(problem, models):
     engine = CVEngine()
     # one warm-up of the batch shape (3 coalesced requests hit a larger
     # contrast-column bucket than a single request would)
-    batch = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C, model_rdms=models, n_perm=17, seed=s)
+    batch = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C,
+                      model_rdms=models, n_perm=17, seed=s)
              for s in range(3)]
     serve(engine, batch)
     warm = engine.compile_count()
     # warm replay: same plan, same shape buckets, different seeds
-    batch2 = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C, model_rdms=models, n_perm=20, seed=s)
+    batch2 = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C,
+                       model_rdms=models, n_perm=20, seed=s)
               for s in range(5, 8)]
     responses = serve(engine, batch2)
     assert engine.compile_count() == warm
@@ -172,7 +179,9 @@ def test_warm_rsa_batch_zero_recompiles(problem, models):
     x2, y2 = synthetic.make_classification(jax.random.PRNGKey(5), N, P,
                                            num_classes=C, class_sep=2.0)
     spec2 = DatasetSpec(x2, f, LAM)
-    serve(engine, [Workload(kind="rsa", dataset=spec2, y=y2, num_classes=C, model_rdms=models, n_perm=20, seed=s) for s in range(3)])
+    serve(engine, [Workload(kind="rsa", dataset=spec2, y=y2, num_classes=C,
+                            model_rdms=models, n_perm=20, seed=s)
+                   for s in range(3)])
     assert engine.compile_count() == warm
     assert engine.stats()["plans_built"] == 2
 
@@ -217,7 +226,8 @@ def test_permutation_null_engine_matches_library(problem, models):
     x, y, f = problem
     engine = CVEngine()
     (resp,) = serve(engine, [
-        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C, model_rdms=models, n_perm=20, seed=7)])
+        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C,
+                 model_rdms=models, n_perm=20, seed=7)])
     from repro.serve.batching import bucket_size
     perms = permutation.permutation_indices(jax.random.PRNGKey(7), C,
                                             bucket_size(20))
@@ -228,7 +238,8 @@ def test_permutation_null_engine_matches_library(problem, models):
     assert np.all((np.asarray(resp.p) > 0.0) & (np.asarray(resp.p) <= 1.0))
     # a self-model must score (near) perfectly and be significant
     (self_resp,) = serve(engine, [
-        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C, model_rdms=resp.rdm[None], n_perm=63, seed=2)])
+        Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C,
+                 model_rdms=resp.rdm[None], n_perm=63, seed=2)])
     assert float(self_resp.model_scores[0]) > 0.999
 
 
@@ -290,7 +301,8 @@ def test_pair_contrast_columns(problem):
 def test_rsa_through_engine_server(problem, models):
     x, y, f = problem
     spec = DatasetSpec(x, f, LAM)
-    requests = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C, model_rdms=models, n_perm=10, seed=s)
+    requests = [Workload(kind="rsa", dataset=spec, y=y, num_classes=C,
+                         model_rdms=models, n_perm=10, seed=s)
                 for s in range(4)]
     sync = serve(CVEngine(), requests)
     with EngineServer(CVEngine(), max_batch=4, max_wait_ms=5.0) as server:
@@ -309,7 +321,9 @@ def test_oversized_plan_still_serves_rsa(problem):
     the request un-cached without evicting anything."""
     x, y, f = problem
     engine = CVEngine(EngineConfig(cache_bytes=1024))     # tiny budget
-    (resp,) = serve(engine, [Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C)])
+    (resp,) = serve(
+        engine, [Workload(kind="rsa", dataset=DatasetSpec(x, f, LAM), y=y, num_classes=C)]
+    )
     want = _np_reference_rdm(x, y, f, LAM)
     np.testing.assert_allclose(np.asarray(resp.rdm), want, atol=1e-5)
     stats = engine.stats()
