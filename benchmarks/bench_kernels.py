@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fold_eval.ref import fold_eval_ref
+from repro.kernels.foldsolve.ref import foldsolve_ref
 from repro.kernels.gram.ref import centered_gram_ref
 from repro.kernels.hat_apply.ref import hat_apply_ref
 from benchmarks.common import row, timeit
@@ -42,4 +44,54 @@ def run(fast: bool = False):
             f"{bytes_saved/1e6:.2f}MB/chunk HBM traffic avoided on TPU",
         )
     )
+    rows.extend(_fold_eval_rows(fast))
     return rows
+
+
+def _fold_eval_rows(fast: bool):
+    """Fused vs unfused fold-eval at a serving shape, XLA path.
+
+    The Pallas fold_eval kernel only compiles natively on TPU, so on CPU we
+    time its XLA-path data flows: *fused* = one jitted program from hat rows
+    to ė_Te (no intermediate leaves the program — what the kernel does in
+    one grid pass), *unfused* = the two-launch flow (hat_apply-shaped
+    contraction materialising the (K, m, B) Ê between two jitted programs —
+    today's hat_apply → foldsolve pair). Both rows are warm (compiles
+    excluded) and gate against baseline; the dimensionless
+    ``fused_vs_unfused`` ratio row makes "fused must not lose to unfused at
+    serving shapes" a direct gate rather than a cross-row inference.
+    """
+    # dispatch overhead swamps sub-100µs kernels on CPU, so even the fast
+    # shape keeps the contraction in the hundreds-of-MFLOP range
+    k, m, n, b = (8, 64, 512, 256) if fast else (10, 64, 640, 256)
+    key = jax.random.PRNGKey(3)
+    kk = jax.random.split(key, 3)
+    a = jax.random.normal(kk[0], (n, n), jnp.float32) / (3.0 * n**0.5)
+    h = a @ a.T
+    te = jax.random.permutation(kk[1], n)[: k * m].reshape(k, m)
+    h_rows, h_te = h[te], h[te[:, :, None], te[:, None, :]]
+    y = jax.random.normal(kk[2], (n, b), jnp.float32)
+    y_te = y[te]
+
+    fused = jax.jit(lambda *args: fold_eval_ref(*args)[0])
+    t_fused = timeit(fused, h_rows, h_te, y, y_te, repeats=9)
+
+    contract = jax.jit(lambda hr, yy, yt: yt - jnp.einsum("kmn,nb->kmb", hr, yy))
+    solve = jax.jit(foldsolve_ref)
+
+    def unfused(hr, ht, yy, yt):
+        e = jax.block_until_ready(contract(hr, yy, yt))  # Ê round-trips HBM
+        return solve(ht, e)
+
+    t_unfused = timeit(unfused, h_rows, h_te, y, y_te, repeats=9)
+
+    shape = f"k{k}_m{m}_n{n}_b{b}"
+    ratio = t_fused / max(t_unfused, 1e-12)
+    return [
+        row(f"kernel/fold_eval_fused_warm_{shape}", t_fused),
+        row(f"kernel/fold_eval_unfused_warm_{shape}", t_unfused),
+        # dimensionless: us_per_call field carries the ratio itself (×1e6
+        # cancels), so the gate compares ratios, not machine speed
+        row("kernel/fold_eval_fused_vs_unfused_warm", ratio / 1e6,
+            f"fused/unfused={ratio:.3f} (<1 is a fusion win)"),
+    ]

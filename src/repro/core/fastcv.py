@@ -56,6 +56,7 @@ __all__ = [
     "CVPlan",
     "prepare",
     "cv_errors",
+    "cv_errors_fused",
     "binary_dvals",
     "binary_cv",
     "fingerprint",
@@ -192,7 +193,8 @@ def _prepare_jit(x, te_idx, tr_idx, lam, mode, with_train_block, gram=None):
 
 def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
             with_train_block: bool = True,
-            gram: Optional[jax.Array] = None) -> CVPlan:
+            gram: Optional[jax.Array] = None,
+            precision: Optional[str] = None) -> CVPlan:
     """Build a :class:`CVPlan`: hat matrix + per-fold factorisations.
 
     This is the one-time O(N²P + N³ + K·m³) setup; every subsequent label
@@ -202,6 +204,15 @@ def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
     mode only) — the serve engine feeds the Pallas ``gram`` kernel's or the
     feature-sharded ``distributed_gram``'s output here, keeping the O(N²P)
     hot path off the XLA default lowering.
+
+    ``precision="bf16_gram"`` (dual mode only) builds the Gram product —
+    the only O(N²P) contraction — from a bf16 cast of the centered design
+    with f32 accumulation, while every solve stays full precision (see
+    :mod:`repro.kernels.gram.ops` for the error bound). Primal-mode builds
+    have no Gram and are always full precision; requesting the mode there
+    is an error rather than a silent no-op. A caller-supplied ``gram`` is
+    trusted to already honour the requested precision (the engine computes
+    it through the same helpers).
     """
     n, p = x.shape
     if mode == "auto":
@@ -211,6 +222,15 @@ def prepare(x: jax.Array, folds: Folds, lam: float = 0.0, mode: str = "auto",
                          "(unregularised interpolation makes I - H_Te singular)")
     if gram is not None and mode != "dual":
         raise ValueError("precomputed gram only applies to dual mode")
+    from repro.kernels.gram.ops import centered_gram_xla, check_precision
+    precision = check_precision(precision)
+    if precision != "fp32":
+        if mode != "dual":
+            raise ValueError(
+                f"precision={precision!r} only applies to dual-mode plans "
+                "(the primal build has no Gram product to down-cast)")
+        if gram is None:
+            gram = centered_gram_xla(x, precision=precision)
     h, chol, h_tr_te = _prepare_jit(
         x, folds.te_idx, folds.tr_idx, float(lam), mode, with_train_block,
         gram
@@ -222,7 +242,7 @@ def _chol_solve_lower(chol_l: jax.Array, b: jax.Array) -> jax.Array:
     return cho_solve((chol_l, True), b)
 
 
-def cv_errors(plan: CVPlan, y: jax.Array):
+def cv_errors(plan: CVPlan, y: jax.Array, *, fused: bool = False):
     """Eq. (14) + Eq. (15) for a label/response matrix ``y`` of shape (N, ...).
 
     Returns (y_dot_te, y_dot_tr):
@@ -232,7 +252,13 @@ def cv_errors(plan: CVPlan, y: jax.Array):
 
     ``y`` may carry trailing batch dims (e.g. permutations, classes); the
     fold solves broadcast over them using the cached Cholesky factors.
+
+    ``fused=True`` routes through the Pallas kernels
+    (:func:`cv_errors_fused`) — same results within kernel parity
+    tolerances; worthwhile on TPU, interpret-mode slow elsewhere.
     """
+    if fused:
+        return cv_errors_fused(plan, y)
     squeeze = y.ndim == 1
     if squeeze:
         y = y[:, None]
@@ -252,7 +278,46 @@ def cv_errors(plan: CVPlan, y: jax.Array):
     return y_dot_te, y_dot_tr
 
 
-def binary_dvals(plan: CVPlan, y: jax.Array, adjust_bias: bool = True):
+def cv_errors_fused(plan: CVPlan, y: jax.Array):
+    """Pallas-kernel evaluation path; same contract as :func:`cv_errors`.
+
+    Plans without train blocks take the fully fused ``fold_eval`` kernel:
+    the hat-row contraction and the fold solves run in one launch and the
+    intermediate (N, B) Ê is never materialised. Plans *with* train blocks
+    (bias adjust, multiclass) need Ê on every training row for Eq. (15),
+    so only the solve stage fuses there: one H·Y matmul, then the
+    ``foldsolve`` kernel on the gathered fold blocks. Both routes solve
+    I − H_Te directly (Gauss-Jordan with the residual-checked jitter
+    fallback) instead of using the plan's cached Cholesky factors — the
+    parity tests pin the two paths against each other at ≤1e-5 (fp32).
+    """
+    from repro.kernels.fold_eval.ops import fold_eval
+    from repro.kernels.foldsolve.ops import foldsolve
+
+    squeeze = y.ndim == 1
+    if squeeze:
+        y = y[:, None]
+    te = plan.te_idx
+    h_te = plan.h[te[:, :, None], te[:, None, :]]           # (K, m, m)
+    y_te = y[te]                                            # (K, m, B)
+    if plan.h_tr_te is None:
+        t = fold_eval(plan.h[te], h_te, y, y_te)
+        y_dot_te = y_te - t
+        y_dot_tr = None
+    else:
+        e_hat = y - plan.h @ y
+        t = foldsolve(h_te, e_hat[te])
+        y_dot_te = y_te - t
+        e_dot_tr = e_hat[plan.tr_idx] + jnp.einsum("knm,kmb->knb", plan.h_tr_te, t)
+        y_dot_tr = y[plan.tr_idx] - e_dot_tr
+    if squeeze:
+        y_dot_te = y_dot_te[..., 0]
+        y_dot_tr = None if y_dot_tr is None else y_dot_tr[..., 0]
+    return y_dot_te, y_dot_tr
+
+
+def binary_dvals(plan: CVPlan, y: jax.Array, adjust_bias: bool = True,
+                 *, fused: bool = False):
     """Cross-validated decision values for binary LDA (labels ±1).
 
     ``y`` is (N,) or (N, B) — a trailing batch dim carries permutations
@@ -266,7 +331,7 @@ def binary_dvals(plan: CVPlan, y: jax.Array, adjust_bias: bool = True):
     y = y.astype(plan.h.dtype)
     squeeze = y.ndim == 1
     yb = y[:, None] if squeeze else y                          # (N, B)
-    y_dot_te, y_dot_tr = cv_errors(plan, yb)                   # (K, m, B)
+    y_dot_te, y_dot_tr = cv_errors(plan, yb, fused=fused)      # (K, m, B)
     if adjust_bias:
         if y_dot_tr is None:
             raise ValueError("plan must be prepared with with_train_block=True")
@@ -351,7 +416,8 @@ def fingerprint(x, *, sample_cap: int = _FINGERPRINT_SAMPLE_CAP) -> str:
 
 
 def plan_key(x, folds: Folds, lam: float, mode: str = "auto",
-             with_train_block: bool = True, *, version: int = 0) -> tuple:
+             with_train_block: bool = True, *, version: int = 0,
+             precision: Optional[str] = None) -> tuple:
     """Hashable identity of the :class:`CVPlan` that ``prepare`` would build.
 
     Both index arrays are fingerprinted: tr_idx is not derivable from
@@ -359,18 +425,22 @@ def plan_key(x, folds: Folds, lam: float, mode: str = "auto",
     train blocks + bias adjustment depend on it.
 
     ``version`` is the dataset-registry version number (0 for a freshly
-    registered dataset; n+1 after each ``append``/``retire``). It sits at
-    index 5 so ``with_train_block`` stays the *last* element — the cache /
-    engine idiom ``key[:-1] + (flag,)`` keeps working unchanged. All
-    elements are JSON-stable, which is what lets the disk store address
-    entries by key across processes.
+    registered dataset; n+1 after each ``append``/``retire``).
+    ``precision`` is the Gram-build precision (None normalises to "fp32");
+    plans built at different precisions hold numerically different hat
+    matrices and must never alias. Both sit before ``with_train_block``,
+    which stays the *last* element — the cache / engine idiom
+    ``key[:-1] + (flag,)`` keeps working unchanged. All elements are
+    JSON-stable, which is what lets the disk store address entries by key
+    across processes.
     """
+    from repro.kernels.gram.ops import check_precision
     n, p = x.shape
     if mode == "auto":
         mode = "dual" if p >= n else "primal"
     return (fingerprint(x), fingerprint(folds.te_idx),
             fingerprint(folds.tr_idx), float(lam), mode, int(version),
-            bool(with_train_block))
+            check_precision(precision), bool(with_train_block))
 
 
 #: Plan leaves in flattening order; ``h_tr_te`` is optional (None unless
@@ -414,26 +484,29 @@ def plan_from_arrays(arrays) -> CVPlan:
     )
 
 
-def make_eval_binary(adjust_bias: bool = True, donate: bool = False):
+def make_eval_binary(adjust_bias: bool = True, donate: bool = False,
+                     fused: bool = False):
     """Fresh jitted evaluator ``(plan, y (N, B)) -> dvals (K, m, B)``.
 
     ``donate=True`` donates the label-batch buffer (permutation chunks are
     single-use) so XLA may alias it into the output — meaningful on
     TPU/GPU; CPU backends ignore donation. Only donate buffers you own:
-    the donated array is invalidated for the caller. Each call returns an
-    independently-cached jit, so callers (the serve engine) can count
-    compiles via ``fn._cache_size()``.
+    the donated array is invalidated for the caller. ``fused=True`` routes
+    through the Pallas eval kernels (:func:`cv_errors_fused`). Each call
+    returns an independently-cached jit, so callers (the serve engine) can
+    count compiles via ``fn._cache_size()``.
     """
     kw = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(
-        lambda plan, y: binary_dvals(plan, y, adjust_bias=adjust_bias), **kw)
+        lambda plan, y: binary_dvals(plan, y, adjust_bias=adjust_bias,
+                                     fused=fused), **kw)
 
 
-def make_eval_cv(donate: bool = False):
+def make_eval_cv(donate: bool = False, fused: bool = False):
     """Fresh jitted evaluator ``(plan, y (N, B)) -> ẏ_Te (K, m, B)`` —
     the ridge-regression serving path (Eq. 14 only, no bias adjust)."""
     kw = {"donate_argnums": (1,)} if donate else {}
-    return jax.jit(lambda plan, y: cv_errors(plan, y)[0], **kw)
+    return jax.jit(lambda plan, y: cv_errors(plan, y, fused=fused)[0], **kw)
 
 
 # ---------------------------------------------------------------------------

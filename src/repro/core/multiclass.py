@@ -208,14 +208,32 @@ def analytical_cv_multiclass(x: jax.Array, y: jax.Array, folds: Folds,
 
 
 def batch_predict(plan: fastcv.CVPlan, y_batch: jax.Array,
-                  num_classes: int) -> jax.Array:
+                  num_classes: int, *, fused: bool = False) -> jax.Array:
     """Algorithm 2 for a batch of label vectors sharing one plan.
 
     ``y_batch``: int (B, N) — e.g. permutations or many client requests.
     Returns int predictions (B, K, m); step 1 reuses the plan's cached
     factorisations, step 2's C×C eigh is vmapped over (B × K).
+
+    ``fused=True`` routes step 1 through the Pallas solve kernel — and,
+    rather than vmapping a kernel launch per label vector, flattens the
+    whole batch into one (N, B·C) column block so all B·C indicator
+    columns share a single launch (multiclass plans carry train blocks,
+    so this is the solve-stage fusion of ``fastcv.cv_errors_fused``).
     """
     dtype = plan.h.dtype
+    if fused:
+        bsz, n = y_batch.shape
+        y1h = onehot(y_batch, num_classes, dtype=dtype)       # (B, N, C)
+        cols = jnp.transpose(y1h, (1, 0, 2)).reshape(n, bsz * num_classes)
+        y_dot_te, y_dot_tr = fastcv.cv_errors(plan, cols, fused=True)
+        k, m = y_dot_te.shape[:2]
+        y_dot_te = y_dot_te.reshape(k, m, bsz, num_classes)
+        y_dot_tr = y_dot_tr.reshape(k, y_dot_tr.shape[1], bsz, num_classes)
+        y1h_tr = y1h[:, plan.tr_idx]                          # (B, K, N-m, C)
+        per_b = jax.vmap(_fold_predict, in_axes=(0, 0, 0, None))
+        return jax.vmap(per_b, in_axes=(2, 2, 0, None))(
+            y_dot_te, y_dot_tr, y1h_tr, dtype)
 
     def one(yb):
         y1h = onehot(yb, num_classes, dtype=dtype)
@@ -227,9 +245,12 @@ def batch_predict(plan: fastcv.CVPlan, y_batch: jax.Array,
     return jax.vmap(one)(y_batch)
 
 
-def make_eval_multiclass(num_classes: int, donate: bool = False):
+def make_eval_multiclass(num_classes: int, donate: bool = False,
+                         fused: bool = False):
     """Fresh jitted evaluator ``(plan, y (B, N) int) -> preds (B, K, m)``
-    for the serve engine; ``donate`` aliases the label batch on TPU/GPU."""
+    for the serve engine; ``donate`` aliases the label batch on TPU/GPU,
+    ``fused`` routes the fold solves through the Pallas kernels."""
     kw = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(
-        lambda plan, y: batch_predict(plan, y, num_classes), **kw)
+        lambda plan, y: batch_predict(plan, y, num_classes, fused=fused),
+        **kw)

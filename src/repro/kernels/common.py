@@ -12,12 +12,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["default_interpret", "pad_to", "cdiv"]
+__all__ = ["default_interpret", "default_fused", "pad_to", "cdiv"]
 
 
 def default_interpret() -> bool:
     """interpret=True off-TPU (CPU validation), False on real TPUs."""
     return jax.default_backend() != "tpu"
+
+
+def default_fused() -> bool:
+    """Resolve ``fused=None`` (auto): use the fused fold_eval kernel only
+    where Pallas compiles natively. Off-TPU the kernels run in interpret
+    mode (Python-speed), so auto keeps the reference XLA path — the fused
+    path stays reachable everywhere by passing ``fused=True`` explicitly.
+    """
+    return jax.default_backend() == "tpu"
 
 
 def cdiv(a: int, b: int) -> int:

@@ -1,0 +1,61 @@
+"""References for the fused fold_eval kernel.
+
+Three independent oracles, in decreasing order of fidelity to the fused
+kernel's data flow:
+
+* :func:`fold_eval_ref` — pure-jnp single expression (what XLA lowers on
+  CPU; also the engine's ``fused=False`` composite modulo Cholesky).
+* :func:`fold_eval_two_kernel` — the *unfused pair* the fused kernel
+  replaces: the ``hat_apply`` Pallas kernel materialises the full (N, B)
+  Ê, then the ``foldsolve`` Pallas kernel solves the gathered fold
+  blocks. Parity between this and the fused kernel is exactly the
+  "eliminated intermediate changes nothing" claim.
+* :func:`fold_eval_np` — host NumPy (LAPACK solves, float64 by default),
+  the ground truth the property tests pin both Pallas paths against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fold_eval_ref(h_rows: jax.Array, h_te: jax.Array, y: jax.Array,
+                  y_te: jax.Array):
+    """Pure-jnp oracle. Returns (ė_Te, ê_Te), both (K, m, B)."""
+    e = y_te - jnp.einsum("kmn,nb->kmb", h_rows, y)
+    m = h_te.shape[-1]
+    eye = jnp.eye(m, dtype=h_te.dtype)
+    t = jax.vmap(lambda a, rhs: jnp.linalg.solve(eye - a, rhs))(h_te, e)
+    return t, e
+
+
+def fold_eval_two_kernel(h_rows: jax.Array, h_te: jax.Array, y: jax.Array,
+                         y_te: jax.Array, *, interpret=None):
+    """The unfused Pallas pair: hat_apply → (N, B) Ê in HBM → foldsolve.
+
+    ``h_rows``/``y_te`` are per-fold gathers of an (N, N) hat matrix and
+    the (N, B) batch; this reference reconstructs the pre-gather views it
+    can (ê_Te = y_te − h_rows @ y) and routes the fold solve through the
+    standalone ``foldsolve`` kernel — i.e. the exact two-launch data flow
+    the fused kernel collapses, intermediate materialisation included.
+    """
+    from repro.kernels.foldsolve.ops import foldsolve
+
+    e = y_te - jnp.einsum("kmn,nb->kmb", h_rows, y)
+    t = foldsolve(h_te, e, interpret=interpret)
+    return t, e
+
+
+def fold_eval_np(h_rows, h_te, y, y_te):
+    """Host-NumPy ground truth (LAPACK row-pivoted solves)."""
+    h_rows = np.asarray(h_rows, dtype=np.float64)
+    h_te = np.asarray(h_te, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    y_te = np.asarray(y_te, dtype=np.float64)
+    e = y_te - np.einsum("kmn,nb->kmb", h_rows, y)
+    m = h_te.shape[-1]
+    t = np.stack([np.linalg.solve(np.eye(m) - h_te[k], e[k])
+                  for k in range(h_te.shape[0])])
+    return t, e

@@ -13,7 +13,13 @@ use (DESIGN.md §2 hardware-adaptation).
 No pivot search is performed: A = I − H_Te has eigenvalues in (0, 1] for
 ridge-regularised H (H's spectrum lies in [0, 1)@λ>0 plus the intercept
 direction), so it is SPD and well-conditioned without pivoting; the
-wrapper exposes a jitter fallback for λ→0 edge cases.
+wrapper (:func:`repro.kernels.foldsolve.ops.foldsolve`) implements a
+residual-checked jitter fallback for λ→0 edge cases, re-solving the
+Tikhonov-shifted system A + εI when the pivot-free elimination degrades.
+
+The masked elimination core (:func:`gauss_jordan_solve`) is shared with
+the fused ``fold_eval`` kernel, which runs the same solve in the epilogue
+of its hat-row contraction.
 """
 
 from __future__ import annotations
@@ -25,9 +31,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _foldsolve_kernel(h_te_ref, e_ref, out_ref, *, m: int):
-    a = jnp.eye(m, dtype=h_te_ref.dtype) - h_te_ref[0]       # (m, m)
-    aug = jnp.concatenate([a, e_ref[0].astype(a.dtype)], axis=1)  # (m, m+B)
+def gauss_jordan_solve(a: jax.Array, e: jax.Array) -> jax.Array:
+    """Solve A X = E by masked Gauss-Jordan; kernel-body building block.
+
+    a: (m, m), e: (m, B); both already in VMEM (values, not refs). Every
+    elimination step is a rank-1 update of the whole augmented (m, m+B)
+    block — full-row vector ops with iota masks, no scalar indexing — so
+    it lowers onto the TPU VPU as dense elementwise/broadcast work.
+    """
+    m = a.shape[0]
+    aug = jnp.concatenate([a, e.astype(a.dtype)], axis=1)    # (m, m+B)
     cols = jax.lax.broadcasted_iota(jnp.int32, aug.shape, 1)
     rows = jax.lax.broadcasted_iota(jnp.int32, aug.shape, 0)
     col_iota = jax.lax.iota(jnp.int32, aug.shape[1])
@@ -46,7 +59,12 @@ def _foldsolve_kernel(h_te_ref, e_ref, out_ref, *, m: int):
         return aug
 
     aug = jax.lax.fori_loop(0, m, step, aug)
-    out_ref[0] = aug[:, m:].astype(out_ref.dtype)
+    return aug[:, m:]
+
+
+def _foldsolve_kernel(h_te_ref, e_ref, out_ref, *, m: int):
+    a = jnp.eye(m, dtype=h_te_ref.dtype) - h_te_ref[0]       # (m, m)
+    out_ref[0] = gauss_jordan_solve(a, e_ref[0]).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -144,6 +144,7 @@ def pair_dissimilarities(
     cols: jax.Array,
     dissimilarity: str = "accuracy",
     adjust_bias: bool = True,
+    fused: bool = False,
 ) -> jax.Array:
     """Per-column dissimilarity from one batched fold solve. cols: (N, B).
 
@@ -160,7 +161,7 @@ def pair_dissimilarities(
     if dissimilarity not in _DISSIMILARITIES:
         raise ValueError(f"dissimilarity must be one of {_DISSIMILARITIES}")
     cols = cols.astype(plan.h.dtype)
-    y_dot_te, y_dot_tr = fastcv.cv_errors(plan, cols)  # (K, m, B)
+    y_dot_te, y_dot_tr = fastcv.cv_errors(plan, cols, fused=fused)  # (K, m, B)
     te_lab = cols[plan.te_idx]  # (K, m, B)
     dv = y_dot_te
     if adjust_bias:
@@ -336,18 +337,21 @@ def searchlight_rdm(
 
 
 def make_eval_pairs(
-    dissimilarity: str = "accuracy", adjust_bias: bool = True, donate: bool = False
+    dissimilarity: str = "accuracy", adjust_bias: bool = True,
+    donate: bool = False, fused: bool = False
 ):
     """Fresh jitted evaluator ``(plan, cols (N, B)) -> (B,) dissimilarities``.
 
     Mirrors ``fastcv.make_eval_binary``: each call returns an
     independently-cached jit so the serve engine can count compiles via
-    ``fn._cache_size()``; ``donate`` aliases the contrast batch on TPU/GPU.
+    ``fn._cache_size()``; ``donate`` aliases the contrast batch on TPU/GPU,
+    ``fused`` routes the fold solves through the Pallas kernels.
     """
     kw = {"donate_argnums": (1,)} if donate else {}
     return jax.jit(
         functools.partial(
-            pair_dissimilarities, dissimilarity=dissimilarity, adjust_bias=adjust_bias
+            pair_dissimilarities, dissimilarity=dissimilarity,
+            adjust_bias=adjust_bias, fused=fused
         ),
         **kw,
     )

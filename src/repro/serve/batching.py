@@ -85,6 +85,13 @@ class MicroBatcher:
     with a ``batch_coalesced_size`` histogram: each coalesce observes the
     *unpadded* total width, so the distribution shows how full batches run
     relative to their shape buckets (padding waste = bucket − observed).
+
+    Donation contract: every coalesce assembles a *fresh* device array
+    (host-numpy concat → ``jnp.asarray``) and the split methods read only
+    the eval *output* — the coalesced input is never touched after
+    ``eval_fn`` returns. Callers may therefore hand the batch to a
+    donating jit (it is engine-owned, single-use by construction); pinned
+    by ``tests/test_donation.py`` with delete-after-eval checks.
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS, metrics=None):

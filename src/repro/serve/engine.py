@@ -65,6 +65,7 @@ import numpy as np
 from repro.core import fastcv, metrics, multiclass, tuning
 from repro.core import permutation as perm_lib
 from repro.core.folds import Folds
+from repro.kernels.common import default_fused
 from repro.rsa import compare as rsa_compare
 from repro.rsa import rdm as rsa_rdm
 from repro.serve.batching import DEFAULT_BUCKETS, MicroBatcher, as_folds, bucket_size
@@ -77,6 +78,7 @@ from repro.serve.workload import DatasetHandle, get_estimator
 __all__ = ["EngineConfig", "CVEngine", "DatasetHandle"]
 
 _GRAM_IMPLS = ("auto", "xla", "pallas", "distributed")
+_PRECISIONS = ("fp32", "bf16_gram")  # mirrors repro.kernels.gram.ops.PRECISIONS
 _WARMUP_TASKS = ("binary", "ridge", "multiclass", "permutation", "rsa")
 
 
@@ -121,12 +123,27 @@ class EngineConfig:
     feature_axis / perm_axes: mesh axis names for the feature-sharded Gram
                  reduction and the permutation fan-out respectively.
     donate:      donate label-batch buffers to the jitted evals. Off by
-                 default (None/False): when a batch needs no padding or
-                 dtype cast, jax aliases the *caller's* array straight
-                 into the eval, and donating it would invalidate the
-                 caller's buffer. Set True only when every submitted
-                 label array is single-use (and on TPU/GPU, where
-                 donation is actually implemented).
+                 default (None/False): donation lets XLA alias the batch
+                 into the eval's output (single-use permutation chunks
+                 never round-trip), meaningful on TPU/GPU. With donate on,
+                 batches the engine doesn't own are defensively copied
+                 before hitting an exact shape bucket (no padding = no
+                 implicit copy), so a caller's array is never invalidated
+                 behind its back; internal paths pass ``owned=True`` and
+                 donate end-to-end.
+    fused:       route CV evals through the fused Pallas fold-eval
+                 kernels instead of the XLA reference composite. None
+                 (default) = auto: on where Pallas compiles natively
+                 (TPU), off elsewhere (interpret mode is Python-slow).
+                 Plans without train blocks get the fully fused
+                 ``fold_eval`` kernel (no (N, B) Ê materialisation);
+                 train-block paths fuse the fold-solve stage.
+    precision:   Gram/hat build precision: "fp32" (default; the working
+                 dtype end-to-end) or "bf16_gram" (dual-mode Gram built
+                 from bf16 inputs with f32 accumulation, all solves full
+                 precision — see :mod:`repro.kernels.gram.ops` for the
+                 error bound). Part of the plan key: the two precisions
+                 never share cached plans.
     buckets:     static label-batch sizes; ragged batches pad up to these.
     plan_store:  optional directory for the durable plan tier
                  (:class:`repro.serve.store.PlanStore`): cache misses try
@@ -143,6 +160,8 @@ class EngineConfig:
     feature_axis: str = "model"
     perm_axes: tuple = ("data",)
     donate: Optional[bool] = None
+    fused: Optional[bool] = None
+    precision: str = "fp32"
     buckets: Sequence[int] = DEFAULT_BUCKETS
     plan_store: Optional[str] = None
     save_plans: bool = False
@@ -155,6 +174,13 @@ class EngineConfig:
             raise ValueError("gram_impl='distributed' requires a mesh")
         if self.save_plans and not self.plan_store:
             raise ValueError("save_plans=True requires a plan_store directory")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(f"precision must be one of {_PRECISIONS}")
+        if self.precision != "fp32" and self.gram_impl == "distributed":
+            raise ValueError(
+                "precision='bf16_gram' is not supported with "
+                "gram_impl='distributed' (the feature-sharded reduction "
+                "has no mixed-precision path yet)")
 
 
 class CVEngine:
@@ -184,16 +210,20 @@ class CVEngine:
         self._declare_metrics()
         self.batcher = MicroBatcher(self.config.buckets, metrics=self.metrics)
         self._donate = bool(self.config.donate)
+        self._fused = default_fused() if self.config.fused is None else bool(self.config.fused)
         # Eval paths are created lazily but exactly once per static
         # signature and held forever: the dict entry IS the jit cache the
         # no-recompile guarantee rests on. CV evals come from the
         # least-squares estimator registry (repro.serve.workload): one
-        # jitted program per (eval_key, static options) — registered
-        # estimators sharing an eval_key (ridge / ridge_multi) share it.
-        self._evals = {}  # (eval_key, static opts) -> jit[(plan, batch) -> out]
+        # jitted program per (eval_key, static options, donate, fused) —
+        # registered estimators sharing an eval_key (ridge / ridge_multi)
+        # share it. donate/fused sit in the key so flipping either
+        # (set_donate, a reconfigured engine) can never serve a stale
+        # program with the wrong aliasing or kernel route.
+        self._evals = {}  # (eval_key, static opts, donate, fused) -> jit
         self._perm_binary = {}  # (metric, adjust_bias) -> jit -> (B,)
         self._perm_multiclass = {}  # num_classes -> jit -> (B,)
-        self._rsa_pairs = {}  # (dissimilarity, adjust_bias) -> jit -> (B,)
+        self._rsa_pairs = {}  # (dissim, adjust_bias, donate, fused) -> jit
         self._rsa_score = {}  # method -> jit[(emp, models) -> (M,)]
         self._rsa_null = {}  # method -> jit[(emp, models, perms) -> (M,T)]
         self._datasets = {}  # handle key -> _DatasetRecord
@@ -271,6 +301,16 @@ class CVEngine:
         """Back to zero-overhead mode (finished traces stay in the ring)."""
         self.tracer.disable()
 
+    def set_donate(self, donate: bool) -> None:
+        """Flip label-batch donation at runtime.
+
+        Safe mid-traffic: donate is part of every eval-cache key, so a
+        non-donating program compiled before the flip can never be served
+        for a donating request (or vice versa) — the regression that
+        motivated keying the caches on it.
+        """
+        self._donate = bool(donate)
+
     # ------------------------------------------------------------------
     # Plans
     # ------------------------------------------------------------------
@@ -293,7 +333,8 @@ class CVEngine:
         ``version`` is the dataset-registry version the key is minted
         under (0 for unregistered / freshly registered data)."""
         with self.tracer.span("cache_lookup"):
-            key = fastcv.plan_key(x, folds, lam, mode, with_train_block, version=version)
+            key = fastcv.plan_key(x, folds, lam, mode, with_train_block,
+                                  version=version, precision=self.config.precision)
             if not with_train_block:
                 superset = key[:-1] + (True,)
                 plan = self.cache.get(superset)
@@ -331,7 +372,8 @@ class CVEngine:
             gram = self._build_gram(x) if resolved == "dual" else None
             plan = self.tracer.sync(
                 fastcv.prepare(
-                    x, folds, lam, mode=resolved, with_train_block=with_train_block, gram=gram
+                    x, folds, lam, mode=resolved, with_train_block=with_train_block,
+                    gram=gram, precision=self.config.precision
                 )
             )
         with self._lock:
@@ -353,11 +395,11 @@ class CVEngine:
         if impl == "auto":
             impl = "pallas" if jax.default_backend() == "tpu" else "xla"
         if impl == "xla":
-            return None  # prepare() computes it inline
+            return None  # prepare() computes it inline (honouring precision)
         if impl == "pallas":
             from repro.kernels.gram.ops import centered_gram
 
-            return centered_gram(x)
+            return centered_gram(x, precision=self.config.precision)
         from repro.core.distributed import distributed_gram
 
         return distributed_gram(x, self.config.mesh, feature_axis=self.config.feature_axis)
@@ -379,7 +421,8 @@ class CVEngine:
         the :meth:`datasets` introspection view.
         """
         folds = as_folds(folds)
-        key = fastcv.plan_key(x, folds, lam, mode, True, version=0)
+        key = fastcv.plan_key(x, folds, lam, mode, True, version=0,
+                              precision=self.config.precision)
         rec = self._datasets.get(key)
         if rec is None:
             handle = DatasetHandle(
@@ -530,7 +573,9 @@ class CVEngine:
                     [x2, jnp.asarray(x_new, dtype=x2.dtype)]
                 )
             new_version = rec.version + 1
-            new_key = fastcv.plan_key(x2, folds2, rec.lam, resolved, True, version=new_version)
+            new_key = fastcv.plan_key(x2, folds2, rec.lam, resolved, True,
+                                      version=new_version,
+                                      precision=self.config.precision)
             if plan2 is None:
                 plan2 = self._build_plan(x2, folds2, rec.lam, resolved, True, key=new_key)
             else:
@@ -807,21 +852,31 @@ class CVEngine:
             return plan
         return dataclasses.replace(plan, h_tr_te=None)
 
-    def _pad_cols(self, y: jax.Array) -> tuple[jax.Array, int]:
+    def _pad_cols(self, y: jax.Array, *, owned: bool = False) -> tuple[jax.Array, int]:
         b = y.shape[1]
         padded = bucket_size(b, self.config.buckets)
         if padded > b:
             y = jnp.pad(y, ((0, 0), (0, padded - b)))
+        elif self._donate and not owned:
+            # Exact-bucket batches pass through without the implicit copy
+            # padding provides; a donating eval would invalidate the
+            # caller's array behind its back. Copy defensively — internal
+            # single-use batches (MicroBatcher groups, permutation chunks)
+            # declare owned=True and donate end-to-end instead.
+            y = jnp.copy(y)
         return y, b
 
-    def _pad_rows(self, y: jax.Array) -> tuple[jax.Array, int]:
+    def _pad_rows(self, y: jax.Array, *, owned: bool = False) -> tuple[jax.Array, int]:
         b = y.shape[0]
         padded = bucket_size(b, self.config.buckets)
         if padded > b:
             y = jnp.concatenate([y, jnp.broadcast_to(y[:1], (padded - b,) + y.shape[1:])], 0)
+        elif self._donate and not owned:
+            y = jnp.copy(y)  # same exact-bucket aliasing hazard as _pad_cols
         return y, b
 
-    def eval_estimator(self, plan: fastcv.CVPlan, y: jax.Array, estimator: str, **opts):
+    def eval_estimator(self, plan: fastcv.CVPlan, y: jax.Array, estimator: str,
+                       owned: bool = False, **opts):
         """Shape-bucketed eval through the least-squares estimator registry.
 
         ``estimator`` names a registered
@@ -831,24 +886,29 @@ class CVEngine:
         CV eval surface, so a newly registered estimator (multi-target
         ridge, optimal-scoring variants, …) is served, bucketed, and
         compile-counted with zero engine changes.
+
+        ``owned=True`` declares the batch single-use engine property (the
+        MicroBatcher's coalesced groups): with donation on it skips the
+        exact-bucket defensive copy and lets the eval consume the buffer.
         """
         spec = get_estimator(estimator)
         opts = spec.resolve_opts(opts)
         if not spec.needs_train(opts):
             plan = self._strip_train(plan)
         batch, squeeze = spec.encode(y, plan.h.dtype, opts)
-        key = (spec.eval_key, spec.static_key(opts))
+        owned = owned or batch is not y  # encode copied -> engine owns it
+        key = (spec.eval_key, spec.static_key(opts), self._donate, self._fused)
         fn = self._evals.get(key)
         if fn is None:
-            fn = self._evals[key] = spec.make_eval(opts, self._donate)
+            fn = self._evals[key] = spec.make_eval(opts, self._donate, self._fused)
         if spec.layout == "columns":
-            padded, b = self._pad_cols(batch)
+            padded, b = self._pad_cols(batch, owned=owned)
             with self.tracer.span("eval"):
                 out = self.tracer.sync(fn(plan, padded)[..., :b])
             with self._lock:
                 self.labels_evaluated += b
             return out[..., 0] if squeeze else out
-        padded, b = self._pad_rows(batch)
+        padded, b = self._pad_rows(batch, owned=owned)
         with self.tracer.span("eval"):
             out = self.tracer.sync(fn(plan, padded)[:b])
         with self._lock:
@@ -863,9 +923,11 @@ class CVEngine:
         """Exact CV ridge predictions ẏ_Te. y: (N,) or (N, B) responses."""
         return self.eval_estimator(plan, y, "ridge")
 
-    def eval_multiclass(self, plan: fastcv.CVPlan, y: jax.Array, num_classes: int) -> jax.Array:
+    def eval_multiclass(
+        self, plan: fastcv.CVPlan, y: jax.Array, num_classes: int, owned: bool = False
+    ) -> jax.Array:
         """Multi-class LDA CV predictions. y: int (N,) or (B, N)."""
-        return self.eval_estimator(plan, y, "multiclass", num_classes=num_classes)
+        return self.eval_estimator(plan, y, "multiclass", owned=owned, num_classes=num_classes)
 
     # ------------------------------------------------------------------
     # RSA serving (pairwise-contrast RDMs + model scoring, §4.2)
@@ -877,22 +939,27 @@ class CVEngine:
         cols: jax.Array,
         dissimilarity: str = "accuracy",
         adjust_bias: bool = True,
+        owned: bool = False,
     ) -> jax.Array:
         """Pairwise-contrast dissimilarities. cols: (N, B) ±1/0 columns.
 
         Contrast columns are just label columns, so they ride the same
         bucketed column path as binary/ridge evals: padded (all-zero)
         columns score to a harmless constant and are sliced away.
+        ``owned`` as in :meth:`eval_estimator`.
         """
-        fn = self._rsa_pairs.get((dissimilarity, adjust_bias))
+        cache_key = (dissimilarity, adjust_bias, self._donate, self._fused)
+        fn = self._rsa_pairs.get(cache_key)
         if fn is None:
-            fn = self._rsa_pairs[(dissimilarity, adjust_bias)] = rsa_rdm.make_eval_pairs(
-                dissimilarity, adjust_bias, donate=self._donate
+            fn = self._rsa_pairs[cache_key] = rsa_rdm.make_eval_pairs(
+                dissimilarity, adjust_bias, donate=self._donate, fused=self._fused
             )
         if not adjust_bias:
             plan = self._strip_train(plan)
-        cols = cols.astype(plan.h.dtype)
-        padded, b = self._pad_cols(cols)
+        cast = cols.astype(plan.h.dtype)
+        owned = owned or cast is not cols  # dtype cast copied -> engine owns it
+        cols = cast
+        padded, b = self._pad_cols(cols, owned=owned)
         with self.tracer.span("eval"):
             out = self.tracer.sync(fn(plan, padded)[:b])
         with self._lock:
@@ -926,7 +993,7 @@ class CVEngine:
             fn = self._rsa_null.get(method)
             if fn is None:
                 fn = self._rsa_null[method] = rsa_compare.make_compare_null(method)
-            padded, b = self._pad_rows(perms)
+            padded, b = self._pad_rows(perms, owned=True)
             return self.tracer.sync(fn(empirical, model_rdms, padded)[:, :b])
 
     def compare_rdms(
@@ -1015,7 +1082,7 @@ class CVEngine:
             y = y.astype(plan.h.dtype)
             fn = self._perm_binary_fn(metric, adjust_bias)
             identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
-            return self.tracer.sync(fn(plan, y, self._pad_rows(identity)[0])[0])
+            return self.tracer.sync(fn(plan, y, self._pad_rows(identity, owned=True)[0])[0])
 
     def null_binary(
         self,
@@ -1061,7 +1128,7 @@ class CVEngine:
                 )[:b]
             else:
                 fn = self._perm_binary_fn(metric, adjust_bias)
-                out = fn(plan, y, self._pad_rows(perms)[0])[:b]
+                out = fn(plan, y, self._pad_rows(perms, owned=True)[0])[:b]
             self.tracer.sync(out)
         with self._lock:
             self.labels_evaluated += b
@@ -1073,7 +1140,7 @@ class CVEngine:
         with self.tracer.span("eval"):
             fn = self._perm_multiclass_fn(num_classes)
             identity = jnp.arange(y.shape[0], dtype=jnp.int32)[None]
-            return self.tracer.sync(fn(plan, y, self._pad_rows(identity)[0])[0])
+            return self.tracer.sync(fn(plan, y, self._pad_rows(identity, owned=True)[0])[0])
 
     def null_multiclass(
         self, plan: fastcv.CVPlan, y: jax.Array, perms: jax.Array, *, num_classes: int
@@ -1081,7 +1148,7 @@ class CVEngine:
         """Multi-class analogue of :meth:`null_binary` → (B,) accuracies."""
         with self.tracer.span("null_chunk"):
             fn = self._perm_multiclass_fn(num_classes)
-            padded, b = self._pad_rows(perms)
+            padded, b = self._pad_rows(perms, owned=True)
             out = self.tracer.sync(fn(plan, y, padded)[:b])
         with self._lock:
             self.labels_evaluated += b
@@ -1140,7 +1207,7 @@ class CVEngine:
         t_gen = bucket_size(n_perm, self.config.buckets)
         with self.tracer.span("null_chunk"):
             perms = self.tracer.sync(perm_lib.permutation_indices(key, n, t_gen))
-            null = self.tracer.sync(fn(plan, y, self._pad_rows(perms)[0])[:n_perm])
+            null = self.tracer.sync(fn(plan, y, self._pad_rows(perms, owned=True)[0])[:n_perm])
         with self._lock:
             self.labels_evaluated += n_perm
         with self.tracer.span("null_chunk"):

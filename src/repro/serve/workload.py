@@ -211,10 +211,12 @@ class LeastSquaresSpec:
       layout:       "columns" (targets stack along a trailing batch dim,
                     binary/ridge style) or "rows" (label vectors stack
                     along a leading batch dim, multi-class style).
-      make_eval:    ``(opts, donate) -> jit[(plan, batch) -> out]`` — a
-                    fresh, independently-cached jitted evaluator (the
-                    engine memoises one per (eval_key, static opts) and
-                    counts its compiles).
+      make_eval:    ``(opts, donate, fused) -> jit[(plan, batch) -> out]``
+                    — a fresh, independently-cached jitted evaluator (the
+                    engine memoises one per (eval_key, static opts,
+                    donate, fused) and counts its compiles). ``fused``
+                    asks for the Pallas fold-eval kernels instead of the
+                    XLA reference composite.
       encode:       ``(y, dtype, opts) -> (batch2d, squeeze)`` target
                     normalisation into the layout.
       test_targets: ``(y, plan, opts) -> y_te`` matching test targets.
@@ -338,18 +340,20 @@ def _score_ridge_multi(values, y_te, opts):
     return jnp.mean(1.0 - ss_res / jnp.maximum(ss_tot, jnp.finfo(t.dtype).tiny))
 
 
-def _make_eval_binary(opts, donate):
-    return fastcv.make_eval_binary(adjust_bias=opts["adjust_bias"], donate=donate)
+def _make_eval_binary(opts, donate, fused):
+    return fastcv.make_eval_binary(adjust_bias=opts["adjust_bias"],
+                                   donate=donate, fused=fused)
 
 
-def _make_eval_ridge(opts, donate):
-    return fastcv.make_eval_cv(donate=donate)
+def _make_eval_ridge(opts, donate, fused):
+    return fastcv.make_eval_cv(donate=donate, fused=fused)
 
 
-def _make_eval_multiclass(opts, donate):
+def _make_eval_multiclass(opts, donate, fused):
     from repro.core import multiclass
 
-    return multiclass.make_eval_multiclass(opts["num_classes"], donate=donate)
+    return multiclass.make_eval_multiclass(opts["num_classes"], donate=donate,
+                                           fused=fused)
 
 
 def _score_binary(values, y_te, opts):
@@ -1034,7 +1038,7 @@ def run_workloads(engine, workloads: Sequence, *, return_errors: bool = False) -
             t0 = time.perf_counter() if tracer.enabled else 0.0
             ys = [jnp.asarray(w.y) for _, w in members]
             run = batcher.run_columns if spec.layout == "columns" else batcher.run_rows
-            outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, **opts))
+            outs = run(ys, lambda b: engine.eval_estimator(plan, b, estimator, owned=True, **opts))
             if tracer.enabled:
                 dt = time.perf_counter() - t0
                 for i, _w in members:
@@ -1172,12 +1176,12 @@ def _rsa_empirical(engine, key, plan, contrast, diss, adj, c, members):
                 for _, w, _ in misses
             ]
             vals_list = batcher.run_columns(
-                cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj)
+                cols, lambda b: engine.eval_rsa_pairs(plan, b, diss, adj, owned=True)
             )
             built = [(rsa_rdm.rdm_from_pair_values(vals, c), vals) for vals in vals_list]
         else:
             ys = [jnp.asarray(w.y) for _, w, _ in misses]
-            preds = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, c))
+            preds = batcher.run_rows(ys, lambda b: engine.eval_multiclass(plan, b, c, owned=True))
             built = [
                 (rsa_rdm.rdm_from_confusion(pred, jnp.asarray(w.y)[plan.te_idx], c), None)
                 for pred, (_, w, _) in zip(preds, misses)

@@ -1,0 +1,185 @@
+"""Donation-safety regressions for the bucketed eval family.
+
+Donation lets XLA alias a label batch into the eval output, so a donated
+buffer is dead after the call. Three safety properties keep that invisible
+to clients:
+
+  * cache keying — jitted evals compiled with donation must never be
+    reused by a non-donating engine state (and vice versa): the eval
+    caches key on ``donate`` (and ``fused``), and :meth:`set_donate`
+    flips route, not recompile-in-place;
+  * defensive copies — a caller's array that lands exactly on a shape
+    bucket (no padding ⇒ no implicit copy) is copied before a donating
+    eval, so the caller's buffer stays alive;
+  * consumer discipline — the micro-batcher reads only eval *outputs*
+    after the call (the coalesced input may be donated away), pinned
+    here by an eval_fn that deletes its input buffer the way XLA
+    donation would.
+
+CPU note: the CPU backend declines donation (jit emits "donated buffers
+were not usable" warnings), so these tests simulate the aliasing with
+explicit ``jax.Array.delete()`` where liveness matters, and assert the
+cache/copy structure directly elsewhere — both are backend-independent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import folds as foldlib
+from repro.data import synthetic
+from repro.serve import CVEngine, EngineConfig
+from repro.serve.batching import MicroBatcher
+from repro.rsa import rdm as rsa_rdm
+
+N, P, K, LAM = 32, 64, 4, 1.0
+
+
+@pytest.fixture(scope="module")
+def problem():
+    x, yc = synthetic.make_classification(
+        jax.random.PRNGKey(0), N, P, num_classes=3, class_sep=2.0
+    )
+    y = jnp.where(yc % 2 == 0, -1.0, 1.0)
+    return x, y, yc, foldlib.kfold(N, K, seed=1)
+
+
+def _engine(problem, **cfg):
+    x, _, _, f = problem
+    eng = CVEngine(EngineConfig(**cfg))
+    handle = eng.register(x, f, LAM)
+    _, plan = eng.resolve(handle)
+    return eng, plan
+
+
+# ---------------------------------------------------------------------------
+# cache keying: donate (and fused) are part of every eval-cache key
+# ---------------------------------------------------------------------------
+
+
+def test_eval_cache_keys_on_donate_toggle(problem):
+    _, y, _, _ = problem
+    eng, plan = _engine(problem, donate=False)
+    a = np.asarray(eng.eval_estimator(plan, y, "binary"))
+    warm = eng.compile_count()
+    eng.set_donate(True)
+    b = np.asarray(eng.eval_estimator(plan, jnp.array(y), "binary"))
+    # new cache entry (no stale non-donating fn reused), same numbers
+    assert eng.compile_count() == warm + 1
+    np.testing.assert_array_equal(a, b)
+    # flipping back reuses the original entry — no recompile
+    eng.set_donate(False)
+    eng.eval_estimator(plan, y, "binary")
+    assert eng.compile_count() == warm + 1
+    keys = [k for k in eng._evals if k[0] == "binary"]
+    assert {k[2] for k in keys} == {False, True}
+
+
+def test_rsa_pairs_cache_keys_on_donate_toggle(problem):
+    """Regression: the pair-eval factory cache must key on donate — a
+    donating jit served to a non-donating caller invalidates its cols."""
+    _, _, yc, _ = problem
+    eng, plan = _engine(problem, donate=False)
+    cols = rsa_rdm.pair_contrast_columns(yc, 3, plan.h.dtype)
+    a = np.asarray(eng.eval_rsa_pairs(plan, cols, "accuracy", True))
+    n_fns = len(eng._rsa_pairs)
+    eng.set_donate(True)
+    b = np.asarray(eng.eval_rsa_pairs(plan, jnp.array(cols), "accuracy", True))
+    assert len(eng._rsa_pairs) == n_fns + 1
+    assert {k[2] for k in eng._rsa_pairs} == {False, True}
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# defensive copies: exact-bucket batches survive a donating engine
+# ---------------------------------------------------------------------------
+
+
+def test_caller_array_survives_exact_bucket_donating_eval(problem):
+    _, y, _, _ = problem
+    eng, plan = _engine(problem, donate=True)
+    bucket = eng.config.buckets[0]
+    yb = jnp.tile(y[:, None], (1, bucket))  # exact bucket: no pad copy
+    before = float(jnp.sum(yb))
+    eng.eval_estimator(plan, yb, "binary")
+    # donated exact-size batches are defensively copied: still readable
+    assert float(jnp.sum(yb)) == before
+
+
+def test_owned_batches_skip_the_defensive_copy(problem):
+    _, y, _, _ = problem
+    eng, plan = _engine(problem, donate=True)
+    bucket = eng.config.buckets[0]
+    yb = jnp.tile(y[:, None], (1, bucket))
+    padded, b = eng._pad_cols(yb, owned=True)
+    assert padded is yb and b == bucket     # owned + exact bucket: no copy
+    padded, _ = eng._pad_cols(yb)
+    assert padded is not yb                 # unowned: copied before donation
+
+
+def test_donating_and_plain_engines_agree_end_to_end(problem):
+    x, y, yc, f = problem
+    from repro.serve import Client, DatasetSpec, Workload
+    ws = lambda: [
+        Workload(kind="cv", dataset=DatasetSpec(x, f, LAM), y=y),
+        Workload(kind="cv", dataset=DatasetSpec(x, f, LAM), y=yc,
+                 estimator="multiclass", num_classes=3),
+        Workload(kind="permutation", dataset=DatasetSpec(x, f, LAM), y=y,
+                 n_perm=8, seed=3),
+    ]
+    plain = Client(CVEngine())
+    donating = Client(CVEngine(EngineConfig(donate=True)))
+    for got, want in zip([donating.submit(w) for w in ws()],
+                         [plain.submit(w) for w in ws()]):
+        for field in ("values", "observed", "null", "p"):
+            a, b = getattr(got, field, None), getattr(want, field, None)
+            assert (a is None) == (b is None)
+            if a is not None:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher: never reads a coalesced input after the eval ran
+# ---------------------------------------------------------------------------
+
+
+def _deleting(eval_fn):
+    """Wrap an eval to destroy its input buffer like XLA donation would."""
+    def run(batch):
+        out = eval_fn(batch)
+        jax.block_until_ready(out)
+        batch.delete()
+        return out
+    return run
+
+
+def test_microbatcher_columns_survive_input_donation():
+    batcher = MicroBatcher(buckets=(8, 32))
+    ys = [jnp.arange(6, dtype=jnp.float64).reshape(3, 2) + i for i in range(3)]
+    outs = batcher.run_columns(ys, _deleting(lambda b: b * 2.0))
+    for y, out in zip(ys, outs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(y) * 2.0)
+
+
+def test_microbatcher_rows_survive_input_donation():
+    batcher = MicroBatcher(buckets=(8, 32))
+    ys = [jnp.arange(10, dtype=jnp.float64).reshape(2, 5) + i for i in range(2)]
+    outs = batcher.run_rows(ys, _deleting(lambda b: b + 1.0))
+    for y, out in zip(ys, outs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(y) + 1.0)
+
+
+def test_engine_eval_survives_input_donation(problem):
+    """End to end: delete the engine-owned batch after eval (as TPU
+    donation would) — results must already be safely materialised."""
+    _, y, _, _ = problem
+    eng, plan = _engine(problem, donate=True)
+    batch = jnp.tile(jnp.array(y)[:, None], (1, 3))
+    out = eng.eval_estimator(plan, batch, "binary", owned=True)
+    jax.block_until_ready(out)
+    batch.delete()
+    ref_eng, ref_plan = _engine(problem, donate=False)
+    want = ref_eng.eval_estimator(ref_plan, jnp.tile(y[:, None], (1, 3)),
+                                  "binary")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))

@@ -14,8 +14,10 @@ from repro.kernels.gram.ops import gram, centered_gram
 from repro.kernels.gram.ref import gram_ref, centered_gram_ref
 from repro.kernels.hat_apply.ops import hat_errors
 from repro.kernels.hat_apply.ref import hat_apply_ref
-from repro.kernels.foldsolve.ops import foldsolve
+from repro.kernels.foldsolve.ops import foldsolve, fold_jitter
 from repro.kernels.foldsolve.ref import foldsolve_ref
+from repro.kernels.fold_eval.ops import fold_eval
+from repro.kernels.fold_eval.ref import fold_eval_np, fold_eval_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.pairdist.ops import pairwise_sq_dists
@@ -208,3 +210,143 @@ def test_flash_bf16_io():
     np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
                                np.asarray(want, dtype=np.float32),
                                rtol=5e-2, atol=5e-2)
+
+
+# ----------------------------------------------------------- fold_eval ----
+
+def _fold_eval_problem(k, m, n, b, dtype, seed=0):
+    """Realistic fused-eval inputs: PSD small-norm hat, random fold gathers."""
+    k1, k2, k3 = jax.random.split(_key(seed + k * m + n + b), 3)
+    a = jax.random.normal(k1, (n, n), dtype) / (3.0 * n**0.5)
+    h = a @ a.T                                   # PSD, spectrum in (0, 1)
+    te = jax.random.permutation(k2, n)[: k * m].reshape(k, m)
+    h_rows = h[te]
+    h_te = h[te[:, :, None], te[:, None, :]]
+    y = jax.random.normal(k3, (n, b), dtype)
+    return h_rows, h_te, y, y[te]
+
+
+@pytest.mark.parametrize("k,m,n,b", [(4, 8, 40, 5), (3, 7, 33, 17),
+                                     (5, 16, 80, 1), (2, 12, 50, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_fold_eval_sweep(k, m, n, b, dtype):
+    """Fused kernel vs jnp oracle and host-LAPACK ground truth.
+
+    Shapes include ragged fold coverage (K·m < N) and B both smaller and
+    larger than the batch block.
+    """
+    h_rows, h_te, y, y_te = _fold_eval_problem(k, m, n, b, dtype)
+    got = fold_eval(h_rows, h_te, y, y_te, interpret=True)
+    t_ref, _ = fold_eval_ref(h_rows, h_te, y, y_te)
+    t_np, _ = fold_eval_np(h_rows, h_te, y, y_te)
+    scale = 1.0 + float(np.max(np.abs(t_np)))
+    tol = 1e-5 if dtype == jnp.float32 else 1e-10
+    assert float(np.max(np.abs(np.asarray(got) - t_np))) / scale < tol
+    np.testing.assert_allclose(np.asarray(got), np.asarray(t_ref),
+                               rtol=5e-4 if dtype == jnp.float32 else 1e-9,
+                               atol=tol * scale)
+
+
+def test_fold_eval_block_shapes():
+    """Grid tiling is numerically invisible, dividing blocks or not."""
+    h_rows, h_te, y, y_te = _fold_eval_problem(3, 8, 48, 20, jnp.float64)
+    t_np, _ = fold_eval_np(h_rows, h_te, y, y_te)
+    for bn, bb in [(16, 8), (48, 32), (32, 16), (64, 128)]:
+        got = fold_eval(h_rows, h_te, y, y_te, block_n=bn, block_b=bb,
+                        interpret=True)
+        np.testing.assert_allclose(np.asarray(got), t_np, rtol=1e-9,
+                                   atol=1e-9)
+
+
+def _near_singular_h_te(k, m, dtype, seed=7):
+    """H_Te blocks making I − H_Te singular to machine precision."""
+    q, _ = jnp.linalg.qr(jax.random.normal(_key(seed), (m, m), dtype))
+    d = jnp.concatenate([jnp.ones((m - 1,), dtype), jnp.array([1e-14], dtype)])
+    a = (q * d[None, :]) @ q.T                    # I − H_Te = Q diag(d) Qᵀ
+    h_te = jnp.eye(m, dtype=dtype)[None] - a[None]
+    return jnp.tile(h_te, (k, 1, 1))
+
+
+def test_foldsolve_jitter_near_singular():
+    """The docstring's λ→0 lifeline: the residual-checked retry keeps
+    near-singular folds finite and matches the shifted LAPACK solve."""
+    k, m, b = 3, 12, 4
+    h_te = _near_singular_h_te(k, m, jnp.float64)
+    e = jax.random.normal(_key(8), (k, m, b), jnp.float64)
+    raw = foldsolve(h_te, e, interpret=True, jitter=None)
+    got = foldsolve(h_te, e, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    # the retry solves A + εI exactly: compare against LAPACK on the
+    # shifted system (relative tolerance — solutions are O(1/ε)-large)
+    eps = np.asarray(fold_jitter(h_te))
+    eye = np.eye(m)
+    want = np.stack([
+        np.linalg.solve(eye - np.asarray(h_te[i]) + eps[i] * eye,
+                        np.asarray(e[i])) for i in range(k)
+    ])
+    rel = np.max(np.abs(np.asarray(got) - want)) / np.max(np.abs(want))
+    assert rel < 1e-8
+    # and the raw path really was pathological (else the test is vacuous)
+    assert (not bool(jnp.all(jnp.isfinite(raw)))
+            or float(jnp.max(jnp.abs(raw))) > 1e6 * np.max(np.abs(want)))
+
+
+def test_foldsolve_jitter_noop_when_well_conditioned():
+    """jitter="auto" must be bit-identical to jitter=None off the edge."""
+    k1, k2 = jax.random.split(_key(13))
+    a = jax.random.normal(k1, (4, 10, 10), jnp.float64) / 10.0
+    h_te = jnp.einsum("kij,klj->kil", a, a)
+    e = jax.random.normal(k2, (4, 10, 6), jnp.float64)
+    np.testing.assert_array_equal(
+        np.asarray(foldsolve(h_te, e, interpret=True)),
+        np.asarray(foldsolve(h_te, e, interpret=True, jitter=None)))
+
+
+def test_fold_eval_jitter_near_singular():
+    """The fused wrapper ports the same retry: finite output matching the
+    shifted solve, with ê_Te reused from the fused launch."""
+    k, m, n, b = 2, 8, 32, 5
+    h_rows, _, y, y_te = _fold_eval_problem(k, m, n, b, jnp.float64)
+    h_te = _near_singular_h_te(k, m, jnp.float64)
+    got = fold_eval(h_rows, h_te, y, y_te, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    e = np.asarray(y_te) - np.einsum("kmn,nb->kmb", np.asarray(h_rows),
+                                     np.asarray(y))
+    eps = np.asarray(fold_jitter(h_te))
+    eye = np.eye(m)
+    want = np.stack([
+        np.linalg.solve(eye - np.asarray(h_te[i]) + eps[i] * eye, e[i])
+        for i in range(k)
+    ])
+    rel = np.max(np.abs(np.asarray(got) - want)) / np.max(np.abs(want))
+    assert rel < 1e-8
+
+
+# ------------------------------------------------------- bf16_gram mode ----
+
+def test_gram_bf16_precision_bound():
+    """bf16_gram stays inside the documented ~2·2⁻⁸‖X_c‖² bound and the
+    Pallas kernel matches the XLA fallback's numerics."""
+    from repro.kernels.gram.ops import centered_gram_xla
+    x = jax.random.normal(_key(21), (96, 300), jnp.float32)
+    exact = np.asarray(centered_gram_ref(x))
+    scale = float(np.max(np.abs(exact)))
+    bound = 4.0 * 2.0**-8 * scale                 # 2× headroom on the bound
+    for got in (gram(x, center=True, precision="bf16_gram", interpret=True),
+                centered_gram_xla(x, precision="bf16_gram")):
+        got = np.asarray(got)
+        assert got.dtype == exact.dtype
+        assert float(np.max(np.abs(got - exact))) < bound
+    pallas = np.asarray(gram(x, center=True, precision="bf16_gram",
+                             interpret=True))
+    xla = np.asarray(centered_gram_xla(x, precision="bf16_gram"))
+    np.testing.assert_allclose(pallas, xla, rtol=1e-6, atol=1e-6 * scale)
+
+
+def test_gram_fp32_precision_is_default():
+    x = jax.random.normal(_key(22), (32, 64), jnp.float64)
+    np.testing.assert_array_equal(
+        np.asarray(gram(x, center=True, interpret=True)),
+        np.asarray(gram(x, center=True, precision="fp32", interpret=True)))
+    with pytest.raises(ValueError, match="precision"):
+        gram(x, precision="fp8")

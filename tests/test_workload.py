@@ -236,7 +236,7 @@ def test_third_party_estimator_registration(problem):
     register_estimator(LeastSquaresSpec(
         name=name,
         layout="columns",
-        make_eval=lambda opts, donate: fastcv.make_eval_cv(donate=donate),
+        make_eval=lambda opts, donate, fused: fastcv.make_eval_cv(donate=donate, fused=fused),
         encode=encode,
         score=lambda values, y_te, opts: jnp.mean((values - y_te) ** 2),
         eval_key="ridge",
@@ -246,7 +246,7 @@ def test_third_party_estimator_registration(problem):
         with pytest.raises(ValueError, match="already registered"):
             register_estimator(LeastSquaresSpec(
                 name=name, layout="columns",
-                make_eval=lambda opts, donate: fastcv.make_eval_cv(donate=donate),
+                make_eval=lambda opts, donate, fused: fastcv.make_eval_cv(donate=donate, fused=fused),
             ))
         engine = CVEngine()
         client = Client(engine)
